@@ -1,0 +1,87 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference paths for the
+paper's two hot-spots, plus private-embed lookup throughput.
+
+On CPU the interpret-mode Pallas numbers are NOT hardware-representative
+(the TPU projection lives in EXPERIMENTS.md §Roofline); what this bench
+establishes is (a) exact agreement, (b) the jnp oracle's scaling, which the
+roofline model consumes.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+P = 2**31 - 1
+
+
+def _rand(shape):
+    return jnp.asarray(RNG.integers(0, P, size=shape, dtype=np.uint32))
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.time() - t0) / reps * 1e6
+
+
+def bench_ss_matmul() -> List[tuple]:
+    out = []
+    for m, k, n in ((128, 128, 128), (256, 512, 256)):
+        a, b = _rand((m, k)), _rand((k, n))
+        ref_out, us_ref = _time(lambda a, b: field.matmul(a, b), a, b)
+        macs = m * k * n
+        out.append(("ss_matmul_jnp", f"{m}x{k}x{n}", us_ref,
+                    macs, 0, 0, 0, f"{macs/us_ref:.0f} modMAC/us"))
+    a, b = _rand((128, 128)), _rand((128, 128))
+    got, us_p = _time(ops.ss_matmul, a, b)
+    want = ref.ss_matmul(a, b)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+    out.append(("ss_matmul_pallas_interp", "128x128x128", us_p,
+                128**3, 0, 0, 0, "exact vs oracle"))
+    return out
+
+
+def bench_aa_match() -> List[tuple]:
+    out = []
+    for n in (256, 1024):
+        col, pat = _rand((n, 8, 64)), _rand((8, 64))
+        got, us = _time(ops.aa_match, col, pat)
+        want = ref.aa_match(col, pat)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        out.append(("aa_match_pallas_interp", n, us, n * 8 * 64, 0, 0, 0,
+                    "exact vs oracle"))
+        _, us_j = _time(lambda c, p: ref.aa_match(c, p), col, pat)
+        out.append(("aa_match_jnp", n, us_j, n * 8 * 64, 0, 0, 0, ""))
+    return out
+
+
+def bench_private_embed() -> List[tuple]:
+    from repro.models.private_embed import (setup_private_embed,
+                                            private_lookup)
+    out = []
+    for v, d in ((512, 64), (2048, 128)):
+        emb = jnp.asarray(RNG.normal(size=(v, d)), jnp.float32) * 0.02
+        sh = setup_private_embed(jax.random.PRNGKey(0), emb, n_shares=4)
+        toks = jnp.asarray(RNG.integers(0, v, size=(16,)), jnp.int32)
+        got, us = _time(lambda t: private_lookup(jax.random.PRNGKey(1), sh,
+                                                 t), toks)
+        err = np.abs(np.asarray(got) - np.asarray(emb)[np.asarray(toks)])
+        assert err.max() < 1.0 / 4096 + 1e-6
+        out.append(("private_embed_lookup", f"V={v},d={d}", us, 16 * v * d,
+                    0, 0, 0, "max err < 2^-12 (quantization only)"))
+    return out
+
+
+ALL = [bench_ss_matmul, bench_aa_match, bench_private_embed]

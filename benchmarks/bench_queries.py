@@ -1,0 +1,173 @@
+"""Benchmarks reproducing Table 1: measured communication bits, rounds, and
+cloud/user computational cost for every query class, at several relation
+sizes, printed next to the paper's asymptotic claim.
+
+Each function returns rows of
+  (name, n, us_per_call, comm_bits, rounds, cloud_bits, user_bits, claim)
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core import outsource, Codec
+from repro.core.queries import (count_query, select_one_tuple,
+                                select_one_round, select_tree, pkfk_join,
+                                equijoin, range_count)
+from repro.data import synthetic_relation
+
+CODEC = Codec(word_length=8)
+W = 31  # field word bits
+
+
+def _db(n, *, seed=0, skew=0.0, n_shares=20, numeric=False):
+    rows = synthetic_relation(n, seed=seed, skew=skew)
+    return rows, outsource(jax.random.PRNGKey(seed), rows, codec=CODEC,
+                           n_shares=n_shares, degree=1,
+                           numeric_columns={3: 14} if numeric else None)
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def bench_count() -> List[tuple]:
+    """Table 1 row: 'Our solution §3.1' — O(1) comm, nw cloud, 1 round."""
+    rows_out = []
+    for n in (32, 128, 512):
+        rows, db = _db(n, skew=0.3)
+        (got, led), us = _timed(count_query, jax.random.PRNGKey(1), db, 1,
+                                "John")
+        want = sum(1 for r in rows if r[1] == "John")
+        assert got == want, (got, want)
+        rows_out.append(("count_3.1", n, us, led.communication_bits,
+                         led.rounds, led.cloud_ops_bits, led.user_ops_bits,
+                         "comm O(1), cloud nw, 1 round"))
+    return rows_out
+
+
+def bench_select_single() -> List[tuple]:
+    """Row 'Our §3.2.1': comm O(mw), cloud O(nmw), user O(mw), 1 round."""
+    out = []
+    for n in (32, 128, 512):
+        rows = synthetic_relation(n - 1, seed=3)
+        rows.append([f"E{99 + n}", "Zed", "Quine", "777", "HR"])
+        db = outsource(jax.random.PRNGKey(3), rows, codec=CODEC,
+                       n_shares=20, degree=1)
+        unique = "Zed"   # guaranteed single occurrence
+        (res, us) = _timed(select_one_tuple, jax.random.PRNGKey(2), db, 1,
+                           unique)
+        (got, led) = res
+        assert got[0][1] == unique
+        out.append(("select_one_3.2.1", n, us, led.communication_bits,
+                    led.rounds, led.cloud_ops_bits, led.user_ops_bits,
+                    "comm O(mw), cloud O(nmw), user O(mw)"))
+    return out
+
+
+def bench_select_one_round() -> List[tuple]:
+    """Row 'Our §3.2.2 fetching tuples': comm O((n+m)ℓw), cloud O(ℓnmw)."""
+    out = []
+    for n in (32, 128, 256):
+        rows, db = _db(n, seed=4, skew=0.2)
+        (res, us) = _timed(select_one_round, jax.random.PRNGKey(3), db, 1,
+                           "John")
+        got, addrs, led = res
+        assert addrs == [i for i, r in enumerate(rows) if r[1] == "John"]
+        out.append(("select_oneround_3.2.2", n, us, led.communication_bits,
+                    led.rounds, led.cloud_ops_bits, led.user_ops_bits,
+                    "comm O((n+m)lw), cloud O(lnmw), 1+1 rounds"))
+    return out
+
+
+def bench_select_tree() -> List[tuple]:
+    """Row 'Our §3.2.2 knowing addresses': rounds ≤ log_ℓ n + log₂ ℓ + 1."""
+    import math
+    out = []
+    for n in (64, 256):
+        rows, db = _db(n, seed=5, skew=0.15)
+        (res, us) = _timed(select_tree, jax.random.PRNGKey(4), db, 1, "John")
+        got, addrs, led = res
+        ell = max(len(addrs), 2)
+        bound = (math.floor(math.log(n, ell)) + math.floor(math.log2(ell))
+                 + 1 + 2)
+        assert led.rounds <= bound, (led.rounds, bound)
+        out.append(("select_tree_3.2.2", n, us, led.communication_bits,
+                    led.rounds, led.cloud_ops_bits, led.user_ops_bits,
+                    f"rounds<= {bound} (log_l n + log2 l + 1 [+2])"))
+    return out
+
+
+def bench_join() -> List[tuple]:
+    """Rows '§3.3': PK/FK join O(nmw) comm / O(n²mw) cloud; equijoin Thm 6."""
+    out = []
+    codec = Codec(word_length=6)
+    for n in (8, 16, 32):
+        X = [[f"a{i}", f"b{i}"] for i in range(n)]
+        Y = [[f"b{i % (n // 2)}", f"c{i}"] for i in range(n)]
+        dbX = outsource(jax.random.PRNGKey(5), X, codec=codec, n_shares=16)
+        dbY = outsource(jax.random.PRNGKey(6), Y, codec=codec, n_shares=16)
+        (res, us) = _timed(pkfk_join, dbX, dbY, 1, 0)
+        got, led = res
+        assert len(got) == n  # every child joins exactly one parent
+        out.append(("pkfk_join_3.3.1", n, us, led.communication_bits,
+                    led.rounds, led.cloud_ops_bits, led.user_ops_bits,
+                    "comm O(nmw), cloud O(n^2 mw), user O(nmw)"))
+    X = [["a1", "b1"], ["a2", "b2"], ["a3", "b2"], ["a4", "b9"]]
+    Y = [["b2", "c1"], ["b2", "c2"], ["b1", "c3"], ["b7", "c4"]]
+    dbX = outsource(jax.random.PRNGKey(7), X, codec=codec, n_shares=16)
+    dbY = outsource(jax.random.PRNGKey(8), Y, codec=codec, n_shares=16)
+    (res, us) = _timed(equijoin, jax.random.PRNGKey(9), dbX, dbY, 1, 0)
+    got, led = res
+    # b1 joins 1×1, b2 joins 2×2 -> 5 output tuples
+    assert len(got) == 5
+    out.append(("equijoin_3.3.2", 4, us, led.communication_bits, led.rounds,
+                led.cloud_ops_bits, led.user_ops_bits,
+                "rounds O(2k), comm O(2nwk + 2k l^2 mw)"))
+    return out
+
+
+def bench_range() -> List[tuple]:
+    """Row '§3.4': same order as count (Thm 7)."""
+    out = []
+    for n in (16, 64):
+        rows, db = _db(n, seed=10, n_shares=34, numeric=True)
+        lo, hi = 1000, 4000
+        (res, us) = _timed(range_count, jax.random.PRNGKey(11), db, 3, lo,
+                           hi)
+        got, led = res
+        want = sum(1 for r in rows if lo <= int(r[3]) <= hi)
+        assert got == want, (got, want)
+        out.append(("range_count_3.4", n, us, led.communication_bits,
+                    led.rounds, led.cloud_ops_bits, led.user_ops_bits,
+                    "same order as count (Thm 7)"))
+    return out
+
+
+def bench_scaling_verification() -> List[tuple]:
+    """Empirical check of Table 1 *scaling*: count comm must be flat in n;
+    cloud work linear in n."""
+    out = []
+    led_prev = None
+    for n in (64, 256, 1024):
+        rows, db = _db(n, seed=12)
+        _, led = count_query(jax.random.PRNGKey(13), db, 1, "Eve")
+        if led_prev is not None:
+            assert led.communication_bits == led_prev.communication_bits
+            ratio = led.cloud_ops_bits / led_prev.cloud_ops_bits
+            assert 3.5 < ratio < 4.5  # n grew 4x
+        led_prev = led
+        out.append(("count_scaling", n, 0.0, led.communication_bits,
+                    led.rounds, led.cloud_ops_bits, led.user_ops_bits,
+                    "comm flat in n; cloud linear in n"))
+    return out
+
+
+ALL = [bench_count, bench_select_single, bench_select_one_round,
+       bench_select_tree, bench_join, bench_range,
+       bench_scaling_verification]

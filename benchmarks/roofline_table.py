@@ -1,0 +1,51 @@
+"""Render the §Roofline markdown table from dryrun_results.json and splice
+it into EXPERIMENTS.md (idempotent — replaces everything after the
+ROOFLINE_TABLE marker)."""
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+MARKER = "<!-- ROOFLINE_TABLE -->"
+
+
+def render(results: dict) -> str:
+    lines = [
+        "| arch | shape | mesh | bottleneck | t_compute | t_memory | "
+        "t_collective | useful | mem/dev GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for k, v in sorted(results.items()):
+        mesh = "256" if "256" in v["mesh"] else "512"
+        if v["status"] != "ok":
+            if "skipped" in v["status"]:
+                lines.append(
+                    f"| {v['arch']} | {v['shape']} | {mesh} | *skip:"
+                    f" full-quadratic attn @500k* | – | – | – | – | – |")
+            continue
+        ur = v.get("useful_ratio")
+        mem = v.get("peak_memory_per_device")
+        lines.append(
+            f"| {v['arch']} | {v['shape']} | {mesh} | {v['bottleneck']} | "
+            f"{v['t_compute']:.2e} | {v['t_memory']:.2e} | "
+            f"{v['t_collective']:.2e} | "
+            f"{('%.3f' % ur) if ur is not None else '–'} | "
+            f"{(mem or 0)/2**30:.2f} |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    with open(os.path.join(ROOT, "dryrun_results.json")) as f:
+        results = json.load(f)
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    with open(path) as f:
+        doc = f.read()
+    head = doc.split(MARKER)[0]
+    with open(path, "w") as f:
+        f.write(head + MARKER + "\n\n" + render(results))
+    ok = sum(1 for v in results.values() if v["status"] == "ok")
+    print(f"table rendered: {ok} ok cells / {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

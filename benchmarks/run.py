@@ -1,0 +1,56 @@
+"""Benchmark harness — one section per paper table/claim.
+
+Prints ``name,size,us_per_call,comm_bits,rounds,cloud_bits,user_bits,claim``
+CSV rows. Table 1 rows (count/selection/join/range) are measured on the real
+implementation via the cost ledger; kernel benches validate the Pallas
+hot-spots; the roofline section summarizes dryrun_results.json if present.
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def main() -> None:
+    from benchmarks import bench_queries, bench_kernels
+
+    print("name,size,us_per_call,comm_bits,rounds,cloud_bits,user_bits,"
+          "paper_claim")
+    failures = 0
+    for fn in bench_queries.ALL + bench_kernels.ALL:
+        try:
+            for row in fn():
+                name, size, us, comm, rounds, cloud, user, claim = row
+                print(f"{name},{size},{us:.0f},{comm},{rounds},{cloud},"
+                      f"{user},\"{claim}\"")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fn.__name__},ERROR,,,,,,\"{e}\"", file=sys.stderr)
+
+    # roofline summary (from the dry-run artifact, if present)
+    res_path = os.path.join(os.path.dirname(__file__), "..",
+                            "dryrun_results.json")
+    if os.path.exists(res_path):
+        with open(res_path) as f:
+            results = json.load(f)
+        ok = [v for v in results.values() if v.get("status") == "ok"]
+        print(f"# dryrun: {len(ok)} cells ok / {len(results)} total",
+              file=sys.stderr)
+        print("roofline_cell,mesh,bottleneck,t_compute_s,t_memory_s,"
+              "t_collective_s,useful_flops_ratio")
+        for v in sorted(ok, key=lambda v: (v["arch"], v["shape"],
+                                           v["mesh"])):
+            ur = v.get("useful_ratio")
+            print(f"{v['arch']}|{v['shape']},{v['mesh']},{v['bottleneck']},"
+                  f"{v['t_compute']:.3e},{v['t_memory']:.3e},"
+                  f"{v['t_collective']:.3e},"
+                  f"{ur if ur is None else round(ur, 4)}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

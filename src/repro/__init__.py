@@ -1,0 +1,16 @@
+"""repro: privacy-preserving secret-shared computations using MapReduce, in JAX.
+
+Implements Dolev, Li, Sharma, "Privacy-Preserving Secret Shared Computations
+using MapReduce" (2018) as a production-grade JAX framework: Shamir
+secret-sharing over F_p (Mersenne-31), accumulating-automata string matching,
+oblivious count/selection/join/range queries, a fault-tolerant MapReduce
+runtime, and a 10-architecture LM zoo with multi-pod pjit sharding.
+"""
+import jax
+
+# Field arithmetic (core/field.py) multiplies uint32 values in uint64 lanes;
+# x64 must be on before any jax computation. Model code is dtype-explicit
+# (bf16/f32/int32) everywhere, so this does not change LM numerics.
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

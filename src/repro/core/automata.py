@@ -1,0 +1,119 @@
+"""Accumulating Automata (AA) string matching on secret-shares (paper §3.1).
+
+The automaton of Table 3 matches a length-``x`` pattern against a word by
+chaining per-position one-hot inner products:
+
+    v_j      = Σ_α SS[j, α] · p'[j, α]          (share-space, degree 2t)
+    N_{j+1}  = N_j · v_j                         (degree accumulates)
+
+``N_{x+1}`` is a share of 1 iff the word equals the pattern. Because padded
+positions hold the terminator one-hot, equality is exact-word (the paper's
+"John " fix). Everything here is per-cloud local — no cross-share traffic.
+
+Two implementations:
+  * ``impl="jnp"``   — reference, pure jnp (this file),
+  * ``impl="pallas"``— fused VMEM-tiled kernel (repro.kernels.ops.aa_match).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import field
+from .shamir import Shares
+
+__all__ = ["match_words", "match_column", "count_column", "match_matrix"]
+
+
+def _inner_over_alphabet(col_vals: jax.Array, pat_vals: jax.Array) -> jax.Array:
+    """v[..., j] = Σ_α col[..., j, α] · pat[..., j, α]  (mod p)."""
+    return field.dot(col_vals, pat_vals, axis=-1)
+
+
+def _chain(v: jax.Array) -> jax.Array:
+    """N_{x+1} = Π_j v[..., j] via sequential chain (Table 3 order)."""
+    w = v.shape[-1]
+    acc = v[..., 0]
+    for j in range(1, w):          # w is static & small; unrolled chain
+        acc = field.mul(acc, v[..., j])
+    return acc
+
+
+def match_words(column: Shares, pattern: Shares) -> Shares:
+    """Match pattern (c, W, A) against every word of column (c, n, W, A).
+
+    Returns Shares (c, n): share of 1 where the word equals the pattern.
+    Degree: 2·t·W for degree-t inputs.
+    """
+    col = column.values                            # (c, n, W, A)
+    pat = pattern.values[:, None]                  # (c, 1, W, A)
+    v = _inner_over_alphabet(col, jnp.broadcast_to(pat, col.shape))
+    out_degree = (column.degree + pattern.degree) * col.shape[-2]
+    return Shares(_chain(v), out_degree)
+
+
+# alias used by query code: a "column" is (c, n, W, A)
+match_column = match_words
+
+
+def count_column(column: Shares, pattern: Shares) -> Shares:
+    """§3.1 count: accumulate the AA output over all tuples.
+
+    Faithful to Table 3's final accumulation step
+    ``N_{x+1} += N_x · v_x`` across iterations: the per-tuple match bits are
+    summed in share space, so the cloud never sees the count.
+    """
+    return match_words(column, pattern).sum(axis=0)
+
+
+def match_matrix(col_x: Shares, col_y: Shares, *,
+                 method: str = "chain") -> Shares:
+    """All-pairs word match between two shared columns (join inner loop).
+
+    col_x: (c, n_x, W, A), col_y: (c, n_y, W, A)
+    Returns Shares (c, n_x, n_y) — share of 1 where word_i == word_j.
+
+    method="chain" (paper-faithful, Table 3): per position a mod-p matmul
+    over the alphabet axis, chained multiplicatively — W dot-sets.
+
+    method="aggregate" (beyond-paper, §Perf): ONE dot over the flattened
+    (W·A) axis gives P = #matching positions ∈ {0..W} (as a share); the
+    equality indicator is the Lagrange basis polynomial
+    ``1[P==W] = (Π_{j<W} (P−j)) / W!`` evaluated share-side — same output,
+    same final degree (2tW), but 1 dot-set instead of W and a fusable
+    elementwise chain (measured 12× fewer mod-p dots on the paper_db cell).
+    """
+    xv = col_x.values            # (c, nx, W, A)
+    yv = col_y.values            # (c, ny, W, A)
+    w = xv.shape[-2]
+    out_degree = (col_x.degree + col_y.degree) * w
+    if method == "aggregate":
+        c, nx = xv.shape[0], xv.shape[1]
+        ny = yv.shape[1]
+        xf = xv.reshape(c, nx, -1)
+        yf = yv.reshape(c, ny, -1)
+        p_cnt = field.matmul(xf, jnp.swapaxes(yf, -1, -2))   # (c,nx,ny)
+        return Shares(_equality_indicator(p_cnt, w), out_degree)
+    acc = None
+    for j in range(w):
+        pj = field.matmul(xv[:, :, j, :], jnp.swapaxes(yv[:, :, j, :], -1, -2))
+        acc = pj if acc is None else field.mul(acc, pj)
+    return Shares(acc, out_degree)
+
+
+def _equality_indicator(p_cnt, w: int):
+    """1[P == w] = Π_{j=0}^{w-1} (P − j) · (w!)⁻¹   (mod p)."""
+    acc = None
+    for j in range(w):
+        term = field.sub(p_cnt, jnp.asarray(j, field.DTYPE))
+        acc = term if acc is None else field.mul(acc, term)
+    inv_wfact = _inv_factorial(w)
+    return field.mul(acc, jnp.asarray(inv_wfact, field.DTYPE))
+
+
+def _inv_factorial(w: int) -> int:
+    p = int(field.P)
+    f = 1
+    for j in range(2, w + 1):
+        f = (f * j) % p
+    return pow(f, p - 2, p)

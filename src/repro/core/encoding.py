@@ -1,0 +1,122 @@
+"""Unary (one-hot) and binary encodings of relation values (paper §2.1, §3.4).
+
+Strings are encoded character-by-character as one-hot ("unary") vectors over a
+fixed alphabet, padded to a fixed word length with a terminator symbol — the
+paper's fix for the John/Johnson prefix problem (§3.1.2 Aside). Two encoded
+letters match iff the inner product of their one-hot vectors is 1, which is a
+share-space bilinear op.
+
+Numbers used in range queries are encoded as two's-complement *bit vectors*
+(LSB first) so SS-SUB (Algorithm 6) can ripple through them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import field, shamir
+from .field import DTYPE
+from .shamir import Shares
+
+# Default alphabet: terminator + space + a-z + A-Z + 0-9 + a few symbols.
+# Index 0 is the terminator/pad so padded positions still match each other.
+TERMINATOR = "\0"
+DEFAULT_ALPHABET = TERMINATOR + " abcdefghijklmnopqrstuvwxyz" \
+    + "ABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789.-_/@"
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Fixed (alphabet, word_length) unary codec."""
+    alphabet: str = DEFAULT_ALPHABET
+    word_length: int = 12
+
+    @property
+    def alphabet_size(self) -> int:
+        return len(self.alphabet)
+
+    def char_index(self, ch: str) -> int:
+        i = self.alphabet.find(ch)
+        if i < 0:
+            raise ValueError(f"character {ch!r} not in alphabet")
+        return i
+
+    # -- host-side (numpy) encode: runs at the trusted DB owner / user ------
+    def encode_word(self, word: str) -> np.ndarray:
+        """-> uint32[word_length, alphabet_size] one-hot rows."""
+        if len(word) > self.word_length:
+            raise ValueError(f"word {word!r} longer than {self.word_length}")
+        out = np.zeros((self.word_length, self.alphabet_size), dtype=np.uint32)
+        padded = word + TERMINATOR * (self.word_length - len(word))
+        for j, ch in enumerate(padded):
+            out[j, self.char_index(ch)] = 1
+        return out
+
+    def encode_column(self, words: Sequence[str]) -> np.ndarray:
+        """-> uint32[n, word_length, alphabet_size]."""
+        return np.stack([self.encode_word(w) for w in words])
+
+    def encode_relation(self, rows: Sequence[Sequence[str]]) -> np.ndarray:
+        """-> uint32[n, m, word_length, alphabet_size]."""
+        return np.stack([np.stack([self.encode_word(v) for v in row])
+                         for row in rows])
+
+    def decode_word(self, onehot: np.ndarray) -> str:
+        """Inverse of encode_word; tolerant of all-zero (eliminated) rows."""
+        chars = []
+        for j in range(onehot.shape[0]):
+            nz = np.nonzero(onehot[j])[0]
+            if len(nz) == 0:
+                return ""          # an obliviously-eliminated tuple
+            ch = self.alphabet[int(nz[0])]
+            if ch == TERMINATOR:
+                break
+            chars.append(ch)
+        return "".join(chars)
+
+    def decode_row(self, onehot: np.ndarray) -> list:
+        return [self.decode_word(onehot[k]) for k in range(onehot.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# Secret-shared encodings
+# ---------------------------------------------------------------------------
+
+def share_encoded(key: jax.Array, encoded: np.ndarray, *, n_shares: int,
+                  degree: int = 1) -> Shares:
+    """Secret-share an encoded (one-hot / bit) tensor, fresh poly per bit."""
+    return shamir.share(key, jnp.asarray(encoded, DTYPE),
+                        n_shares=n_shares, degree=degree)
+
+
+def share_pattern(key: jax.Array, codec: Codec, pattern: str, *,
+                  n_shares: int, degree: int = 1) -> Shares:
+    """User-side: encode + secret-share a query predicate (count/select)."""
+    return share_encoded(key, codec.encode_word(pattern),
+                         n_shares=n_shares, degree=degree)
+
+
+# ---------------------------------------------------------------------------
+# Binary (two's-complement) encoding for range queries (§3.4)
+# ---------------------------------------------------------------------------
+
+def encode_number_bits(x: int, n_bits: int) -> np.ndarray:
+    """Two's-complement bits, LSB first -> uint32[n_bits]."""
+    if not (-(1 << (n_bits - 1)) <= x < (1 << (n_bits - 1))):
+        raise ValueError(f"{x} out of range for {n_bits}-bit two's complement")
+    ux = x & ((1 << n_bits) - 1)
+    return np.asarray([(ux >> i) & 1 for i in range(n_bits)], dtype=np.uint32)
+
+
+def encode_number_column(xs: Sequence[int], n_bits: int) -> np.ndarray:
+    return np.stack([encode_number_bits(int(x), n_bits) for x in xs])
+
+
+def decode_number_bits(bits: np.ndarray) -> int:
+    n = len(bits)
+    ux = sum(int(b) << i for i, b in enumerate(bits))
+    return ux - (1 << n) if ux >= (1 << (n - 1)) else ux

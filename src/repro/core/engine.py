@@ -1,0 +1,103 @@
+"""SecretSharedDB — the outsourced database (paper §2.1–§2.2).
+
+The *trusted DB owner* encodes a relation (strings -> unary one-hots, numeric
+range columns -> two's-complement bits), secret-shares every bit with an
+independent polynomial, and ships one share-relation per cloud. After that the
+owner is offline: queries are issued by the *user* against the clouds only.
+
+In this framework the ``c`` clouds are axis 0 of every share tensor; the
+non-communication property is structural (no op mixes different cloud rows
+except the explicitly counted re-sharing round) and is verified by
+``tests/test_noncommunication.py`` on the lowered HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import jax
+import numpy as np
+
+from . import encoding
+from .costs import CostLedger
+from .encoding import Codec
+from .shamir import Shares
+
+
+@dataclasses.dataclass
+class SecretSharedDB:
+    """One outsourced relation R^s_1..R^s_c plus metadata the adversary knows.
+
+    Per §2.3 the adversary may know n, m and the schema — only the *values*
+    (and their multiplicities) are hidden.
+    """
+    relation: Shares                 # (c, n, m, W, A) one-hot shares
+    codec: Codec
+    column_names: Sequence[str]
+    numeric: Dict[int, Shares]       # col index -> (c, n, bits) bit shares
+    numeric_bits: Dict[int, int]
+    base_degree: int = 1
+
+    @property
+    def n_shares(self) -> int:
+        return self.relation.n_shares
+
+    @property
+    def n_tuples(self) -> int:
+        return self.relation.shape[0]
+
+    @property
+    def n_attrs(self) -> int:
+        return self.relation.shape[1]
+
+    def column(self, col: int) -> Shares:
+        """Share view of one attribute: (c, n, W, A)."""
+        return Shares(self.relation.values[:, :, col], self.relation.degree)
+
+    def col_index(self, name: str) -> int:
+        return list(self.column_names).index(name)
+
+
+def outsource(key: jax.Array,
+              rows: Sequence[Sequence[str]],
+              *,
+              column_names: Optional[Sequence[str]] = None,
+              codec: Optional[Codec] = None,
+              n_shares: int,
+              degree: int = 1,
+              numeric_columns: Optional[Dict[int, int]] = None
+              ) -> SecretSharedDB:
+    """DB-owner-side, one-time: encode + share + distribute (Algorithm 1).
+
+    numeric_columns maps a column index to a bit-width; those columns are
+    *additionally* outsourced in binary form for range queries (§3.4).
+    """
+    codec = codec or Codec()
+    rows = [list(r) for r in rows]
+    n = len(rows)
+    m = len(rows[0])
+    if column_names is None:
+        column_names = [f"A{j+1}" for j in range(m)]
+
+    k_rel, k_num = jax.random.split(key)
+    encoded = codec.encode_relation(rows)                  # (n, m, W, A)
+    relation = encoding.share_encoded(k_rel, encoded, n_shares=n_shares,
+                                      degree=degree)
+
+    numeric: Dict[int, Shares] = {}
+    numeric_bits: Dict[int, int] = {}
+    for col, bits in (numeric_columns or {}).items():
+        vals = [int(r[col]) for r in rows]
+        enc = encoding.encode_number_column(vals, bits)    # (n, bits)
+        k_num, k_col = jax.random.split(k_num)
+        numeric[col] = encoding.share_encoded(k_col, enc, n_shares=n_shares,
+                                              degree=degree)
+        numeric_bits[col] = bits
+
+    return SecretSharedDB(relation=relation, codec=codec,
+                          column_names=list(column_names), numeric=numeric,
+                          numeric_bits=numeric_bits, base_degree=degree)
+
+
+def fresh_ledger() -> CostLedger:
+    return CostLedger()

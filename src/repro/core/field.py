@@ -1,0 +1,153 @@
+"""Finite-field arithmetic over F_p with p = 2**31 - 1 (Mersenne-31).
+
+All secret-sharing math in this framework happens in this field. Elements are
+stored as ``uint32`` in ``[0, p)``. Products are formed in ``uint64`` lanes and
+reduced with the Mersenne fold ``x -> (x & p) + (x >> 31)`` — two folds bring
+any 62-bit value below ``2p``, one conditional subtract finishes. This is the
+TPU-friendly choice: no integer division, no Barrett/Montgomery constants.
+
+The Pallas kernels (``repro.kernels``) re-derive the same arithmetic in 16-bit
+limbs for 32-bit-lane hardware; this module is the reference semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The field prime: Mersenne-31. Fits uint32; products fit uint64 (62 bits).
+P = np.uint32(2**31 - 1)
+P64 = np.uint64(2**31 - 1)
+DTYPE = jnp.uint32
+
+__all__ = [
+    "P", "DTYPE", "to_field", "add", "sub", "neg", "mul", "pow_", "inv",
+    "sum_", "dot", "matmul", "uniform", "from_signed",
+]
+
+
+def to_field(x) -> jax.Array:
+    """Cast integers (possibly negative / oversized) into canonical F_p form."""
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jnp.signedinteger):
+        x = jnp.asarray(x, jnp.int64) % jnp.int64(P)
+    return jnp.asarray(x, jnp.uint64) % P64
+
+
+def _fold64(x: jax.Array) -> jax.Array:
+    """Mersenne fold of a uint64 value below 2**62 down to [0, p)."""
+    x = (x & P64) + (x >> np.uint64(31))          # < 2**32
+    x = (x & P64) + (x >> np.uint64(31))          # < p + 2
+    return x - jnp.where(x >= P64, P64, np.uint64(0))
+
+
+def add(a: jax.Array, b: jax.Array) -> jax.Array:
+    s = a.astype(jnp.uint64) + b.astype(jnp.uint64)
+    s = s - jnp.where(s >= P64, P64, np.uint64(0))
+    return s.astype(DTYPE)
+
+
+def sub(a: jax.Array, b: jax.Array) -> jax.Array:
+    a = a.astype(jnp.uint64)
+    b = b.astype(jnp.uint64)
+    return (a + jnp.where(a >= b, np.uint64(0), P64) - b).astype(DTYPE)
+
+
+def neg(a: jax.Array) -> jax.Array:
+    a = a.astype(jnp.uint64)
+    return jnp.where(a == 0, a, P64 - a).astype(DTYPE)
+
+
+def mul(a: jax.Array, b: jax.Array) -> jax.Array:
+    prod = a.astype(jnp.uint64) * b.astype(jnp.uint64)   # < 2**62
+    return _fold64(prod).astype(DTYPE)
+
+
+def sum_(x: jax.Array, axis=None, keepdims: bool = False) -> jax.Array:
+    """Modular sum. Accumulates in uint64 (safe for up to 2**33 addends)."""
+    acc = jnp.sum(x.astype(jnp.uint64), axis=axis, keepdims=keepdims)
+    # acc < n * p <= 2**33 * 2**31 = 2**64 -> fold via % once (uint64 mod is
+    # fine outside the hot path; hot paths use the Pallas kernels).
+    return (acc % P64).astype(DTYPE)
+
+
+def dot(a: jax.Array, b: jax.Array, axis: int = -1) -> jax.Array:
+    """Modular inner product along ``axis``."""
+    prod = a.astype(jnp.uint64) * b.astype(jnp.uint64)
+    prod = _fold64(prod)
+    return sum_(prod, axis=axis)
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Modular matmul ``a @ b`` for 2-D (or batched) uint32 operands.
+
+    Limb-decomposed: ``x = x1·2¹⁶ + x0`` turns the mod-p matmul into FOUR
+    plain integer dots whose uint64 accumulation is exact for K ≤ 2³⁰
+    (x1x1 < 2³⁰, partial sums < K·2³² < 2⁶²), recombined with Mersenne
+    folds (2³² ≡ 2, 2¹⁶ stays). XLA lowers the limb dots to real ``dot``
+    HLOs — O(MK+KN+MN) HBM traffic — instead of materializing the
+    (…,M,K,N) fold-between-multiply-and-sum intermediate of the naive
+    formulation (measured 10× memory-term win on the paper_db cell;
+    EXPERIMENTS.md §Perf). The Pallas kernel (kernels/ss_matmul.py) is the
+    same algorithm tiled for VMEM.
+    """
+    k_dim = a.shape[-1]
+    assert k_dim <= (1 << 28), "limb accumulation exact only for K <= 2^28"
+    mask = jnp.uint32(0xFFFF)
+    # u32 limb operands (half the read traffic of u64-widened operands);
+    # dots accumulate exactly in u64 via preferred_element_type.
+    a1, a0 = a >> jnp.uint32(16), a & mask
+    b1, b0 = b >> jnp.uint32(16), b & mask
+
+    def dot64(x, y):
+        return jnp.matmul(x, y, preferred_element_type=jnp.uint64)
+
+    # Karatsuba: 3 dots instead of 4 — mid = (a1+a0)(b1+b0) − hi − lo.
+    d11 = dot64(a1, b1)                        # Σ a1b1       < K·2³⁰
+    d00 = dot64(a0, b0)                        # Σ a0b0       < K·2³²
+    dk = dot64(a1 + a0, b1 + b0)               # Σ (…)(…)     < K·2³⁴
+    dmid = _fold64(dk - d11 - d00)             # exact in u64 (no borrow:
+    #                                            dk ≥ d11+d00 elementwise)
+    d11 = _fold64(d11)
+    d00 = _fold64(d00)
+    # x = d11·2³² + dmid·2¹⁶ + d00 ≡ 2·d11 + dmid·2¹⁶ + d00 (mod p)
+    t11 = _fold64(d11 << jnp.uint64(1))
+    tmid = _fold64(dmid << jnp.uint64(16))
+    return add(add(t11.astype(DTYPE), tmid.astype(DTYPE)),
+               d00.astype(DTYPE))
+
+
+def pow_(a: jax.Array, e: int) -> jax.Array:
+    """a**e mod p by square-and-multiply (e is a static python int)."""
+    e = int(e)
+    result = jnp.full_like(a, 1)
+    base = a
+    while e > 0:
+        if e & 1:
+            result = mul(result, base)
+        base = mul(base, base)
+        e >>= 1
+    return result
+
+
+def inv(a: jax.Array) -> jax.Array:
+    """Multiplicative inverse by Fermat: a**(p-2)."""
+    return pow_(a, int(P) - 2)
+
+
+def from_signed(x: jax.Array) -> jax.Array:
+    """Interpret field element as signed (for small +/- values around 0)."""
+    x = x.astype(jnp.int64)
+    half = jnp.int64(int(P) // 2)
+    return jnp.where(x > half, x - jnp.int64(int(P)), x)
+
+
+def uniform(key: jax.Array, shape) -> jax.Array:
+    """Uniform field elements via rejection-free 62-bit sampling.
+
+    Draws 64 random bits, keeps the low 62, reduces mod p. The bias is
+    2**-31-scale (negligible, and irrelevant for tests).
+    """
+    bits = jax.random.bits(key, shape, dtype=jnp.uint64)
+    bits = bits >> np.uint64(2)
+    return (bits % P64).astype(DTYPE)

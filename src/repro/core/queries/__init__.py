@@ -1,0 +1,15 @@
+"""Privacy-preserving query suite on secret-shares (paper §3).
+
+Every query function simulates both protocol sides faithfully:
+user-side encode/share/interpolate, cloud-side oblivious share-space
+computation, with a CostLedger recording bits/rounds/ops (Table 1 units).
+"""
+from .count import count_query
+from .select import (select_one_tuple, select_one_round, select_tree)
+from .join import pkfk_join, equijoin
+from .range_query import ss_sub, range_count, range_select
+
+__all__ = [
+    "count_query", "select_one_tuple", "select_one_round", "select_tree",
+    "pkfk_join", "equijoin", "ss_sub", "range_count", "range_select",
+]

@@ -1,0 +1,49 @@
+"""Count query (paper §3.1, Algorithm 2; Theorem 1).
+
+User sends a secret-shared predicate (O(1) communication — independent of n),
+each cloud runs the accumulating automaton over the target attribute (nw work)
+and returns ONE share; the user interpolates c' = deg+1 values (O(1) work).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from .. import automata, encoding, shamir
+from ..costs import CostLedger
+from ..engine import SecretSharedDB
+
+
+def count_query(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
+                *, ledger: Optional[CostLedger] = None,
+                impl: str = "jnp") -> Tuple[int, CostLedger]:
+    """COUNT(*) WHERE col = pattern — oblivious, one round."""
+    ledger = ledger if ledger is not None else CostLedger()
+    codec = db.codec
+
+    # --- user side: encode + share the predicate (Alg 2 line 1-2) ----------
+    p_sh = encoding.share_pattern(key, codec, pattern,
+                                  n_shares=db.n_shares, degree=db.base_degree)
+    ledger.round()
+    ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
+
+    # --- cloud side: AA over every value of the attribute (MAP_count) ------
+    col = db.column(column)                      # (c, n, W, A)
+    if impl == "pallas":
+        from ...kernels import ops as kops
+        match_vals = kops.aa_match(col.values, p_sh.values)
+        deg = (col.degree + p_sh.degree) * codec.word_length
+        counts = shamir.Shares(match_vals, deg).sum(axis=0)
+    else:
+        counts = automata.count_column(col, p_sh)    # (c,) share of count
+    ledger.cloud(db.n_tuples * codec.word_length * codec.alphabet_size)
+
+    # --- cloud -> user: one word per cloud ---------------------------------
+    ledger.recv(db.n_shares)
+
+    # --- user side: interpolate c' shares (Alg 2 line 5-6) -----------------
+    result = shamir.interpolate(counts)
+    ledger.user(counts.degree + 1)
+    return int(np.asarray(result)), ledger

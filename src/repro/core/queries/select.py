@@ -1,0 +1,276 @@
+"""Selection queries on secret-shares (paper §3.2; Algorithms 3 & 4).
+
+Three variants, exactly as the paper structures them:
+
+* ``select_one_tuple``  (§3.2.1, Alg 3) — one value holds one tuple: match-bit
+  × tuple, summed over n; only the satisfying tuple survives the sum.
+* ``select_one_round``  (§3.2.2 "one-round") — cloud returns all n match bits
+  (user interpolates n·c′ values), then a secret-shared ℓ'×n one-hot fetch
+  matrix is multiplied against the relation (share-space matmul).
+* ``select_tree``       (§3.2.2 "tree-based", Alg 4) — Q&A rounds of
+  block-partitioned counts; the user interpolates only O(ℓ) values per round;
+  address of a single-hit block via Address_fetch (Σ matchᵢ · i).
+
+All cloud work is oblivious: identical ops on every tuple regardless of data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import automata, encoding, field, shamir
+from ..costs import CostLedger
+from ..encoding import Codec
+from ..engine import SecretSharedDB
+from ..shamir import Shares
+from .count import count_query
+
+
+# ---------------------------------------------------------------------------
+# §3.2.1 — one value, one tuple (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+def select_one_tuple(key: jax.Array, db: SecretSharedDB, column: int,
+                     pattern: str, *, ledger: Optional[CostLedger] = None,
+                     skip_count_phase: bool = False,
+                     impl: str = "jnp") -> Tuple[List[List[str]], CostLedger]:
+    """SELECT * WHERE col = pattern, when the predicate hits exactly 1 tuple."""
+    ledger = ledger if ledger is not None else CostLedger()
+    codec = db.codec
+    k_count, k_sel = jax.random.split(key)
+
+    if not skip_count_phase:  # Phase 0 (Alg 3 line 1)
+        ell, ledger = count_query(k_count, db, column, pattern, ledger=ledger)
+        if ell != 1:
+            raise ValueError(f"select_one_tuple needs ℓ=1, predicate has {ell}"
+                             " — use select_one_round/select_tree")
+
+    # --- user: send shared predicate (Alg 3 line 3) ------------------------
+    p_sh = encoding.share_pattern(k_sel, codec, pattern,
+                                  n_shares=db.n_shares, degree=db.base_degree)
+    ledger.round()
+    ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
+
+    # --- cloud: MAP_single_tuple_fetch (Alg 3 lines 8-12) ------------------
+    col = db.column(column)
+    m_bits = automata.match_words(col, p_sh)            # (c, n)
+    rel = db.relation                                    # (c, n, m, W, A)
+    mb = Shares(m_bits.values[:, :, None, None, None], m_bits.degree)
+    picked = Shares(
+        field.mul(jnp.broadcast_to(mb.values, rel.values.shape), rel.values),
+        m_bits.degree + rel.degree)
+    sums = picked.sum(axis=0)                            # (c, m, W, A)
+    ledger.cloud(db.n_tuples * db.n_attrs * codec.word_length
+                 * codec.alphabet_size)
+
+    # --- cloud -> user: one summed tuple per cloud -------------------------
+    ledger.recv(db.n_shares * db.n_attrs * codec.word_length
+                * codec.alphabet_size)
+
+    # --- user: interpolate + decode -----------------------------------------
+    tup = shamir.interpolate(sums)                       # (m, W, A)
+    ledger.user((sums.degree + 1) * db.n_attrs * codec.word_length)
+    row = codec.decode_row(np.asarray(tup))
+    return [row], ledger
+
+
+# ---------------------------------------------------------------------------
+# shared Phase-2: oblivious fetch by secret-shared one-hot matrix
+# ---------------------------------------------------------------------------
+
+def fetch_by_addresses(key: jax.Array, db: SecretSharedDB,
+                       addresses: Sequence[int], *, ledger: CostLedger,
+                       padded_rows: Optional[int] = None,
+                       impl: str = "jnp") -> List[List[str]]:
+    """Fetch tuples at known addresses with an ℓ'×n shared one-hot matrix.
+
+    ``padded_rows`` ≥ ℓ hides the true result size (fake-row padding, §3.2.2
+    leakage discussion): extra rows are all-zero one-hots and fetch nothing.
+    """
+    codec = db.codec
+    n = db.n_tuples
+    ell = len(addresses)
+    ellp = max(padded_rows or ell, ell)
+
+    # --- user: build + share the fetch matrix ------------------------------
+    m_host = np.zeros((ellp, n), dtype=np.uint32)
+    for r, a in enumerate(addresses):
+        m_host[r, a] = 1
+    m_sh = encoding.share_encoded(key, m_host, n_shares=db.n_shares,
+                                  degree=db.base_degree)   # (c, ℓ', n)
+    ledger.round()
+    ledger.send(db.n_shares * ellp * n)
+
+    # --- cloud: share-space matmul  M @ R  ----------------------------------
+    rel = db.relation.values                         # (c, n, m, W, A)
+    c, _, m, w, a = rel.shape
+    rel_flat = rel.reshape(c, n, m * w * a)
+    if impl == "pallas":
+        from ...kernels import ops as kops
+        fetched_flat = kops.ss_matmul(m_sh.values, rel_flat)
+    else:
+        fetched_flat = field.matmul(m_sh.values, rel_flat)
+    fetched = Shares(fetched_flat.reshape(c, ellp, m, w, a),
+                     m_sh.degree + db.relation.degree)
+    ledger.cloud(ellp * n * m * w * a)
+
+    # --- cloud -> user, interpolate + decode --------------------------------
+    ledger.recv(db.n_shares * ellp * m * w * a)
+    out = shamir.interpolate(fetched)                 # (ℓ', m, W, A)
+    ledger.user((fetched.degree + 1) * ellp * m * w)
+    rows = [codec.decode_row(np.asarray(out[r])) for r in range(ell)]
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# §3.2.2 — one-round algorithm
+# ---------------------------------------------------------------------------
+
+def select_one_round(key: jax.Array, db: SecretSharedDB, column: int,
+                     pattern: str, *, ledger: Optional[CostLedger] = None,
+                     padded_rows: Optional[int] = None,
+                     impl: str = "jnp"
+                     ) -> Tuple[List[List[str]], List[int], CostLedger]:
+    """Phase 1: per-tuple match bits in ONE round (user interpolates n·c′).
+    Phase 2: oblivious matrix fetch."""
+    ledger = ledger if ledger is not None else CostLedger()
+    codec = db.codec
+    k_pat, k_fetch = jax.random.split(key)
+
+    # --- round 1: user sends predicate, cloud returns n match bits ---------
+    p_sh = encoding.share_pattern(k_pat, codec, pattern,
+                                  n_shares=db.n_shares, degree=db.base_degree)
+    ledger.round()
+    ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
+    col = db.column(column)
+    m_bits = automata.match_words(col, p_sh)                  # (c, n)
+    ledger.cloud(db.n_tuples * codec.word_length * codec.alphabet_size)
+    ledger.recv(db.n_shares * db.n_tuples)
+
+    # --- user: interpolate all n bits, collect addresses --------------------
+    v = np.asarray(shamir.interpolate(m_bits))                # (n,)
+    ledger.user((m_bits.degree + 1) * db.n_tuples)
+    addresses = [int(i) for i in np.nonzero(v)[0]]
+
+    # --- round 2: oblivious fetch -------------------------------------------
+    rows = fetch_by_addresses(k_fetch, db, addresses, ledger=ledger,
+                              padded_rows=padded_rows, impl=impl)
+    return rows, addresses, ledger
+
+
+# ---------------------------------------------------------------------------
+# §3.2.2 — tree-based algorithm (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Block:
+    start: int
+    end: int    # exclusive
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+
+def _count_blocks(db: SecretSharedDB, column: int, p_sh: Shares,
+                  blocks: Sequence[_Block], ledger: CostLedger
+                  ) -> List[int]:
+    """One Q&A round: cloud counts p in each block, user interpolates."""
+    codec = db.codec
+    counts = []
+    for b in blocks:
+        col = Shares(db.relation.values[:, b.start:b.end, column],
+                     db.relation.degree)
+        cnt = automata.count_column(col, p_sh)          # (c,) share
+        counts.append(cnt)
+        ledger.cloud(b.size * codec.word_length * codec.alphabet_size)
+    ledger.round()
+    ledger.recv(db.n_shares * len(blocks))
+    out = []
+    for cnt in counts:
+        out.append(int(np.asarray(shamir.interpolate(cnt))))
+        ledger.user(cnt.degree + 1)
+    return out
+
+
+def _address_fetch(db: SecretSharedDB, column: int, p_sh: Shares,
+                   block: _Block, ledger: CostLedger) -> int:
+    """Alg 4 line 14: line_number = Σ matchᵢ · (i+1) over the block."""
+    col = Shares(db.relation.values[:, block.start:block.end, column],
+                 db.relation.degree)
+    m_bits = automata.match_words(col, p_sh)             # (c, h)
+    idx = jnp.arange(block.start + 1, block.end + 1, dtype=field.DTYPE)
+    line = Shares(field.mul(m_bits.values,
+                            jnp.broadcast_to(idx[None], m_bits.values.shape)),
+                  m_bits.degree).sum(axis=0)
+    ledger.cloud(block.size * db.codec.word_length * db.codec.alphabet_size)
+    ledger.recv(db.n_shares)
+    addr = int(np.asarray(shamir.interpolate(line))) - 1
+    ledger.user(line.degree + 1)
+    return addr
+
+
+def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
+                *, ledger: Optional[CostLedger] = None,
+                branching: Optional[int] = None,
+                padded_rows: Optional[int] = None,
+                impl: str = "jnp"
+                ) -> Tuple[List[List[str]], List[int], CostLedger]:
+    """Tree-based multi-round address discovery + oblivious fetch (Alg 4).
+
+    Rounds ≤ ⌊log_ℓ n⌋ + ⌊log₂ ℓ⌋ + 1 (Theorem 4). The user interpolates only
+    per-block counts, never the full n-vector.
+    """
+    ledger = ledger if ledger is not None else CostLedger()
+    codec = db.codec
+    k_count, k_pat, k_fetch = jax.random.split(key, 3)
+
+    # Phase 0: count occurrences
+    ell, ledger = count_query(k_count, db, column, pattern, ledger=ledger)
+    if ell == 0:
+        return [], [], ledger
+    p_sh = encoding.share_pattern(k_pat, codec, pattern,
+                                  n_shares=db.n_shares, degree=db.base_degree)
+    ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
+    if ell == 1:
+        # Alg 4 line 2 -> Alg 3; reuse the generic path below with one block.
+        addr = _address_fetch(db, column, p_sh,
+                              _Block(0, db.n_tuples), ledger)
+        ledger.round()
+        rows = fetch_by_addresses(k_fetch, db, [addr], ledger=ledger,
+                                  padded_rows=padded_rows, impl=impl)
+        return rows, [addr], ledger
+
+    fanout = branching or ell
+    addresses: List[int] = []
+    active = [_Block(0, db.n_tuples)]
+    first_round = True
+    while active:
+        # partition every active block into ≤ fanout equal sub-blocks
+        sub_blocks: List[_Block] = []
+        for b in active:
+            k = min(fanout if first_round else max(2, fanout), b.size)
+            bounds = np.linspace(b.start, b.end, k + 1).astype(int)
+            sub_blocks += [_Block(int(bounds[i]), int(bounds[i + 1]))
+                           for i in range(k) if bounds[i] < bounds[i + 1]]
+        first_round = False
+        counts = _count_blocks(db, column, p_sh, sub_blocks, ledger)
+        active = []
+        for b, cnt in zip(sub_blocks, counts):
+            if cnt == 0:                       # Case 1
+                continue
+            if cnt == 1:                       # Case 2: Address_fetch
+                addresses.append(_address_fetch(db, column, p_sh, b, ledger))
+            elif cnt == b.size:                # Case 3: whole block matches
+                addresses.extend(range(b.start, b.end))
+            else:                              # Case 4: recurse
+                active.append(b)
+
+    addresses.sort()
+    rows = fetch_by_addresses(k_fetch, db, addresses, ledger=ledger,
+                              padded_rows=padded_rows, impl=impl)
+    return rows, addresses, ledger

@@ -1,0 +1,5 @@
+from .pipeline import (TokenStream, synthetic_relation, make_lm_batches,
+                       Prefetcher)
+
+__all__ = ["TokenStream", "synthetic_relation", "make_lm_batches",
+           "Prefetcher"]

@@ -1,0 +1,11 @@
+# Pallas TPU kernels for the paper's compute hot-spots:
+#   ss_matmul — mod-p (Mersenne-31) matmul: share generation, one-hot fetch
+#               matrices × relations (§3.2.2 Phase 2), PK/FK join contraction
+#               (§3.3.1) — the O(ℓnmw)/O(n²mw) terms of Table 1.
+#   aa_match  — fused accumulating-automata string match (§3.1 Table 3):
+#               per-position one-hot inner products chained multiplicatively.
+# Each kernel ships ops.py (jit'd public wrapper) and ref.py (pure-jnp oracle)
+# and is validated in interpret mode over a shape/dtype sweep.
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused accumulating-automata string match (paper §3.1).
+
+For every tuple i of a share-column the automaton of Table 3 computes
+
+    out[i] = Π_{j<W} ( Σ_{α<A} col[i,j,α] · pat[j,α] )   (mod p)
+
+i.e. W one-hot inner products chained by modular multiplication. The naive
+path materializes the (n, W) inner-product tensor in HBM; this kernel fuses
+inner product + chain so each column tile is read once and only (n,) results
+are written — turning an HBM-bound O(n·W·A + n·W) pipeline into a single
+O(n·W·A)-read pass (the §Perf "memory term" win for the count query).
+
+Tiling: grid over n. Block (bn, W, A) of the column + the full (W, A) pattern
+live in VMEM. Same 16-bit-limb Mersenne-31 arithmetic as ss_matmul (VPU
+workload; see that module's docstring for the TPU adaptation rationale).
+VMEM at bn=512, W=16, A=128: 512·16·128·4 B = 4 MiB — fits with double
+buffering; ops.py shrinks bn automatically for wider codecs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ss_matmul import _addmod, _mulmod
+
+
+def _aa_kernel(col_ref, pat_ref, o_ref):
+    col = col_ref[...]                       # (bn, W, A) uint32
+    pat = pat_ref[...]                       # (1, W, A)
+    w = col.shape[1]
+
+    def inner(j, _):
+        prod = _mulmod(col[:, j, :], pat[0, j, :][None, :])   # (bn, A)
+        # modular tree-reduce over the alphabet axis
+        def red(k, acc):
+            return _addmod(acc, prod[:, k])
+        return jax.lax.fori_loop(1, prod.shape[1], red, prod[:, 0])
+
+    acc = inner(0, None)                      # v_0
+    def chain(j, acc):
+        return _mulmod(acc, inner(j, None))   # N_{j+1} = N_j · v_j
+    o_ref[...] = jax.lax.fori_loop(1, w, chain, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def aa_match_pallas(col: jax.Array, pat: jax.Array, *, bn: int = 512,
+                    interpret: bool = True) -> jax.Array:
+    """col: (n, W, A) uint32 shares; pat: (W, A). Returns (n,) match shares."""
+    n, w, a = col.shape
+    assert pat.shape == (w, a), (pat.shape, (w, a))
+    bn = min(bn, _round_up(n, 8))
+    n_pad = _round_up(n, bn)
+    col_p = jnp.pad(col, ((0, n_pad - n), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _aa_kernel,
+        grid=(n_pad // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, w, a), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, a), lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.uint32),
+        interpret=interpret,
+    )(col_p, pat[None])
+    return out[:n]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,62 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handle cloud-axis batching (vmap), interpret-mode selection (interpret=True
+everywhere except a real TPU backend), and the join-oriented composite
+``match_matrix``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .aa_match import aa_match_pallas
+from .ss_matmul import ss_matmul_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@jax.jit
+def ss_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Batched mod-p matmul. a: ([c,] M, K), b: ([c,] K, N) uint32."""
+    interp = _interpret()
+    fn = functools.partial(ss_matmul_pallas, interpret=interp)
+    if a.ndim == 2 and b.ndim == 2:
+        return fn(a, b)
+    if a.ndim == 3 and b.ndim == 3:
+        return jax.vmap(fn)(a, b)
+    if a.ndim == 3 and b.ndim == 2:
+        return jax.vmap(lambda x: fn(x, b))(a)
+    raise ValueError(f"unsupported ranks: {a.shape} @ {b.shape}")
+
+
+@jax.jit
+def aa_match(col: jax.Array, pat: jax.Array) -> jax.Array:
+    """Batched AA match. col: ([c,] n, W, A), pat: ([c,] W, A) -> ([c,] n)."""
+    interp = _interpret()
+    fn = functools.partial(aa_match_pallas, interpret=interp)
+    if col.ndim == 3:
+        return fn(col, pat)
+    if col.ndim == 4:
+        return jax.vmap(fn)(col, pat)
+    raise ValueError(f"unsupported rank: {col.shape}")
+
+
+@jax.jit
+def match_matrix(col_x: jax.Array, col_y: jax.Array) -> jax.Array:
+    """All-pairs word match (join §3.3.1 hotspot) via per-position ss_matmul.
+
+    col_x: (c, nx, W, A), col_y: (c, ny, W, A) -> (c, nx, ny).
+    """
+    from ..core import field  # local import to avoid cycle
+    c, nx, w, a = col_x.shape
+    ny = col_y.shape[1]
+    acc = None
+    for j in range(w):
+        pj = ss_matmul(col_x[:, :, j, :],
+                       jnp.swapaxes(col_y[:, :, j, :], -1, -2))
+        acc = pj if acc is None else field.mul(acc, pj)
+    return acc

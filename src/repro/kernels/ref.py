@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+These mirror the semantics of ``repro.core.field`` but are kept standalone so
+kernel tests do not depend on the core library's internals.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+P64 = np.uint64(2**31 - 1)
+
+
+def _fold64(x):
+    x = (x & P64) + (x >> np.uint64(31))
+    x = (x & P64) + (x >> np.uint64(31))
+    return x - jnp.where(x >= P64, P64, np.uint64(0))
+
+
+def ss_matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(M,K) @ (K,N) mod p, uint32 operands in [0, p)."""
+    a64 = a.astype(jnp.uint64)
+    b64 = b.astype(jnp.uint64)
+    prod = _fold64(jnp.einsum("mk,kn->mkn", a64, b64))
+    return (jnp.sum(prod, axis=1) % P64).astype(jnp.uint32)
+
+
+def aa_match(col: jnp.ndarray, pat: jnp.ndarray) -> jnp.ndarray:
+    """Accumulating-automata match.
+
+    col: (n, W, A) one-hot shares; pat: (W, A).
+    out[i] = Π_j ( Σ_α col[i,j,α]·pat[j,α] )  mod p.
+    """
+    col64 = col.astype(jnp.uint64)
+    pat64 = pat.astype(jnp.uint64)
+    v = (jnp.sum(_fold64(col64 * pat64[None]), axis=-1) % P64)   # (n, W)
+    acc = v[:, 0]
+    for j in range(1, v.shape[1]):
+        acc = _fold64(acc * v[:, j])
+    return acc.astype(jnp.uint32)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: mod-p matmul over F_p, p = 2³¹−1 (Mersenne-31).
+
+TPU adaptation (see DESIGN.md §2): the MXU multiplies bf16/int8 — it cannot
+form 62-bit integer products — so modular matmul on TPU is a **VPU**
+(vector-unit) workload in 32-bit lanes. We therefore:
+
+  * decompose each 31-bit operand into 16-bit limbs
+    ``x = x1·2¹⁶ + x0`` (x1 < 2¹⁵, x0 < 2¹⁶), so every partial product fits
+    a 32-bit lane:  ``x·y = x1y1·2³² + (x1y0 + x0y1)·2¹⁶ + x0y0``;
+  * exploit the Mersenne congruences ``2³¹ ≡ 1, 2³² ≡ 2 (mod p)`` to fold
+    the limb products back into [0, p) with shifts/adds only — no division;
+  * tile (bm × bk) · (bk × bn) blocks into VMEM with an explicit BlockSpec
+    grid, accumulating mod-p in a VMEM scratch across the K grid axis
+    (K is the innermost/fastest grid dimension, so the scratch carries).
+
+VMEM budget per grid cell (defaults bm = bn = bk = 128, uint32):
+  a-tile 64 KiB + b-tile 64 KiB + scratch 64 KiB + out 64 KiB = 256 KiB ≪ 16 MiB,
+leaving room for double-buffered pipelining of the next a/b tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+P32 = np.uint32(2**31 - 1)
+MASK16 = np.uint32(0xFFFF)
+MASK15 = np.uint32(0x7FFF)
+
+
+def _fold32(x: jax.Array) -> jax.Array:
+    """uint32 -> [0, p): one Mersenne fold + conditional subtract."""
+    x = (x & P32) + (x >> np.uint32(31))                  # < p + 2
+    return x - jnp.where(x >= P32, P32, np.uint32(0))
+
+
+def _addmod(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(a + b) mod p for a, b < p. a+b < 2p < 2³², no wrap."""
+    s = a + b
+    return s - jnp.where(s >= P32, P32, np.uint32(0))
+
+
+def _mulmod(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(x · y) mod p for x, y < p, entirely in 32-bit lanes."""
+    x0 = x & MASK16
+    x1 = x >> np.uint32(16)          # < 2^15
+    y0 = y & MASK16
+    y1 = y >> np.uint32(16)
+    lo = x0 * y0                     # < 2^32, exact in uint32
+    mid = x1 * y0 + x0 * y1          # each < 2^31, sum < 2^32
+    hi = x1 * y1                     # < 2^30
+    # mid·2¹⁶ mod p: mid = mh·2¹⁵ + ml  ⇒  mh·2³¹ + ml·2¹⁶ ≡ mh + ml·2¹⁶
+    t_mid = (mid >> np.uint32(15)) + ((mid & MASK15) << np.uint32(16))
+    # lo mod p: lo = lh·2³¹ + ll ⇒ lh + ll
+    t_lo = (lo >> np.uint32(31)) + (lo & P32)
+    # hi·2³² ≡ 2·hi
+    t_hi = hi << np.uint32(1)
+    return _addmod(_addmod(_fold32(t_mid), _fold32(t_lo)), _fold32(t_hi))
+
+
+def _ss_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, bk: int, nk: int):
+    """One (i, j, k) grid cell: acc += A[i,k] ·ₚ B[k,j]; emit at last k."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                                  # (bm, bk) uint32
+    b = b_ref[...]                                  # (bk, bn)
+
+    def body(k, acc):
+        prod = _mulmod(a[:, k][:, None], b[k, :][None, :])   # (bm, bn)
+        return _addmod(acc, prod)
+
+    acc_ref[...] = jax.lax.fori_loop(0, bk, body, acc_ref[...])
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def ss_matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 128,
+                     bn: int = 128, bk: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """(M,K) @ (K,N) mod p. Pads to block multiples (zeros are absorbing)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 128))
+    bk = min(bk, _round_up(k, 128))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    nk = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_ss_matmul_kernel, bk=bk, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.uint32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.uint32)],
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,2 @@
+# Launchers: make_production_mesh (mesh.py), the multi-pod dry-run
+# (dryrun.py — sets XLA device-count flag FIRST), training/serving drivers.

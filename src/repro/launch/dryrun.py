@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh) cell.
+
+For each cell this driver
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. constructs ShapeDtypeStruct inputs with their NamedShardings (no
+     allocation),
+  3. lowers + compiles the real step function (train_step with AdamW +
+     grad-accum for train cells; prefill/serve step for inference cells),
+  4. records memory_analysis, cost_analysis, per-collective HLO bytes and
+     the three roofline terms into a JSON results file (incremental —
+     re-running skips completed cells unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+      --shape decode_32k --mesh single
+"""
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import numpy as np  # noqa: E402
+
+import repro        # noqa: E402  (enables x64)
+import repro.configs as configs                      # noqa: E402
+from repro.launch import hlo_analysis, specs         # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.models.config import ALL_SHAPES           # noqa: E402
+from repro.train import AdamWConfig, make_train_step, make_serve_steps  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "dryrun_results.json")
+
+# long_500k runs only for sub-quadratic archs (SSM / hybrid / sliding-window
+# local-global); full-attention archs skip it (DESIGN.md §Arch-applicability).
+LONG_OK = {"mamba2_2_7b", "hymba_1_5b", "gemma3_1b"}
+
+
+def grad_accum_for(cfg) -> int:
+    if cfg.n_experts:
+        return 8
+    if cfg.d_model >= 8192:
+        return 16
+    if cfg.d_model >= 2560:
+        return 8
+    return 4
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic useful FLOPs: 6·N_active·tokens (train), 2·N_active·tokens
+    (prefill), 2·N_active·B (decode)."""
+    n_total = cfg.param_count()
+    if cfg.n_experts:
+        inactive = (cfg.n_layers * (cfg.n_experts - cfg.top_k)
+                    * 3 * cfg.d_model * cfg.d_ff)
+        n_active = n_total - inactive
+    else:
+        n_active = n_total
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch
+
+
+def lower_cell(arch: str, shape, mesh, mesh_name: str) -> dict:
+    cfg = configs.full(arch)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    with jax.default_device(jax.devices()[0]):
+        if shape.kind == "train":
+            from repro import sharding as shd
+            # microbatch must stay shardable over the dp axes
+            ga = min(grad_accum_for(cfg),
+                     shape.global_batch // shd.dp_size(mesh))
+            step = make_train_step(cfg, AdamWConfig(), grad_accum=ga)
+            args = specs.input_specs(cfg, mesh, shape, grad_accum=ga)
+            lowered = jax.jit(step).lower(*args)
+        elif shape.kind == "prefill":
+            prefill_fn, _ = make_serve_steps(cfg)
+            args = specs.input_specs(cfg, mesh, shape)
+            lowered = jax.jit(prefill_fn).lower(*args)
+        else:
+            _, decode_fn = make_serve_steps(cfg)
+            args = specs.input_specs(cfg, mesh, shape)
+            # donate the cache: decode loops update KV in place (XLA would
+            # otherwise copy the whole cache every step)
+            lowered = jax.jit(decode_fn, donate_argnums=(1,)).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    roof = hlo_analysis.analyze(compiled, n_chips)
+    mf = model_flops(cfg, shape)
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": shape.name, "mesh": mesh_name,
+        "status": "ok",
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "model_flops": mf,
+        "useful_ratio": (mf / (roof.flops * n_chips)
+                         if roof.flops else None),
+        "memory": {
+            "argument_gb": getattr(mem, "argument_size_in_bytes", 0) / 2**30,
+            "output_gb": getattr(mem, "output_size_in_bytes", 0) / 2**30,
+            "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 2**30,
+            "alias_gb": getattr(mem, "alias_size_in_bytes", 0) / 2**30,
+        },
+        **roof.as_dict(),
+    }
+    return rec
+
+
+def lower_paper_db(mesh, mesh_name: str) -> dict:
+    db_cfg = configs.get("paper_db").full()
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    args = specs.paper_db_specs(db_cfg, mesh)
+    t0 = time.time()
+    lowered = jax.jit(specs.paper_db_step).lower(*args)
+    compiled = lowered.compile()
+    roof = hlo_analysis.analyze(compiled, n_chips)
+    mem = compiled.memory_analysis()
+    return {"arch": "paper_db", "shape": "query_mix", "mesh": mesh_name,
+            "status": "ok", "compile_s": round(time.time() - t0, 1),
+            "model_flops": None, "useful_ratio": None,
+            "memory": {
+                "argument_gb": getattr(mem, "argument_size_in_bytes", 0)
+                / 2**30,
+                "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 2**30},
+            **roof.as_dict()}
+
+
+def cell_key(arch, shape_name, mesh_name):
+    return f"{arch}|{shape_name}|{mesh_name}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(RESULTS))
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_256", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_512", make_production_mesh(multi_pod=True)))
+
+    arch_list = ([args.arch.replace("-", "_").replace(".", "_")]
+                 if args.arch else configs.ARCH_IDS + ["paper_db"])
+    shape_list = ([s for s in ALL_SHAPES if s.name == args.shape]
+                  if args.shape else list(ALL_SHAPES))
+
+    for mesh_name, mesh in meshes:
+        for arch in arch_list:
+            if arch == "paper_db":
+                key = cell_key(arch, "query_mix", mesh_name)
+                if key in results and not args.force:
+                    continue
+                try:
+                    rec = lower_paper_db(mesh, mesh_name)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": "query_mix",
+                           "mesh": mesh_name, "status": f"error: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                results[key] = rec
+                _flush(results, args.out, rec)
+                continue
+            for shape in shape_list:
+                key = cell_key(arch, shape.name, mesh_name)
+                if key in results and not args.force:
+                    continue
+                if shape.name == "long_500k" and arch not in LONG_OK:
+                    results[key] = {
+                        "arch": arch, "shape": shape.name, "mesh": mesh_name,
+                        "status": "skipped: full quadratic attention at 500k"
+                                  " (DESIGN.md §Arch-applicability)"}
+                    _flush(results, args.out, results[key])
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, mesh, mesh_name)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape.name,
+                           "mesh": mesh_name, "status": f"error: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                results[key] = rec
+                _flush(results, args.out, rec)
+
+
+def _flush(results, path, last):
+    with open(path, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    status = last.get("status", "?")
+    extra = ""
+    if status == "ok":
+        extra = (f" bottleneck={last.get('bottleneck')}"
+                 f" t_comp={last.get('t_compute', 0):.3e}"
+                 f" t_mem={last.get('t_memory', 0):.3e}"
+                 f" t_coll={last.get('t_collective', 0):.3e}"
+                 f" compile={last.get('compile_s')}s")
+    print(f"[dryrun] {last['arch']}×{last['shape']}×{last['mesh']}: "
+          f"{status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+``cost_analysis()`` provides HLO_FLOPs and HLO bytes-accessed; collective
+bytes are NOT in cost_analysis, so we parse the optimized HLO text and sum
+the output-shape bytes of every collective op (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute).
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # B/s / chip
+ICI_BW = 50e9              # B/s / link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. "bf16[16,4096,512]{2,1,0}" — dtype + dims
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the optimized HLO."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # "%name = TYPE[...] all-reduce(...)" — opcode after the '=' sign
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        shape_str, opcode = m.group(1), m.group(2)
+        kind = None
+        for k in _COLLECTIVES:
+            if opcode == k or opcode.startswith(k + "-start"):
+                kind = k
+                break
+        if kind is None:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+        out["count"] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """Per-device quantities (the HLO is the SPMD-partitioned module), so
+    each term divides by a single chip's peak. Global totals are
+    per-device × n_chips."""
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    n_chips: int
+    collective_detail: Dict[str, int]
+    peak_memory_per_device: Optional[float] = None
+    xla_flops_once: float = 0.0      # XLA cost_analysis (loop bodies ×1)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> dict:
+        return dict(flops=self.flops, bytes_accessed=self.bytes_accessed,
+                    collective_bytes=self.collective_bytes,
+                    n_chips=self.n_chips,
+                    t_compute=self.t_compute, t_memory=self.t_memory,
+                    t_collective=self.t_collective,
+                    bottleneck=self.bottleneck,
+                    peak_memory_per_device=self.peak_memory_per_device,
+                    xla_flops_once=self.xla_flops_once,
+                    collective_detail=self.collective_detail)
+
+
+def analyze(compiled, n_chips: int) -> Roofline:
+    """Roofline terms from the compiled per-device module.
+
+    Uses the loop-aware walker (hlo_cost.py) — XLA's own cost_analysis
+    counts while-loop bodies once, which undercounts scanned programs by
+    their trip counts (layers × microbatches × KV blocks). The walker's
+    numbers are per-device; terms divide by per-chip peaks only.
+    """
+    from . import hlo_cost
+    text = compiled.as_text()
+    cost = hlo_cost.analyze_text(text)
+    xla_cost = compiled.cost_analysis()
+    if isinstance(xla_cost, list):
+        xla_cost = xla_cost[0]
+    coll = {k: v for k, v in cost.collectives.items()}
+    coll["total"] = cost.collective_bytes
+    coll["count"] = collective_bytes(text)["count"]
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                    + getattr(ma, "argument_size_in_bytes", 0)
+                    + getattr(ma, "output_size_in_bytes", 0)
+                    - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return Roofline(flops=cost.flops, bytes_accessed=cost.hbm_bytes,
+                    collective_bytes=cost.collective_bytes, n_chips=n_chips,
+                    collective_detail=coll, peak_memory_per_device=mem,
+                    xla_flops_once=float(xla_cost.get("flops", 0.0)))

@@ -1,0 +1,400 @@
+"""Loop-aware HLO cost model — the dry-run's profiler.
+
+XLA's ``compiled.cost_analysis()`` visits a ``while`` body ONCE, so any
+scanned program (scan-over-layers, flash-attention KV blocks, grad-accum
+microbatches) is undercounted by its trip counts. This walker parses the
+optimized per-device HLO text and accumulates
+
+  * FLOPs        — dot ops: 2·|out|·K from ``lhs_contracting_dims``;
+                   elementwise/reduce ops: |out| (integer ALU ops of the
+                   secret-sharing field arithmetic count here too);
+  * HBM bytes    — operands+outputs of *top-level* (unfused) instructions;
+                   fusion internals are VMEM-resident by construction;
+  * collective bytes — per kind, output-shape sized;
+
+multiplying every ``while`` body by its trip count (largest integer constant
+in the loop condition — exact for lax.scan/fori lowerings, which compare the
+induction variable against a literal).
+
+The numbers are per-device (the HLO is the SPMD-partitioned module).
+Accounting is intentionally simple and *stable*: its job is to compare a
+baseline against an optimized rewrite of the same program, not to match
+hardware counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "cosine", "sine", "logistic", "expm1", "log1p", "atan2", "remainder",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "and",
+    "or", "xor", "not", "compare", "select", "clamp", "convert",
+}
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "add-dependency", "partition-id", "replica-id",
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_info(shape_str: str) -> Tuple[int, int]:
+    """-> (total elements, total bytes) across (possibly tuple) shape."""
+    elems = 0
+    byts = 0
+    for dtype, dims in _SHAPE_TOKEN.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+def _dims(shape_str: str) -> List[int]:
+    m = _SHAPE_TOKEN.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]          # %name -> shape string
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|\S+?)\s+([\w\-]+)"
+    r"\((.*?)\)(.*)$")
+_REF = re.compile(r"%([\w.\-]+)")
+_CALL_ATTR = re.compile(r"(?:calls|body|to_apply)=%?([\w.\-]+)")
+_COND_ATTR = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER.match(line.strip())
+            if m:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, shape, opcode, args, attrs = m.groups()
+        operands = _REF.findall(args)
+        cur.instrs.append(Instr(name, shape, opcode, operands, attrs, line))
+        cur.symbols[name] = shape
+    return comps, entry
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.hbm_bytes += other.hbm_bytes
+        for k in _COLLECTIVES:
+            self.collectives[k] += other.collectives[k]
+        return self
+
+    def scaled(self, mult: float) -> "Cost":
+        return Cost(self.flops * mult, self.hbm_bytes * mult,
+                    {k: v * mult for k, v in self.collectives.items()})
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    out_elems, _ = _shape_info(instr.shape)
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", instr.attrs)
+    k = 1
+    if m and instr.operands:
+        lhs_shape = comp.symbols.get(instr.operands[0], "")
+        ldims = _dims(lhs_shape)
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(ldims):
+                k *= ldims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _trip_count(cond: Computation) -> int:
+    best = 1
+    for instr in cond.instrs:
+        for c in _CONST_INT.findall(instr.line):
+            best = max(best, int(c))
+    return best
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    def total(self) -> Cost:
+        if not self.entry:
+            return Cost()
+        return self._comp_cost(self.entry, top_level=True)
+
+    # -- internals -----------------------------------------------------------
+    def _comp_cost(self, name: str, top_level: bool) -> Cost:
+        key = (name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            self._memo[key] = total
+            return total
+        self._memo[key] = total          # break cycles defensively
+        for instr in comp.instrs:
+            total += self._instr_cost(instr, comp, top_level)
+        return total
+
+    def _io_bytes(self, instr: Instr, comp: Computation) -> float:
+        _, out_b = _shape_info(instr.shape)
+        b = float(out_b)
+        for op in instr.operands:
+            _, ob = _shape_info(comp.symbols.get(op, ""))
+            b += ob
+        return b
+
+    def _fusion_io_bytes(self, instr: Instr, comp: Computation,
+                         called: Optional[Computation]) -> float:
+        """HBM traffic of a fusion node: output + per-operand reads.
+
+        A fusion parameter consumed ONLY by slice-type ops reads just the
+        slices (XLA fuses dynamic-slice into consumers — counting the full
+        operand would overstate e.g. flash-attention KV block reads by the
+        trip count)."""
+        _, out_b = _shape_info(instr.shape)
+        b = float(out_b)
+        if called is None:
+            return b + sum(_shape_info(comp.symbols.get(op, ""))[1]
+                           for op in instr.operands)
+        # map parameter index -> instr name in the fused computation
+        params = {}
+        for fi in called.instrs:
+            if fi.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", fi.line)
+                if m:
+                    params[int(m.group(1))] = fi.name
+        slice_ops = {"dynamic-slice", "slice", "gather",
+                     "dynamic-update-slice"}
+        passthrough = {"convert", "bitcast", "copy", "reshape"}
+
+        def terminal_consumers(name, depth=0):
+            """Follow elementwise/layout chains to the ops that actually
+            consume the data (TPU fusions slice before converting)."""
+            outs = []
+            for fi in called.instrs:
+                if name not in fi.operands:
+                    continue
+                if fi.opcode in passthrough and depth < 6:
+                    outs.extend(terminal_consumers(fi.name, depth + 1))
+                else:
+                    outs.append(fi)
+            return outs
+
+        touched = 0.0
+        for idx, op in enumerate(instr.operands):
+            _, full_b = _shape_info(comp.symbols.get(op, ""))
+            pname = params.get(idx)
+            if pname is None:
+                b += full_b
+                continue
+            consumers = terminal_consumers(pname)
+            if consumers and all(fi.opcode in slice_ops
+                                 for fi in consumers):
+                for fi in consumers:
+                    if fi.opcode == "dynamic-update-slice":
+                        # in-place: traffic = the update region only
+                        upd = (fi.operands[1] if len(fi.operands) > 1
+                               else fi.operands[0])
+                        touched += _shape_info(
+                            called.symbols.get(upd, ""))[1]
+                    else:
+                        touched += _shape_info(fi.shape)[1]
+            else:
+                touched += full_b
+        b += touched
+        # a fusion whose ROOT is a DUS writes the update region, not the
+        # full result buffer (aliased in-place on TPU)
+        root = called.instrs[-1] if called.instrs else None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            _, out_b = _shape_info(instr.shape)
+            upd = (root.operands[1] if len(root.operands) > 1
+                   else root.operands[0])
+            upd_b = _shape_info(called.symbols.get(upd, ""))[1]
+            b -= out_b
+            b += upd_b
+        return b
+
+    def _instr_cost(self, instr: Instr, comp: Computation,
+                    top_level: bool) -> Cost:
+        op = instr.opcode
+        c = Cost()
+        if op == "while":
+            body = _CALL_ATTR.search(instr.attrs)
+            cond = _COND_ATTR.search(instr.attrs)
+            # prefer XLA's own annotation, fall back to the condition const
+            m = re.search(r'known_trip_count..:.\s*.n.:."?(\d+)', instr.attrs)
+            if m:
+                trips = int(m.group(1))
+            elif cond and cond.group(1) in self.comps:
+                trips = _trip_count(self.comps[cond.group(1)])
+            else:
+                trips = 1
+            if body:
+                c += self._comp_cost(body.group(1), top_level).scaled(trips)
+            if cond:
+                c += self._comp_cost(cond.group(1), False).scaled(trips)
+            return c
+        if op == "fusion":
+            m = _CALL_ATTR.search(instr.attrs)
+            called = self.comps.get(m.group(1)) if m else None
+            if m:
+                inner = self._comp_cost(m.group(1), False)
+                c.flops += inner.flops
+                for k in _COLLECTIVES:
+                    c.collectives[k] += inner.collectives[k]
+            if top_level:
+                c.hbm_bytes += self._fusion_io_bytes(instr, comp, called)
+            return c
+        if op in ("call", "async-start", "custom-call"):
+            m = _CALL_ATTR.search(instr.attrs)
+            if m:
+                c += self._comp_cost(m.group(1), top_level)
+            if top_level and op == "custom-call":
+                c.hbm_bytes += self._io_bytes(instr, comp)
+            return c
+        if op == "conditional":
+            for branch in re.findall(r"branch_computations={([^}]*)}",
+                                     instr.attrs):
+                for b in _REF.findall(branch):
+                    c += self._comp_cost(b, top_level)
+            m2 = re.findall(r"(?:true|false)_computation=%?([\w.\-]+)",
+                            instr.attrs)
+            for b in m2:
+                c += self._comp_cost(b, top_level)
+            return c
+        # leaf ops
+        is_coll = None
+        for k in _COLLECTIVES:
+            if op == k or op.startswith(k + "-start"):
+                is_coll = k
+                break
+        if is_coll:
+            _, out_b = _shape_info(instr.shape)
+            c.collectives[is_coll] += out_b
+            if top_level:
+                c.hbm_bytes += self._io_bytes(instr, comp)
+            return c
+        if op == "dot":
+            c.flops += _dot_flops(instr, comp)
+            if top_level:
+                c.hbm_bytes += self._io_bytes(instr, comp)
+            return c
+        if op == "convolution":
+            out_elems, _ = _shape_info(instr.shape)
+            kdims = _dims(comp.symbols.get(instr.operands[1], "")) \
+                if len(instr.operands) > 1 else []
+            kflop = 1
+            for d in kdims:
+                kflop *= d
+            c.flops += 2.0 * out_elems * max(kflop, 1)
+            if top_level:
+                c.hbm_bytes += self._io_bytes(instr, comp)
+            return c
+        if op in ("reduce", "reduce-window"):
+            in_elems, _ = _shape_info(comp.symbols.get(
+                instr.operands[0], "")) if instr.operands else (0, 0)
+            c.flops += float(in_elems)
+            if top_level:
+                c.hbm_bytes += self._io_bytes(instr, comp)
+            return c
+        if op == "sort":
+            n_elems, _ = _shape_info(instr.shape)
+            c.flops += n_elems * max(1.0, math.log2(max(n_elems, 2)))
+            if top_level:
+                c.hbm_bytes += self._io_bytes(instr, comp)
+            return c
+        if op in _ELEMENTWISE:
+            out_elems, _ = _shape_info(instr.shape)
+            c.flops += float(out_elems)
+            if top_level:
+                c.hbm_bytes += self._io_bytes(instr, comp)
+            return c
+        if op in _NO_TRAFFIC:
+            return c
+        if top_level:
+            if op in ("dynamic-slice", "slice", "gather"):
+                # reads the slice, not the whole operand
+                _, out_b = _shape_info(instr.shape)
+                c.hbm_bytes += 2.0 * out_b
+            elif op == "dynamic-update-slice":
+                # read-modify-write of the update region only
+                upd = (instr.operands[1] if len(instr.operands) > 1
+                       else instr.operands[0])
+                _, upd_b = _shape_info(comp.symbols.get(upd, ""))
+                c.hbm_bytes += 2.0 * upd_b
+            elif op in ("broadcast", "iota"):
+                _, out_b = _shape_info(instr.shape)
+                c.hbm_bytes += out_b
+            else:
+                # copy, reshape, transpose, pad, concatenate, scatter, ...
+                c.hbm_bytes += self._io_bytes(instr, comp)
+        return c
+
+
+def analyze_text(text: str) -> Cost:
+    return HloCostModel(text).total()

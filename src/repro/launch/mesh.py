@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state. The dry-run entrypoint sets ``XLA_FLAGS=--xla_force_host_platform_
+device_count=512`` before any jax import; everything else sees 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Elastic variant: any (shape, axes) — used by checkpoint resharding
+    tests and the elastic-scaling path."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Single-device mesh for smoke tests."""
+    return jax.make_mesh((1, 1), ("data", "model"))

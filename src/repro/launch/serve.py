@@ -1,0 +1,62 @@
+"""Batched serving driver: continuous prefill+decode over a request queue.
+
+Minimal but real: fixed-capacity batch slots, greedy sampling, per-slot
+lengths, jitted prefill and decode steps. The decode step is the same
+function the dry-run lowers for the decode_32k / long_500k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray             # (T,) int32
+    max_new: int = 16
+    out: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+class BatchServer:
+    """Serves equal-length-prompt batches (the common benchmark setting)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: prefill(p, cfg, b, max_len=max_len))
+        self._decode = jax.jit(
+            lambda p, c, n, b: decode_step(p, cfg, c, n, b),
+            donate_argnums=(1,))
+
+    def serve(self, requests: List[Request]) -> List[Request]:
+        t0 = time.time()
+        prompts = np.stack([r.prompt for r in requests])   # (B, T)
+        b, t = prompts.shape
+        logits, cache = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(prompts)})
+        max_new = max(r.max_new for r in requests)
+        toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        outs = [toks]
+        for i in range(max_new - 1):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.int32(t + i),
+                                         {"tokens": toks})
+            toks = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            outs.append(toks)
+        gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
+        dt = time.time() - t0
+        for i, r in enumerate(requests):
+            r.out = gen[i, :r.max_new]
+            r.latency_s = dt
+        return requests

@@ -1,0 +1,153 @@
+"""ShapeDtypeStruct input builders for every (arch × shape × mesh) cell.
+
+Shape-only stand-ins (no device allocation), each carrying its
+NamedSharding, so ``jit(step).lower(*specs).compile()`` exercises the full
+production sharding without touching memory — the shannon/kernels dry-run
+pattern.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import sharding as shd
+from ..models import init_params, init_cache
+from ..models.config import ModelConfig, ShapeConfig
+from ..train.optim import init_state
+
+ENC_LEN = 1024            # audio-encoder frame count (stub frontend)
+
+
+def _sds(tree_shapes, tree_specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_shapes, tree_specs)
+
+
+def _rep_sds(shape, dtype, mesh):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, P()))
+
+
+def params_sds(cfg: ModelConfig, mesh: Mesh):
+    shapes = jax.eval_shape(lambda k: init_params(k, cfg),
+                            jax.random.PRNGKey(0))
+    specs = shd.param_specs(cfg, mesh, shapes)
+    return _sds(shapes, specs, mesh)
+
+
+def opt_state_sds(cfg: ModelConfig, mesh: Mesh, p_sds):
+    shapes = jax.eval_shape(init_state, p_sds)
+    # m / v inherit the param specs; step replicated
+    pspecs = shd.param_specs(cfg, mesh, p_sds)
+    specs = type(shapes)(step=P(), m=pspecs, v=pspecs)
+    return _sds(shapes, specs, mesh)
+
+
+def batch_sds(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+              grad_accum: int = 1) -> Dict[str, Any]:
+    """Training batches are MICROBATCH-MAJOR: (accum, B/accum, ...) with the
+    accum axis unsharded, so the grad-accum scan slices an unsharded axis
+    (slicing a sharded axis would all-gather the batch — see train/step.py).
+    """
+    specs = shd.batch_spec(cfg, mesh, shape)
+    b = shape.global_batch
+    out: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        t_text = 1
+    else:
+        t_text = shape.seq_len - (cfg.n_prefix if cfg.frontend == "vit"
+                                  else 0)
+
+    def mk(shape_suffix, spec, dtype):
+        if shape.kind == "train" and grad_accum > 1:
+            full = (grad_accum, b // grad_accum) + shape_suffix
+            spec = P(None, *spec)
+        else:
+            full = (b,) + shape_suffix
+        return jax.ShapeDtypeStruct(full, dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    out["tokens"] = mk((t_text,), specs["tokens"], jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = mk((t_text,), specs["labels"], jnp.int32)
+    if cfg.frontend == "vit" and shape.kind != "decode":
+        out["patches"] = mk((cfg.n_prefix, cfg.frontend_dim),
+                            specs["patches"], jnp.float32)
+    if cfg.frontend == "audio" and shape.kind != "decode":
+        out["frames"] = mk((ENC_LEN, cfg.frontend_dim), specs["frames"],
+                           jnp.float32)
+    return out
+
+
+def cache_sds(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    shapes = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           enc_len=ENC_LEN if cfg.n_enc_layers else 0))
+    specs = shd.cache_spec(cfg, mesh, shape)
+    return _sds(shapes, specs, mesh)
+
+
+def input_specs(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig, *,
+                grad_accum: int = 1) -> Tuple[Any, ...]:
+    """Positional SDS args for the step function of this cell kind."""
+    p = params_sds(cfg, mesh)
+    if shape.kind == "train":
+        o = opt_state_sds(cfg, mesh, p)
+        return (p, o, batch_sds(cfg, mesh, shape, grad_accum=grad_accum))
+    if shape.kind == "prefill":
+        return (p, batch_sds(cfg, mesh, shape))
+    # decode
+    c = cache_sds(cfg, mesh, shape)
+    cache_len = _rep_sds((), jnp.int32, mesh)
+    return (p, c, cache_len, batch_sds(cfg, mesh, shape))
+
+
+# ---------------------------------------------------------------------------
+# the paper's own workload cell (count + oblivious fetch + join-match)
+# ---------------------------------------------------------------------------
+
+def paper_db_step(relation, pattern, fetch_matrix, join_col_x, join_col_y):
+    """One oblivious query mix over a sharded share-relation.
+
+    relation:     (c, n, m, W, A) uint32 shares, n sharded over data
+    pattern:      (c, W, A) shares of the predicate
+    fetch_matrix: (c, l', n) shares of the one-hot fetch rows
+    join_col_*:   (c, nx|ny, W, A) join columns (ny sharded over model)
+    Returns (count_shares, fetched_shares, match_matrix_shares).
+    """
+    from ..core import automata, field
+    from ..core.shamir import Shares
+    rel = Shares(relation, 1)
+    pat = Shares(pattern, 1)
+    col0 = Shares(relation[:, :, 0], 1)
+    counts = automata.count_column(col0, pat)          # (c,)
+    c, n, m, w, a = relation.shape
+    fetched = field.matmul(fetch_matrix,
+                           relation.reshape(c, n, m * w * a))
+    mm = automata.match_matrix(Shares(join_col_x, 1),
+                               Shares(join_col_y, 1), method="aggregate")
+    return counts.values, fetched, mm.values
+
+
+def paper_db_specs(db_cfg, mesh: Mesh):
+    dp = shd.dp_axes(mesh)
+    c = db_cfg.n_shares
+    n, m = db_cfg.n_tuples, db_cfg.n_attrs
+    w, a = db_cfg.word_length, db_cfg.alphabet_size
+    nj = max(4096, n // 16)                      # join-column length
+    mk = lambda shape, spec: jax.ShapeDtypeStruct(
+        shape, jnp.uint32, sharding=NamedSharding(mesh, spec))
+    return (
+        mk((c, n, m, w, a), P(None, dp, None, None, None)),
+        mk((c, w, a), P()),
+        mk((c, db_cfg.fetch_rows, n), P(None, None, dp)),
+        mk((c, nj, w, a), P(None, dp, None, None)),
+        mk((c, nj, w, a), P(None, "model", None, None)),
+    )

@@ -1,0 +1,13 @@
+# Assigned-architecture model zoo: one functional LM covering dense / MoE /
+# SSM / hybrid / enc-dec / VLM families, plus the paper-integrated private
+# embedding lookup.
+from .config import (ModelConfig, ShapeConfig, ALL_SHAPES, TRAIN_4K,
+                     PREFILL_32K, DECODE_32K, LONG_500K)
+from .lm import (init_params, forward, train_loss, prefill, decode_step,
+                 init_cache)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "ALL_SHAPES", "TRAIN_4K", "PREFILL_32K",
+    "DECODE_32K", "LONG_500K", "init_params", "forward", "train_loss",
+    "prefill", "decode_step", "init_cache",
+]

@@ -1,0 +1,524 @@
+"""Core transformer layers: norms, RoPE variants, flash attention (GQA/MLA),
+MLPs and MoE. Pure JAX, dtype-explicit, pjit-friendly (no device logic here —
+sharding is applied by name in ``repro.sharding``).
+
+Attention is computed **blockwise** (online-softmax flash algorithm via
+``lax.scan`` over KV blocks) so the 32k/500k shape cells never materialize a
+(T×T) score tensor — this is what keeps the dry-run memory_analysis inside a
+v5e's HBM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Array:
+    return jnp.zeros((d,), jnp.float32)
+
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * (1.0 + w)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (neox-style full or partial rotary — chatglm's "RoPE 2d" applies the
+# rotation to half the head dim, leaving the rest pass-through)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, fraction: float, theta: float) -> Array:
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv)                       # (rot/2,)
+
+
+def apply_rope(x: Array, positions: Array, inv_freq: Array) -> Array:
+    """x: (..., T, n_heads, head_dim); positions: (..., T)."""
+    rot = inv_freq.shape[0] * 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., T, r/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x_rot.astype(jnp.float32), 2, axis=-1)
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                              axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (GQA) — lax.scan over KV blocks with online softmax
+# ---------------------------------------------------------------------------
+
+def _softcap(scores: Array, cap: float) -> Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(scores / cap)
+    return scores
+
+
+def flash_attention(q: Array, k: Array, v: Array, *,
+                    q_offset: Array | int = 0,
+                    kv_len: Optional[Array] = None,
+                    window: Optional[int] = None,
+                    causal: bool = True,
+                    block_k: int = 512,
+                    softcap: float = 0.0) -> Array:
+    """Blockwise attention.
+
+    q: (B, Tq, Hq, D); k, v: (B, Tk, Hkv, D). Hq % Hkv == 0 (GQA).
+    q_offset: absolute position of q[0] (decode: cache length).
+    kv_len:  number of valid kv entries (None = all of Tk).
+    window:  sliding-window width (None = full).
+    Returns (B, Tq, Hq, D).
+    """
+    b, tq, hq, d = q.shape
+    _, tk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    # f32-once upcast. (bf16 operands + preferred_element_type=f32 was
+    # evaluated in §Perf — XLA:CPU re-legalizes per block and the measured
+    # traffic REGRESSED 73→84 s on qwen train; on TPU the bf16 form would
+    # win — revisit with a real-hardware profile. Refuted here, reverted.)
+    qf = (q.astype(jnp.float32) * scale).reshape(b, tq, hkv, g, d)
+    qf = jnp.einsum("btkgd->bkgtd", qf)             # (B, Hkv, G, Tq, D)
+    kf = jnp.einsum("bskd->bksd", k.astype(jnp.float32))
+    vf = jnp.einsum("bskd->bksd", v.astype(jnp.float32))
+
+    block_k = min(block_k, tk)
+    n_blocks = (tk + block_k - 1) // block_k
+    tk_pad = n_blocks * block_k
+    if tk_pad != tk:
+        pad = [(0, 0), (0, 0), (0, tk_pad - tk), (0, 0)]
+        kf = jnp.pad(kf, pad)
+        vf = jnp.pad(vf, pad)
+    kf = kf.reshape(b, hkv, n_blocks, block_k, d)
+    vf = vf.reshape(b, hkv, n_blocks, block_k, d)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(tq)           # (Tq,)
+    valid_len = jnp.asarray(kv_len if kv_len is not None else tk)
+
+    def step(carry, blk):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, blk_idx = blk
+        kv_pos = blk_idx * block_k + jnp.arange(block_k)      # (bk,)
+        s = jnp.einsum("bkgtd,bksd->bkgts", qf, k_blk)        # scores
+        s = _softcap(s, softcap)
+        mask = kv_pos[None, :] < valid_len                    # padding
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - kv_pos[None, :] < window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgts,bksd->bkgtd", p, v_blk)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, tq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, tq, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kf.swapaxes(0, 2).swapaxes(1, 2),     # (n_blocks, B, Hkv, bk, D)
+         vf.swapaxes(0, 2).swapaxes(1, 2),
+         jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.einsum("bkgtd->btkgd", out).reshape(b, tq, hq, d)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: Array, k: Array, v: Array, *,
+                     kv_len: Array, window: Optional[Array],
+                     softcap: float = 0.0, n_chunks: int = 64) -> Array:
+    """Single-token attention against a (possibly sequence-sharded) cache.
+
+    Chunked log-sum-exp combine (§Perf opt): the cache is viewed as
+    (n_chunks, chunk); per-chunk max/sum/weighted-V are computed
+    independently and merged with LSE weights. When the cache's sequence
+    axis is sharded over the mesh "model" axis and n_chunks is a multiple
+    of its size, every per-chunk term is shard-LOCAL and the only
+    cross-shard traffic is the tiny (B,H,D)-sized combine — replacing the
+    full per-layer cache all-gather that the scan-flash path costs on a
+    sharded cache (measured 4.3 s -> ~0 of collective time on
+    qwen decode_32k; EXPERIMENTS.md §Perf).
+
+    q: (B, 1, Hq, D); k, v: (B, S, Hkv, D). Returns (B, 1, Hq, D).
+    """
+    b, t, hq, d = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    assert t == 1
+    nc = n_chunks
+    chunk = s // nc
+    scale = 1.0 / math.sqrt(d)
+    cdt = k.dtype
+    kc = k.reshape(b, nc, chunk, hkv, d)
+    vc = v.reshape(b, nc, chunk, hkv, d)
+    qf = (q.astype(jnp.float32) * scale).astype(cdt)
+    qf = qf.reshape(b, hkv, g, d)
+    # scores per chunk: (B, nc, Hkv, G, chunk), f32 accumulation
+    sc = jnp.einsum("bkgd,bnckd->bnkgc", qf, kc,
+                    preferred_element_type=jnp.float32)
+    sc = _softcap(sc, softcap)
+    pos = (jnp.arange(nc)[:, None] * chunk
+           + jnp.arange(chunk)[None, :])                  # (nc, chunk)
+    mask = pos < kv_len
+    if window is not None:
+        mask = mask & ((kv_len - 1) - pos < window)
+    sc = jnp.where(mask[None, :, None, None, :], sc, NEG_INF)
+    m_c = jnp.max(sc, axis=-1)                            # (B,nc,Hkv,G)
+    p = jnp.exp(sc - m_c[..., None])
+    l_c = jnp.sum(p, axis=-1)
+    acc_c = jnp.einsum("bnkgc,bnckd->bnkgd", p.astype(cdt), vc,
+                       preferred_element_type=jnp.float32)
+    m = jnp.max(m_c, axis=1)                              # (B,Hkv,G)
+    w_c = jnp.exp(m_c - m[:, None])                       # (B,nc,Hkv,G)
+    l = jnp.sum(w_c * l_c, axis=1)
+    out = jnp.sum(w_c[..., None] * acc_c, axis=1)
+    out = out / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (with optional QKV bias, QK-norm, sliding window)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def attention_qkv(p: dict, cfg: ModelConfig, x: Array, positions: Array,
+                  inv_freq: Array) -> Tuple[Array, Array, Array]:
+    b, t, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    return q, k, v
+
+
+def attention_forward(p: dict, cfg: ModelConfig, x: Array, *,
+                      positions: Array, inv_freq: Array,
+                      window: Optional[int], causal: bool = True,
+                      kv_cache: Optional[Tuple[Array, Array]] = None,
+                      cache_len: Optional[Array] = None,
+                      cross_kv: Optional[Tuple[Array, Array]] = None,
+                      ) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """Full/prefill path when kv_cache is None; decode path otherwise.
+
+    kv_cache: (k_cache, v_cache) of shape (B, S_max, Hkv, D); cache_len is the
+    number of valid entries BEFORE this call. Returns (out, new_cache).
+    """
+    b, t, _ = x.shape
+    q, k, v = attention_qkv(p, cfg, x, positions, inv_freq)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = flash_attention(q, k, v, causal=False,
+                              softcap=cfg.logit_softcap)
+        new_cache = None
+    elif kv_cache is None:
+        out = flash_attention(q, k, v, window=window,
+                              softcap=cfg.logit_softcap)
+        new_cache = None
+    else:
+        k_cache, v_cache = kv_cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_len, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_len, axis=1)
+        s_max = k_cache.shape[1]
+        if t == 1 and s_max >= 1024 and s_max % 64 == 0:
+            # chunked-LSE decode: shard-local per-chunk stats (see
+            # decode_attention docstring)
+            out = decode_attention(q, k_cache, v_cache,
+                                   kv_len=cache_len + t, window=window,
+                                   softcap=cfg.logit_softcap)
+        else:
+            out = flash_attention(q, k_cache, v_cache,
+                                  q_offset=cache_len, kv_len=cache_len + t,
+                                  window=window, softcap=cfg.logit_softcap)
+        new_cache = (k_cache, v_cache)
+    out = out.reshape(b, t, cfg.n_heads * cfg.resolved_head_dim)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (minicpm3 / deepseek-style multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 7)
+    qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+    return {
+        "wdq": dense_init(ks[0], d, cfg.q_lora_rank, dtype),
+        "q_norm": rmsnorm_init(cfg.q_lora_rank),
+        "wuq": dense_init(ks[1], cfg.q_lora_rank, cfg.n_heads * qk_head,
+                          dtype),
+        "wdkv": dense_init(ks[2], d,
+                           cfg.kv_lora_rank + cfg.qk_rope_head_dim, dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora_rank),
+        "wuk": dense_init(ks[3], cfg.kv_lora_rank,
+                          cfg.n_heads * cfg.qk_nope_head_dim, dtype),
+        "wuv": dense_init(ks[4], cfg.kv_lora_rank,
+                          cfg.n_heads * cfg.v_head_dim, dtype),
+        "wo": dense_init(ks[5], cfg.n_heads * cfg.v_head_dim, d, dtype),
+    }
+
+
+def mla_forward(p: dict, cfg: ModelConfig, x: Array, *, positions: Array,
+                inv_freq_rope: Array,
+                kv_cache: Optional[Tuple[Array, Array]] = None,
+                cache_len: Optional[Array] = None
+                ) -> Tuple[Array, Optional[Tuple[Array, Array]]]:
+    """MLA: queries from a low-rank latent; K/V expanded from a compressed
+    cache (c_kv, k_pe) — the cache holds kv_lora_rank + rope dims per token.
+
+    kv_cache: (c_kv_cache (B,S,r_kv), k_pe_cache (B,S,r_pe)).
+    """
+    b, t, _ = x.shape
+    nh = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+
+    ql = rmsnorm(x @ p["wdq"], p["q_norm"], cfg.norm_eps)
+    q = (ql @ p["wuq"]).reshape(b, t, nh, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, inv_freq_rope)
+
+    dkv = x @ p["wdkv"]                                   # (B,T,r_kv+r_pe)
+    c_kv = rmsnorm(dkv[..., :cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(dkv[..., None, cfg.kv_lora_rank:], positions,
+                      inv_freq_rope)[:, :, 0]             # (B,T,r_pe)
+
+    if kv_cache is not None:
+        ckv_cache, kpe_cache = kv_cache
+        ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+            ckv_cache, c_kv.astype(ckv_cache.dtype), cache_len, axis=1)
+        kpe_cache = jax.lax.dynamic_update_slice_in_dim(
+            kpe_cache, k_pe.astype(kpe_cache.dtype), cache_len, axis=1)
+        c_all, kpe_all = ckv_cache, kpe_cache
+        kv_len = cache_len + t
+        q_offset = cache_len
+        new_cache = (ckv_cache, kpe_cache)
+        if t == 1:
+            # ---- ABSORBED decode (DeepSeek-style; §Perf opt) ----------
+            # Fold W_uk into the query and W_uv out of the attention so
+            # scores/values contract directly against the COMPRESSED
+            # cache: 2·H·S·r flops instead of expanding S·r·H·(dn+dv)
+            # K/V rows every step, and — crucially — the only cross-shard
+            # traffic over a sequence-sharded cache is the softmax
+            # normalizer + an (B,H,r) psum, not a cache gather.
+            scale = 1.0 / math.sqrt(dn + dr)
+            # f32 einsums: bf16×bf16→f32 dots compile for TPU but XLA:CPU's
+            # DotThunk cannot execute them, and CPU is the test substrate.
+            # (bf16 operands measured t_mem 0.081 vs 0.125 s here — re-apply
+            # on real TPU; §Perf hillclimb 2 notes.)
+            wuk = p["wuk"].reshape(cfg.kv_lora_rank, nh, dn)
+            q_eff = jnp.einsum("bthd,rhd->bthr",
+                               q_nope.astype(jnp.float32),
+                               wuk.astype(jnp.float32))
+            s_lat = jnp.einsum("bthr,bsr->bhts", q_eff,
+                               c_all.astype(jnp.float32))
+            s_pe = jnp.einsum("bthd,bsd->bhts", q_pe.astype(jnp.float32),
+                              kpe_all.astype(jnp.float32))
+            s_all = (s_lat + s_pe) * scale               # (B,H,1,S) f32
+            pos = jnp.arange(c_all.shape[1])
+            mask = pos[None, None, None, :] < kv_len
+            s_all = jnp.where(mask, s_all, NEG_INF)
+            probs = jax.nn.softmax(s_all, axis=-1)
+            o_lat = jnp.einsum("bhts,bsr->bthr", probs,
+                               c_all.astype(jnp.float32))
+            wuv = p["wuv"].reshape(cfg.kv_lora_rank, nh, dv)
+            out = jnp.einsum("bthr,rhd->bthd", o_lat,
+                             wuv.astype(jnp.float32))
+            out = out.reshape(b, t, nh * dv).astype(x.dtype)
+            return out @ p["wo"], new_cache
+    else:
+        c_all, kpe_all = c_kv, k_pe
+        kv_len = None
+        q_offset = 0
+        new_cache = None
+
+    # expand K/V from the compressed cache (naive MLA — used for
+    # prefill/train where q-length makes expansion compute-optimal)
+    s = c_all.shape[1]
+    k_nope = (c_all @ p["wuk"]).reshape(b, s, nh, dn)
+    v = (c_all @ p["wuv"]).reshape(b, s, nh, dv)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(kpe_all[:, :, None, :],
+                                          (b, s, nh, dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    # pad V up to the QK head dim so flash_attention can share one D
+    out = flash_attention(q_full, k,
+                          jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                      (0, dn + dr - dv))),
+                          q_offset=q_offset, kv_len=kv_len)
+    out = out[..., :dv].reshape(b, t, nh * dv)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"w_gate": dense_init(ks[0], d, f, dtype),
+            "w_up": dense_init(ks[1], d, f, dtype),
+            "w_down": dense_init(ks[2], f, d, dtype)}
+
+
+def mlp_forward(p: dict, x: Array, act: str = "silu") -> Array:
+    gate = x @ p["w_gate"]
+    up = x @ p["w_up"]
+    if act == "silu":
+        h = jax.nn.silu(gate) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        h = jax.nn.gelu(gate, approximate=True) * up
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k routing). Baseline dispatch: one-hot einsum (GShard-style).
+# Optimized dispatch ("sort"): argsort + capacity gather (see §Perf).
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / math.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, f * cfg.n_shared_experts, dtype)
+    return p
+
+
+def _moe_einsum_dispatch(p: dict, cfg: ModelConfig, x2: Array,
+                         weights: Array, idx: Array) -> Array:
+    """Dense one-hot dispatch: every token-expert pair through an einsum."""
+    n, d = x2.shape
+    e = cfg.n_experts
+    comb = jnp.zeros((n, e), x2.dtype)
+    for j in range(cfg.top_k):
+        comb = comb + jax.nn.one_hot(idx[:, j], e,
+                                     dtype=x2.dtype) * weights[:, j:j + 1]
+    xe = jnp.einsum("ne,nd->end", (comb > 0).astype(x2.dtype), x2)
+    h = jnp.einsum("end,edf->enf", xe, p["w_gate"])
+    u = jnp.einsum("end,edf->enf", xe, p["w_up"])
+    h = jax.nn.silu(h) * u
+    y = jnp.einsum("enf,efd->end", h, p["w_down"])
+    return jnp.einsum("end,ne->nd", y, comb).astype(x2.dtype)
+
+
+def _moe_sort_dispatch(p: dict, cfg: ModelConfig, x2: Array,
+                       weights: Array, idx: Array) -> Array:
+    """Capacity-based sort/gather dispatch: compute only top-k·T expert rows.
+
+    FLOPs: E·C·(3·d·f) with C = ceil(T·k/E · capacity_factor) — the useful
+    compute, vs. the einsum path's extra O(T·E·d) dispatch matmuls.
+    """
+    n, d = x2.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(math.ceil(n * k / e * cfg.capacity_factor))
+    flat_expert = idx.reshape(-1)                          # (n·k,)
+    flat_weight = weights.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sw = flat_expert[order], flat_token[order], flat_weight[order]
+    pos = jnp.arange(n * k) - jnp.searchsorted(se, se, side="left")
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)        # overflow slot
+    buf = jnp.zeros((e * cap + 1, d), x2.dtype).at[slot].set(x2[st])
+    xe = buf[:e * cap].reshape(e, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(e * cap, d)
+    y = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+    out = jnp.zeros((n, d), x2.dtype)
+    out = out.at[st].add(y[slot] * sw[:, None].astype(y.dtype) *
+                         keep[:, None])
+    return out
+
+
+def moe_forward(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    b, t, d = x.shape
+    x2 = x.reshape(b * t, d)
+    logits = (x2.astype(jnp.float32) @ p["router"])
+    weights, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), cfg.top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    weights = weights.astype(x.dtype)
+    if cfg.moe_dispatch == "sort":
+        y = _moe_sort_dispatch(p, cfg, x2, weights, idx)
+    else:
+        y = _moe_einsum_dispatch(p, cfg, x2, weights, idx)
+    if cfg.n_shared_experts:
+        y = y + mlp_forward(p["shared"], x2, cfg.act)
+    return y.reshape(b, t, d)

@@ -1,0 +1,367 @@
+"""Unified LM: decoder-only, encoder-decoder, VLM/audio-prefixed, SSM and
+hybrid families behind one functional API.
+
+    params = init_params(key, cfg)
+    loss, metrics = train_loss(params, cfg, batch)
+    logits, cache = prefill(params, cfg, batch)
+    logits, cache = decode_step(params, cfg, cache, cache_len, tokens)
+
+Layers are stacked (leading L axis) and driven by ``lax.scan`` so the HLO is
+O(1) in depth (fast multi-pod compiles); ``cfg.remat`` wraps the block body in
+``jax.checkpoint`` for training. Per-layer heterogeneity (gemma3's 5:1
+local:global window pattern) is expressed as a scanned per-layer window array
+— global layers get window = 2³¹−1, so one homogeneous block program serves
+every layer (no lax.switch, no per-layer HLO duplication).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from . import layers as L
+from . import ssm as S
+
+Array = jax.Array
+GLOBAL_WINDOW = np.int32(2**31 - 1)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, *, cross: bool = False,
+                causal_attn: bool = True) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": L.rmsnorm_init(cfg.d_model)}
+    fam = cfg.family
+    if fam == "ssm":
+        p["ssm"] = S.ssm_init(ks[0], cfg, dt)
+        return p
+    if cfg.attn_type == "mla":
+        p["attn"] = L.mla_init(ks[0], cfg, dt)
+    else:
+        p["attn"] = L.attention_init(ks[0], cfg, dt)
+    if cfg.hybrid_ssm:
+        p["ssm"] = S.ssm_init(ks[1], cfg, dt)
+        p["mix_a"] = jnp.zeros((), jnp.float32)
+        p["mix_s"] = jnp.zeros((), jnp.float32)
+    if cross:
+        p["cross"] = L.attention_init(ks[2], cfg, dt)
+        p["ln_cross"] = L.rmsnorm_init(cfg.d_model)
+    p["ln2"] = L.rmsnorm_init(cfg.d_model)
+    if cfg.n_experts and fam == "moe":
+        p["moe"] = L.moe_init(ks[3], cfg, dt)
+    else:
+        p["mlp"] = L.mlp_init(ks[3], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    k_emb, k_blocks, k_enc, k_head, k_fe = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32)
+                  * (1.0 / math.sqrt(cfg.d_model))).astype(dt),
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    cross = cfg.n_enc_layers > 0
+    blk_keys = jax.random.split(k_blocks, cfg.n_layers)
+    params["blocks"] = jax.vmap(
+        lambda k: _block_init(k, cfg, cross=cross))(blk_keys)
+    if cross:
+        enc_cfg = cfg  # same dims for encoder stack
+        enc_keys = jax.random.split(k_enc, cfg.n_enc_layers)
+        params["enc_blocks"] = jax.vmap(
+            lambda k: _block_init(k, enc_cfg))(enc_keys)
+        params["enc_norm"] = L.rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_size,
+                                         dt)
+    if cfg.frontend:
+        params["frontend_proj"] = L.dense_init(k_fe, cfg.frontend_dim,
+                                               cfg.d_model, dt)
+    return params
+
+
+def layer_windows(cfg: ModelConfig) -> Array:
+    """Per-layer sliding-window widths; GLOBAL_WINDOW means full attention."""
+    ws = []
+    for i in range(cfg.n_layers):
+        w = cfg.window_for_layer(i)
+        ws.append(GLOBAL_WINDOW if w is None else np.int32(w))
+    return jnp.asarray(ws, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# block application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _block_apply(cfg: ModelConfig, p: dict, x: Array, *, positions: Array,
+                 inv_freq: Array, window: Array, mode: str,
+                 cache: Optional[dict], cache_len,
+                 enc_out: Optional[Array],
+                 causal: bool = True) -> Tuple[Array, Optional[dict]]:
+    """mode: 'train' (no cache) | 'prefill' (build cache) | 'decode' (use)."""
+    new_cache: Dict[str, Any] = {}
+    fam = cfg.family
+    if fam == "ssm":
+        h, sc = S.ssm_forward(
+            p["ssm"], cfg, L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+            cache=cache["ssm"] if mode == "decode" else None,
+            return_cache=(mode == "prefill"))
+        if sc is not None:
+            new_cache["ssm"] = sc
+        return x + h, (new_cache or None)
+
+    y = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    win = None if cfg.sliding_window is None else window
+    kv_in = cache["kv"] if mode in ("prefill", "decode") else None
+    if cfg.attn_type == "mla":
+        a, kv = L.mla_forward(p["attn"], cfg, y, positions=positions,
+                              inv_freq_rope=inv_freq,
+                              kv_cache=kv_in, cache_len=cache_len)
+    else:
+        a, kv = L.attention_forward(p["attn"], cfg, y, positions=positions,
+                                    inv_freq=inv_freq, window=win,
+                                    causal=causal,
+                                    kv_cache=kv_in, cache_len=cache_len)
+    if kv is not None:
+        new_cache["kv"] = kv
+    if cfg.hybrid_ssm:
+        s_out, sc = S.ssm_forward(
+            p["ssm"], cfg, y,
+            cache=cache["ssm"] if mode == "decode" else None,
+            return_cache=(mode == "prefill"))
+        if sc is not None:
+            new_cache["ssm"] = sc
+        ga = jax.nn.sigmoid(p["mix_a"]).astype(a.dtype)
+        gs = jax.nn.sigmoid(p["mix_s"]).astype(a.dtype)
+        x = x + a * ga + s_out * gs
+    else:
+        x = x + a
+    if cfg.n_enc_layers and (enc_out is not None or mode == "decode"):
+        yc = L.rmsnorm(x, p["ln_cross"], cfg.norm_eps)
+        if mode == "decode":
+            cross_kv = cache["cross"]
+        else:
+            # compute cross K/V from encoder output (train/prefill)
+            b, te, _ = enc_out.shape
+            hd = cfg.resolved_head_dim
+            ck = (enc_out @ p["cross"]["wk"]).reshape(b, te, cfg.n_kv_heads,
+                                                      hd)
+            cv = (enc_out @ p["cross"]["wv"]).reshape(b, te, cfg.n_kv_heads,
+                                                      hd)
+            if cfg.qkv_bias:
+                ck += p["cross"]["bk"].reshape(1, 1, cfg.n_kv_heads, hd)
+                cv += p["cross"]["bv"].reshape(1, 1, cfg.n_kv_heads, hd)
+            cross_kv = (ck, cv)
+        if mode in ("prefill", "decode"):
+            new_cache["cross"] = cross_kv
+        c, _ = L.attention_forward(p["cross"], cfg, yc, positions=positions,
+                                   inv_freq=inv_freq, window=None,
+                                   cross_kv=cross_kv)
+        x = x + c
+    y2 = L.rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        x = x + L.moe_forward(p["moe"], cfg, y2)
+    else:
+        x = x + L.mlp_forward(p["mlp"], y2, cfg.act)
+    return x, (new_cache or None)
+
+
+def _run_blocks(cfg: ModelConfig, blocks: dict, x: Array, *,
+                positions: Array, caches: Optional[dict], cache_len,
+                enc_out: Optional[Array], mode: str) -> Tuple[Array,
+                                                              Optional[dict]]:
+    inv_freq = L.rope_freqs(
+        cfg.resolved_head_dim if cfg.attn_type != "mla"
+        else cfg.qk_rope_head_dim,
+        cfg.rope_fraction, cfg.rope_theta)
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        if caches is None:
+            lp, win = xs
+            cache_l = None
+        else:
+            lp, win, cache_l = xs
+        h, nc = _block_apply(cfg, lp, carry, positions=positions,
+                             inv_freq=inv_freq, window=win, mode=mode,
+                             cache=cache_l, cache_len=cache_len,
+                             enc_out=enc_out)
+        return h, nc
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    xs = (blocks, windows) if caches is None else (blocks, windows, caches)
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, xs)
+    else:
+        new_list = []
+        for i in range(cfg.n_layers):
+            xi = jax.tree.map(lambda a: a[i], xs)
+            x, nc = body(x, xi)
+            new_list.append(nc)
+        new_caches = (jax.tree.map(lambda *a: jnp.stack(a), *new_list)
+                      if new_list and new_list[0] is not None else None)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(params: dict, cfg: ModelConfig, tokens: Array) -> Array:
+    if cfg.private_embed:
+        from .private_embed import private_lookup_inline
+        x = private_lookup_inline(params, cfg, tokens)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _prefix_inputs(params: dict, cfg: ModelConfig, batch: dict) -> Array:
+    """Assemble the input sequence: [modality prefix] + token embeddings."""
+    x = _embed_tokens(params, cfg, batch["tokens"])
+    if cfg.frontend == "vit" and "patches" in batch:
+        pre = (batch["patches"].astype(_dtype(cfg))
+               @ params["frontend_proj"])
+        x = jnp.concatenate([pre, x], axis=1)
+    return x
+
+
+def _logits(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return logits.astype(jnp.float32)
+
+
+def _encode(params: dict, cfg: ModelConfig, frames: Array) -> Array:
+    """Audio/text encoder stack (seamless): bidirectional attention."""
+    x = frames.astype(_dtype(cfg)) @ params["frontend_proj"]
+    positions = jnp.arange(x.shape[1])[None, :]
+    inv_freq = L.rope_freqs(cfg.resolved_head_dim, cfg.rope_fraction,
+                            cfg.rope_theta)
+
+    def body(carry, lp):
+        h, _ = _block_apply(cfg, lp, carry, positions=positions,
+                            inv_freq=inv_freq, window=GLOBAL_WINDOW,
+                            mode="train", cache=None, cache_len=None,
+                            enc_out=None, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# public API: train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, cfg: ModelConfig, batch: dict) -> Array:
+    """Training/eval forward -> logits (B, T, V)."""
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = _encode(params, cfg, batch["frames"])
+    x = _prefix_inputs(params, cfg, batch)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, _ = _run_blocks(cfg, params["blocks"], x, positions=positions,
+                       caches=None, cache_len=None, enc_out=enc_out,
+                       mode="train")
+    return _logits(params, cfg, x)
+
+
+def train_loss(params: dict, cfg: ModelConfig, batch: dict
+               ) -> Tuple[Array, dict]:
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.frontend == "vit" and "patches" in batch:
+        logits = logits[:, batch["patches"].shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    take = jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    loss = -jnp.sum(take * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"loss": loss, "tokens": jnp.sum(mask)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int = 0) -> dict:
+    """Stacked (L-leading) decode cache for the arch family."""
+    dt = _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    cache: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        if cfg.attn_type == "mla":
+            cache["kv"] = (
+                jnp.zeros((cfg.n_layers, batch, max_len, cfg.kv_lora_rank),
+                          dt),
+                jnp.zeros((cfg.n_layers, batch, max_len,
+                           cfg.qk_rope_head_dim), dt))
+        else:
+            cache["kv"] = (
+                jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd),
+                          dt),
+                jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads, hd),
+                          dt))
+    if cfg.family == "ssm" or cfg.hybrid_ssm:
+        sc = S.ssm_cache_init(cfg, batch, dt)
+        cache["ssm"] = jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), sc)
+    if cfg.n_enc_layers:
+        cache["cross"] = (
+            jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, hd), dt),
+            jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_kv_heads, hd), dt))
+    return cache
+
+
+def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
+            max_len: Optional[int] = None) -> Tuple[Array, dict]:
+    """Run the prompt through the model, returning last-token logits and a
+    decode-ready cache of capacity ``max_len`` (default: prompt length)."""
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = _encode(params, cfg, batch["frames"])
+    x = _prefix_inputs(params, cfg, batch)
+    b, t, _ = x.shape
+    max_len = max_len or t
+    positions = jnp.arange(t)[None, :]
+    caches = init_cache(cfg, b, max_len,
+                        enc_len=enc_out.shape[1] if enc_out is not None
+                        else 0)
+    x, new_caches = _run_blocks(cfg, params["blocks"], x,
+                                positions=positions,
+                                caches=caches, cache_len=jnp.int32(0),
+                                enc_out=enc_out, mode="prefill")
+    return _logits(params, cfg, x[:, -1:]), (new_caches or caches)
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict, cache_len,
+                batch: dict) -> Tuple[Array, dict]:
+    """One-token autoregressive step against a filled cache."""
+    x = _embed_tokens(params, cfg, batch["tokens"])
+    positions = (jnp.asarray(cache_len)[None, None]
+                 + jnp.arange(x.shape[1])[None, :])
+    x, new_caches = _run_blocks(cfg, params["blocks"], x,
+                                positions=positions, caches=cache,
+                                cache_len=jnp.asarray(cache_len, jnp.int32),
+                                enc_out=None, mode="decode")
+    return _logits(params, cfg, x), new_caches

@@ -1,0 +1,75 @@
+"""Private embedding lookup — the paper's §3.2.1 selection as an LM layer.
+
+A token id is a one-hot row over the vocabulary: exactly the paper's unary
+encoding. Secret-share the one-hot (degree 1, fresh polynomials per query),
+hold Shamir shares of the fixed-point-quantized embedding table at each
+"cloud" (mesh slice), and the lookup is the oblivious selection
+``Σ_v onehot_share[v] · E_share[v, :]`` — a share-space matmul (ss_matmul
+hotspot). The serving cloud learns neither the token id (access-pattern
+hidden: every vocab row is touched identically) nor the embedding row.
+
+Fixed-point: values quantized at scale 2¹², range ±2¹⁸ ≪ p/2, so signed
+round-trip through F_p is exact. Degree after lookup = 2 ⇒ 3 clouds suffice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import field, shamir
+from ..core.shamir import Shares
+from .config import ModelConfig
+
+QUANT_SCALE = 4096.0  # 2**12
+
+
+def quantize_to_field(x: jax.Array) -> jax.Array:
+    """float -> fixed-point F_p element (signed values wrap mod p)."""
+    q = jnp.round(x.astype(jnp.float32) * QUANT_SCALE).astype(jnp.int64)
+    return (q % jnp.int64(int(field.P))).astype(field.DTYPE)
+
+
+def dequantize_from_field(x: jax.Array) -> jax.Array:
+    return field.from_signed(x).astype(jnp.float32) / QUANT_SCALE
+
+
+def setup_private_embed(key, embed: jax.Array, *, n_shares: int = 4,
+                        degree: int = 1) -> Shares:
+    """DB-owner-side, one-time: share the quantized embedding table."""
+    return shamir.share(key, quantize_to_field(embed), n_shares=n_shares,
+                        degree=degree)
+
+
+def private_lookup(key, embed_shares: Shares, tokens: jax.Array
+                   ) -> jax.Array:
+    """Oblivious lookup of ``tokens`` (any shape) -> float32 embeddings."""
+    v = embed_shares.shape[0]
+    flat = tokens.reshape(-1)
+    onehot = jax.nn.one_hot(flat, v, dtype=jnp.uint32)
+    q_sh = shamir.share(key, onehot, n_shares=embed_shares.n_shares,
+                        degree=embed_shares.degree)          # (c, n, V)
+    picked = field.matmul(q_sh.values, embed_shares.values)  # (c, n, D)
+    out = shamir.interpolate(
+        Shares(picked, q_sh.degree + embed_shares.degree))
+    return dequantize_from_field(out).reshape(*tokens.shape, -1)
+
+
+def private_lookup_inline(params: dict, cfg: ModelConfig, tokens: jax.Array
+                          ) -> jax.Array:
+    """In-graph variant used when ``cfg.private_embed`` is set.
+
+    If the params carry pre-shared tables (``embed_shares``), use them;
+    otherwise quantize+share the plaintext table on the fly (test path).
+    The lookup result matches ``take(embed)`` to quantization error (2⁻¹²).
+    """
+    key = jax.random.PRNGKey(0)  # fresh per-call keys come from the server
+    if "embed_shares" in params:
+        sh = Shares(params["embed_shares"], 1)
+    else:
+        sh = setup_private_embed(key, params["embed"], n_shares=4)
+    out = private_lookup(jax.random.fold_in(key, 1), sh, tokens)
+    return jax.lax.stop_gradient(out).astype(jnp.dtype(cfg.dtype))

@@ -1,0 +1,243 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute inside fixed-size chunks (MXU-friendly einsums) + a linear recurrence
+over chunk states (``lax.scan``). Decode is the O(1)-per-token recurrent
+update on an (H, P, N) state — the SSM analog of a KV cache, and the reason
+``long_500k`` is runnable for SSM/hybrid archs.
+
+TP note: all head-indexed parameters are stored **head-shaped** — (D, H, P)
+instead of (D, H·P) — so sharding the H axis on the mesh "model" axis is a
+pure layout choice (no misaligned flat-dim reshapes, no surprise
+collectives). See repro/sharding.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+Array = jax.Array
+
+
+class SSMCache(NamedTuple):
+    """Decode-time recurrent state."""
+    conv_x: Array   # (B, k-1, H, P) rolling conv buffer for x
+    conv_B: Array   # (B, k-1, N)
+    conv_C: Array   # (B, k-1, N)
+    state: Array    # (B, H, P, N)
+
+
+def ssm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    n = cfg.ssm_state
+    h = cfg.ssm_n_heads
+    pd = cfg.ssm_head_dim
+    ks = jax.random.split(key, 8)
+    scale = 1.0 / math.sqrt(d)
+    dt = jnp.exp(jax.random.uniform(ks[6], (h,), jnp.float32)
+                 * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, h, pd), jnp.float32)
+                * scale).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d, h, pd), jnp.float32)
+                * scale).astype(dtype),
+        "w_B": dense_init(ks[2], d, n, dtype),
+        "w_C": dense_init(ks[3], d, n, dtype),
+        "w_dt": dense_init(ks[4], d, h, dtype),
+        "conv_x": (jax.random.normal(ks[5], (cfg.ssm_conv, h, pd),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_B": (jax.random.normal(ks[7], (cfg.ssm_conv, n),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (cfg.ssm_conv, n),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_bx": jnp.zeros((h, pd), dtype),
+        "conv_bB": jnp.zeros((n,), dtype),
+        "conv_bC": jnp.zeros((n,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": jnp.zeros((h, pd), jnp.float32),
+        "out_proj": (jax.random.normal(ks[6], (h, pd, d), jnp.float32)
+                     * (1.0 / math.sqrt(h * pd))).astype(dtype),
+    }
+
+
+def _conv1d(x: Array, w: Array, b: Array, hist: Optional[Array]) -> Array:
+    """Causal depthwise conv along axis 1. x: (B, T, ...ch); w: (k, ...ch)."""
+    k = w.shape[0]
+    if hist is None:
+        pad_shape = (x.shape[0], k - 1) + x.shape[2:]
+        hist = jnp.zeros(pad_shape, x.dtype)
+    xp = jnp.concatenate([hist.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _rmsnorm_hp(x: Array, w: Array, eps: float) -> Array:
+    """RMS norm over the joint (H, P) feature dims."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=(-2, -1), keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w)).astype(x.dtype)
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., L) -> (..., L, L) lower-tri cumulative segment sums."""
+    cs = jnp.cumsum(a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    li = jnp.arange(a.shape[-1])
+    mask = li[:, None] >= li[None, :]
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_chunked(x: Array, a_dt: Array, B: Array, C: Array, *,
+                chunk: int, init_state: Optional[Array] = None
+                ) -> Tuple[Array, Array]:
+    """Chunked SSD scan.
+
+    x:    (b, T, H, P)  — dt-weighted inputs
+    a_dt: (b, T, H)     — dt·A (negative)
+    B, C: (b, T, N)     — single group, broadcast over heads
+    Returns (y (b,T,H,P), final_state (b,H,P,N)).
+    """
+    b, T, H, P = x.shape
+    N = B.shape[-1]
+    nc = T // chunk
+    assert nc * chunk == T, (T, chunk)
+    xs = x.reshape(b, nc, chunk, H, P)
+    As = a_dt.reshape(b, nc, chunk, H).transpose(0, 3, 1, 2)   # (b,H,nc,L)
+    Bs = B.reshape(b, nc, chunk, N)
+    Cs = C.reshape(b, nc, chunk, N)
+    A_cum = jnp.cumsum(As, axis=-1)                            # (b,H,nc,L)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(As))                                   # (b,H,nc,L,L)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cs, Bs)             # (b,nc,L,L)
+    y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp",
+                        scores, L, xs.astype(jnp.float32))
+
+    # 2) chunk-final states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)            # (b,H,nc,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Bs, decay_states, xs.astype(jnp.float32))
+
+    # 3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(A_cum[..., -1])                      # (b,H,nc)
+    s0 = (jnp.zeros((b, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                          # (b,H,P,N),(b,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                      # emit prev
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (b,nc,H,P,N)
+
+    # 4) inter-chunk output
+    out_decay = jnp.exp(A_cum)                                 # (b,H,nc,L)
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp",
+                       Cs, prev_states, out_decay)
+    y = (y_diag + y_off).reshape(b, T, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(p: dict, cfg: ModelConfig, u: Array, *,
+                cache: Optional[SSMCache] = None,
+                return_cache: bool = False
+                ) -> Tuple[Array, Optional[SSMCache]]:
+    """Full Mamba-2 block.
+
+    cache=None & return_cache=False : training (chunked SSD, no state out)
+    cache=None & return_cache=True  : prefill (chunked SSD + decode cache)
+    cache=SSMCache                  : one-token recurrent decode
+    """
+    b, t, _ = u.shape
+    n, h = cfg.ssm_state, cfg.ssm_n_heads
+    pd = cfg.ssm_head_dim
+    z = jnp.einsum("btd,dhp->bthp", u, p["w_z"])
+    x_raw = jnp.einsum("btd,dhp->bthp", u, p["w_x"])
+    B_raw = u @ p["w_B"]
+    C_raw = u @ p["w_C"]
+    dt = jax.nn.softplus((u @ p["w_dt"]).astype(jnp.float32)
+                         + p["dt_bias"])                         # (b,t,h)
+    A = -jnp.exp(p["A_log"])                                     # (h,)
+
+    if cache is None:
+        x = _conv1d(x_raw, p["conv_x"], p["conv_bx"], None)
+        Bm = _conv1d(B_raw, p["conv_B"], p["conv_bB"], None).astype(
+            jnp.float32)
+        Cm = _conv1d(C_raw, p["conv_C"], p["conv_bC"], None).astype(
+            jnp.float32)
+        chunk = min(cfg.ssm_chunk, t)
+        pad_t = (chunk - t % chunk) % chunk
+        if pad_t:
+            x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+            Bm = jnp.pad(Bm, ((0, 0), (0, pad_t), (0, 0)))
+            Cm = jnp.pad(Cm, ((0, 0), (0, pad_t), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad_t), (0, 0)))
+        else:
+            dt_p = dt
+        y, final = ssd_chunked(
+            (x.astype(jnp.float32) * dt_p[..., None]).astype(x.dtype),
+            dt_p * A, Bm, Cm, chunk=chunk)
+        y = y[:, :t]
+        y = y + x[:, :t].astype(jnp.float32) * p["D"][None, None, :, None]
+        if return_cache:
+            k = cfg.ssm_conv
+
+            def hist(v):
+                hv = v[:, max(t - (k - 1), 0):]
+                if t < k - 1:
+                    pad = [(0, 0), (k - 1 - t, 0)] + [(0, 0)] * (v.ndim - 2)
+                    hv = jnp.pad(hv, pad)
+                return hv
+
+            new_cache = SSMCache(conv_x=hist(x_raw), conv_B=hist(B_raw),
+                                 conv_C=hist(C_raw), state=final)
+        else:
+            new_cache = None
+    else:
+        # single-token recurrent update
+        assert t == 1
+        k = cfg.ssm_conv
+
+        def step_conv(hist_buf, new, w, bias):
+            buf = jnp.concatenate([hist_buf.astype(new.dtype), new], axis=1)
+            val = sum(buf[:, i] * w[i][None] for i in range(k))
+            return jax.nn.silu(val + bias), buf[:, 1:]
+
+        xv, cx = step_conv(cache.conv_x, x_raw, p["conv_x"], p["conv_bx"])
+        Bv, cb = step_conv(cache.conv_B, B_raw, p["conv_B"], p["conv_bB"])
+        Cv, cc = step_conv(cache.conv_C, C_raw, p["conv_C"], p["conv_bC"])
+        dA = jnp.exp(dt[:, 0] * A[None])                         # (b,h)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         Bv.astype(jnp.float32),
+                         xv.astype(jnp.float32))
+        state = cache.state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state,
+                       Cv.astype(jnp.float32))[:, None]
+        y = y + xv[:, None].astype(jnp.float32) * p["D"][None, None, :, None]
+        new_cache = SSMCache(conv_x=cx, conv_B=cb, conv_C=cc, state=state)
+
+    y = _rmsnorm_hp(y.astype(u.dtype)
+                    * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype),
+                    p["norm"], cfg.norm_eps)
+    return jnp.einsum("bthp,hpd->btd", y, p["out_proj"]), new_cache
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    return SSMCache(
+        conv_x=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_n_heads,
+                          cfg.ssm_head_dim), dtype),
+        conv_B=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_state), dtype),
+        conv_C=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_state), dtype),
+        state=jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_head_dim,
+                         cfg.ssm_state), jnp.float32))

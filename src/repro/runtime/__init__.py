@@ -1,0 +1,3 @@
+from .mapreduce import MapReduceRunner, WorkerPool, TaskResult
+
+__all__ = ["MapReduceRunner", "WorkerPool", "TaskResult"]

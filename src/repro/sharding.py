@@ -1,0 +1,216 @@
+"""Named-axis sharding rules for every arch family × shape cell.
+
+Mesh axes: ``("data", "model")`` single-pod, ``("pod", "data", "model")``
+multi-pod. Batch (or sequence, when batch is unshardable) spreads over
+``pod``×``data``; parameters spread over ``model``.
+
+Divisibility-driven fallbacks (recorded per-arch in EXPERIMENTS.md §Dry-run):
+  * attention heads shard on ``model`` iff n_heads % model == 0
+    (else attention weights replicate — vocab/FFN still shard);
+  * KV heads shard iff n_kv_heads % model == 0, else KV weights replicate
+    (the Megatron "replicated-KV" GQA trick);
+  * KV *caches* whose head axis cannot shard are **context-parallel**:
+    the sequence axis shards on ``model`` (baseline: XLA gathers; the
+    shard_map ring-combine is a §Perf hillclimb);
+  * vocab shards iff vocab % model == 0, else the embedding shards on
+    d_model;
+  * MoE experts shard (EP) iff n_experts % model == 0, else expert FFN dim
+    shards (TP);
+  * SSM heads shard iff ssm_n_heads % model == 0 (head-shaped params make
+    this a pure layout choice — see models/ssm.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .models.config import ModelConfig, ShapeConfig
+
+Rep = P()
+
+
+def dp_axes(mesh: Mesh):
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def model_size(mesh: Mesh) -> int:
+    return int(mesh.shape["model"])
+
+
+class Divisibility:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        m = model_size(mesh)
+        self.m = m
+        self.q = cfg.n_heads % m == 0
+        self.kv = cfg.n_kv_heads % m == 0
+        self.ff = cfg.d_ff % m == 0 and cfg.d_ff > 0
+        self.experts = cfg.n_experts % m == 0 and cfg.n_experts > 0
+        self.vocab = cfg.vocab_size % m == 0
+        self.d = cfg.d_model % m == 0
+        self.ssm_h = (cfg.ssm_n_heads % m == 0
+                      if (cfg.family == "ssm" or cfg.hybrid_ssm) else False)
+        self.mla_q = cfg.attn_type == "mla" and cfg.n_heads % m == 0
+
+
+def _attn_spec(name: str, ndim: int, div: Divisibility) -> P:
+    """Specs for attention leaves; leading L axis already accounted (ndim)."""
+    lead = (None,) * (ndim - 2)
+    if name in ("wq", "wuq"):
+        return P(*lead, None, "model") if div.q else Rep
+    if name in ("wk", "wv"):
+        return P(*lead, None, "model") if div.kv else Rep
+    if name in ("wuk", "wuv"):
+        return P(*lead, None, "model") if div.q else Rep
+    if name == "wo":
+        return P(*lead, "model", None) if div.q else Rep
+    if name == "bq":
+        return P(*(None,) * (ndim - 1), "model") if div.q else Rep
+    if name in ("bk", "bv"):
+        return P(*(None,) * (ndim - 1), "model") if div.kv else Rep
+    return Rep  # norms, wdq, wdkv, scalars
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_tree) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays)."""
+    div = Divisibility(cfg, mesh)
+
+    def rule(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = names[-1]
+        ndim = len(leaf.shape)
+        in_block = any(n in ("blocks", "enc_blocks") for n in names)
+        lead = (None,) * (ndim - 2)
+        if name == "embed":
+            if div.vocab:
+                return P("model", None)
+            return P(None, "model") if div.d else Rep
+        if name == "lm_head":
+            if div.vocab:
+                return P(None, "model")
+            return P("model", None) if div.d else Rep
+        if name == "frontend_proj":
+            return P(None, "model") if div.d else Rep
+        if not in_block:
+            return Rep
+        # ---- inside a (stacked) block: names[1] is the submodule ----------
+        if "attn" in names or "cross" in names:
+            return _attn_spec(name, ndim, div)
+        if "moe" in names and "shared" not in names:
+            if name == "router":
+                return Rep
+            if name in ("w_gate", "w_up"):        # (L, E, D, F)
+                if div.experts:
+                    return P(None, "model", None, None)
+                return P(None, None, None, "model") if div.ff else Rep
+            if name == "w_down":                   # (L, E, F, D)
+                if div.experts:
+                    return P(None, "model", None, None)
+                return P(None, None, "model", None) if div.ff else Rep
+            # shared expert falls through to mlp rules below
+        if "mlp" in names or "shared" in names:
+            if name in ("w_gate", "w_up"):         # (L, D, F)
+                return P(*lead, None, "model") if div.ff else Rep
+            if name == "w_down":                   # (L, F, D)
+                return P(*lead, "model", None) if div.ff else Rep
+            return Rep
+        if "ssm" in names:
+            if not div.ssm_h:
+                return Rep
+            if name in ("w_z", "w_x"):             # (L, D, H, P)
+                return P(None, None, "model", None)
+            if name == "conv_x":                   # (L, k, H, P)
+                return P(None, None, "model", None)
+            if name in ("conv_bx", "norm"):        # (L, H, P)
+                return P(None, "model", None)
+            if name in ("dt_bias", "A_log", "D"):  # (L, H)
+                return P(None, "model")
+            if name == "w_dt":                     # (L, D, H)
+                return P(None, None, "model")
+            if name == "out_proj":                 # (L, H, P, D)
+                return P(None, "model", None, None)
+            return Rep
+        return Rep
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, mesh, params_tree))
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+def batch_spec(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig
+               ) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    shard_b = shape.global_batch % dp_size(mesh) == 0
+    bspec = P(dp) if shard_b else Rep
+    out = {"tokens": P(*bspec, None) if shard_b else P(None, None)}
+    if shape.kind == "train":
+        out["labels"] = out["tokens"]
+    if cfg.frontend == "vit":
+        out["patches"] = P(*bspec, None, None) if shard_b else Rep
+    if cfg.frontend == "audio" and shape.kind != "decode":
+        out["frames"] = P(*bspec, None, None) if shard_b else Rep
+    return out
+
+
+def cache_spec(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> Any:
+    """Spec pytree matching ``models.init_cache`` structure."""
+    dp = dp_axes(mesh)
+    div = Divisibility(cfg, mesh)
+    shard_b = shape.global_batch % dp_size(mesh) == 0
+    b_ax = dp if shard_b else None
+    # sequence axis: shard over dp when batch can't shard (long-context);
+    # shard over model when KV heads can't (context-parallel cache).
+    s_ax_from_b = None if shard_b else dp
+
+    cache: Dict[str, Any] = {}
+    if cfg.family != "ssm":
+        if cfg.attn_type == "mla":
+            # (L, B, S, r): sequence on "model". (Alternative evaluated in
+            # §Perf iter 3 — rank-dim sharding localizes the cache DUS but
+            # adds a (B,H,S) score psum per layer that costs more than the
+            # masked-select rewrite it removes: 0.27s vs 0.125s total.
+            # Refuted; kept S-sharding.)
+            s_ax = s_ax_from_b if s_ax_from_b else "model"
+            cache["kv"] = (P(None, b_ax, s_ax, None),
+                           P(None, b_ax, s_ax, None))
+        else:
+            # (L, B, S, Hkv, hd)
+            if div.kv:
+                h_ax, s_ax = "model", s_ax_from_b
+            else:
+                h_ax, s_ax = None, (s_ax_from_b or "model")
+            cache["kv"] = (P(None, b_ax, s_ax, h_ax, None),
+                           P(None, b_ax, s_ax, h_ax, None))
+    if cfg.family == "ssm" or cfg.hybrid_ssm:
+        h_ax = "model" if div.ssm_h else None
+        from .models.ssm import SSMCache
+        cache["ssm"] = SSMCache(
+            conv_x=P(None, b_ax, None, h_ax, None),
+            conv_B=P(None, b_ax, None, None),
+            conv_C=P(None, b_ax, None, None),
+            state=P(None, b_ax, h_ax, None, None))
+    if cfg.n_enc_layers:
+        h_ax = "model" if div.kv else None
+        cache["cross"] = (P(None, b_ax, None, h_ax, None),
+                          P(None, b_ax, None, h_ax, None))
+    return cache
+
+
+def logits_spec(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> P:
+    dp = dp_axes(mesh)
+    div = Divisibility(cfg, mesh)
+    shard_b = shape.global_batch % dp_size(mesh) == 0
+    return P(dp if shard_b else None, None, "model" if div.vocab else None)

@@ -1,0 +1,5 @@
+from .optim import AdamWConfig, AdamWState, init_state, apply_updates
+from .step import make_train_step, make_serve_steps
+
+__all__ = ["AdamWConfig", "AdamWState", "init_state", "apply_updates",
+           "make_train_step", "make_serve_steps"]

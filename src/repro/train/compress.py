@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+int8 block-quantized gradients with per-block scales: 4× less DP traffic.
+``compress -> psum -> decompress`` is numerically a stochastic-rounding-free
+uniform quantizer; the train loop keeps an error-feedback buffer so the
+quantization error is re-injected next step (1-bit-Adam-style residual
+correction), preserving convergence.
+
+Used opt-in (``make_train_step(compress=True)``); the dry-run baseline keeps
+exact f32 gradient reduction.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: Any       # int8 pytree
+    scale: Any   # f32 per-block scales
+
+
+def _quant_leaf(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequant_leaf(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_grads(grads) -> Tuple[Compressed, Any]:
+    qs = jax.tree.map(_quant_leaf, grads)
+    q = jax.tree.map(lambda t: t[0], qs,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], qs,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    return Compressed(q, s), jax.tree.map(lambda g: g.shape, grads)
+
+
+def decompress_grads(packed) -> Any:
+    comp, shapes = packed
+    return jax.tree.map(_dequant_leaf, comp.q, comp.scale, shapes)
+
+
+def error_feedback_update(grads, residual):
+    """g' = g + residual;  new_residual = g' - dequant(quant(g'))."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                grads)
+    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, residual)
+    packed = compress_grads(corrected)
+    deq = decompress_grads(packed)
+    new_res = jax.tree.map(lambda c, d: c - d, corrected, deq)
+    return deq, new_res

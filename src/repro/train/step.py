@@ -1,0 +1,76 @@
+"""train_step / serve_step builders — the functions the dry-run lowers.
+
+``make_train_step`` returns a pure ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` function with microbatched gradient
+accumulation under ``lax.scan``: each microbatch's backward finishes with the
+gradient psum, which XLA overlaps with the next microbatch's forward
+(compute/comm overlap); the optimizer applies once per global batch.
+
+``make_serve_steps`` returns (prefill_fn, decode_fn) for the serving shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import train_loss, prefill, decode_step
+from ..models.config import ModelConfig
+from .optim import AdamWConfig, AdamWState, apply_updates
+from .compress import compress_grads, decompress_grads
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *,
+                    grad_accum: int = 1, compress: bool = False):
+    """Build the jittable global train step."""
+
+    def loss_fn(params, mb):
+        loss, metrics = train_loss(params, cfg, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if grad_accum > 1:
+            # batch arrives MICROBATCH-MAJOR: (accum, B/accum, ...) with the
+            # accum axis unsharded. Scanning over xs slices the leading
+            # unsharded axis — slicing a *sharded* batch axis would force
+            # XLA to all-gather the batch and replicate every microbatch
+            # (measured: 16x flops inflation; see EXPERIMENTS.md §Perf).
+            def accum(carry, mb):
+                gsum, lsum = carry
+                (loss, _), grads = grad_fn(params, mb)
+                grads = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                     gsum, grads)
+                return (grads, lsum + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                accum, (zeros, jnp.zeros((), jnp.float32)), batch)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss_sum / grad_accum
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        if compress:
+            grads = decompress_grads(compress_grads(grads))
+
+        params, opt_state, om = apply_updates(opt_cfg, params, grads,
+                                              opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_serve_steps(cfg: ModelConfig):
+    def prefill_fn(params, batch):
+        return prefill(params, cfg, batch)
+
+    def decode_fn(params, cache, cache_len, batch):
+        return decode_step(params, cfg, cache, cache_len, batch)
+
+    return prefill_fn, decode_fn

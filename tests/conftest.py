@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests / benches must see exactly ONE device (the dry-run sets its own
+# 512-device flag as the very first thing in launch/dryrun.py, never here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,169 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+train step + prefill/decode on CPU; asserts output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.models import (init_params, forward, train_loss, prefill,
+                          decode_step)
+from repro.train import AdamWConfig, init_state, make_train_step
+
+B, T = 2, 16
+
+
+def make_batch(cfg, key):
+    ks = jax.random.split(key, 4)
+    batch = {"tokens": jax.random.randint(ks[0], (B, T), 0, cfg.vocab_size),
+             "labels": jax.random.randint(ks[1], (B, T), 0, cfg.vocab_size)}
+    if cfg.frontend == "vit":
+        batch["patches"] = jax.random.normal(
+            ks[2], (B, cfg.n_prefix, cfg.frontend_dim), jnp.float32)
+    if cfg.frontend == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[3], (B, 8, cfg.frontend_dim), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = configs.smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    batch = make_batch(cfg, key)
+    logits = forward(params, cfg, batch)
+    t_expect = T + (cfg.n_prefix if cfg.frontend == "vit" else 0)
+    assert logits.shape == (B, t_expect, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = configs.smoke(arch)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    opt = init_state(params)
+    step = make_train_step(cfg, AdamWConfig(warmup_steps=1, total_steps=10))
+    batch = make_batch(cfg, key)
+    params2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_prefill_decode(arch):
+    cfg = configs.smoke(arch)
+    key = jax.random.PRNGKey(2)
+    params = init_params(key, cfg)
+    batch = make_batch(cfg, key)
+    batch.pop("labels")
+    logits, cache = prefill(params, cfg, batch, max_len=T + 4)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    cache_len = T + (cfg.n_prefix if cfg.frontend == "vit" else 0)
+    logits2, cache2 = decode_step(params, cfg, cache, cache_len,
+                                  {"tokens": tok})
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("arch", ["qwen1_5_4b", "mamba2_2_7b",
+                                  "gemma3_1b", "hymba_1_5b"])
+def test_decode_matches_forward(arch):
+    """Prefill+decode logits ≡ full forward at the same position."""
+    cfg = configs.smoke(arch)
+    params = init_params(jax.random.PRNGKey(3), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (1, 9), 0,
+                              cfg.vocab_size)
+    full = forward(params, cfg, {"tokens": toks})
+    _, cache = prefill(params, cfg, {"tokens": toks[:, :8]}, max_len=12)
+    l2, _ = decode_step(params, cfg, cache, 8, {"tokens": toks[:, 8:9]})
+    np.testing.assert_allclose(np.asarray(full[:, 8]), np.asarray(l2[:, 0]),
+                               atol=0.12, rtol=0.05)
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact published hyperparameters."""
+    want = {
+        "hymba_1_5b": dict(n_layers=32, d_model=1600, n_heads=25,
+                           n_kv_heads=5, d_ff=5504, vocab_size=32001,
+                           ssm_state=16),
+        "internvl2_76b": dict(n_layers=80, d_model=8192, n_heads=64,
+                              n_kv_heads=8, d_ff=28672, vocab_size=128256),
+        "seamless_m4t_medium": dict(n_layers=12, d_model=1024, n_heads=16,
+                                    n_kv_heads=16, d_ff=4096,
+                                    vocab_size=256206, n_enc_layers=12),
+        "qwen1_5_4b": dict(n_layers=40, d_model=2560, n_heads=20,
+                           n_kv_heads=20, d_ff=6912, vocab_size=151936,
+                           qkv_bias=True),
+        "chatglm3_6b": dict(n_layers=28, d_model=4096, n_heads=32,
+                            n_kv_heads=2, d_ff=13696, vocab_size=65024),
+        "minicpm3_4b": dict(n_layers=62, d_model=2560, n_heads=40,
+                            d_ff=6400, vocab_size=73448, attn_type="mla"),
+        "gemma3_1b": dict(n_layers=26, d_model=1152, n_heads=4,
+                          n_kv_heads=1, d_ff=6912, vocab_size=262144),
+        "granite_moe_3b_a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                     n_kv_heads=8, d_ff=512,
+                                     vocab_size=49155, n_experts=40,
+                                     top_k=8),
+        "moonshot_v1_16b_a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                    n_kv_heads=16, d_ff=1408,
+                                    vocab_size=163840, n_experts=64,
+                                    top_k=6),
+        "mamba2_2_7b": dict(n_layers=64, d_model=2560, vocab_size=50280,
+                            ssm_state=128),
+    }
+    for arch, fields in want.items():
+        cfg = configs.full(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_param_counts_in_expected_range():
+    """Sanity: analytic param counts land near the advertised sizes."""
+    expect = {"qwen1_5_4b": (3e9, 5e9), "chatglm3_6b": (5e9, 8e9),
+              "mamba2_2_7b": (2e9, 3.5e9), "gemma3_1b": (0.7e9, 1.6e9),
+              "internvl2_76b": (60e9, 85e9),
+              # assigned config (48L × 64e × d_ff 1408) is larger than the
+              # "16b" marketing name; we implement the assigned numbers.
+              "moonshot_v1_16b_a3b": (13e9, 30e9)}
+    for arch, (lo, hi) in expect.items():
+        n = configs.full(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_sort_dispatch_matches_einsum():
+    """Both MoE dispatch modes compute the same routing (ample capacity)."""
+    import dataclasses
+    cfg_e = dataclasses.replace(configs.smoke("granite_moe_3b_a800m"),
+                                capacity_factor=8.0)
+    cfg_s = dataclasses.replace(cfg_e, moe_dispatch="sort")
+    params = init_params(jax.random.PRNGKey(0), cfg_e)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg_e.vocab_size)
+    le = forward(params, cfg_e, {"tokens": toks})
+    ls = forward(params, cfg_s, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(le, np.float32),
+                               np.asarray(ls, np.float32), atol=0.06)
+
+
+def test_batch_server_generates():
+    """Batched prefill+decode server end to end (cache-donating decode)."""
+    from repro.launch.serve import BatchServer, Request
+    cfg = configs.smoke("chatglm3_6b")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    server = BatchServer(params, cfg, max_len=48)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=12,
+                                        dtype=np.int32), max_new=6)
+            for _ in range(3)]
+    done = server.serve(reqs)
+    for r in done:
+        assert r.out is not None and r.out.shape == (6,)
+        assert (0 <= r.out).all() and (r.out < cfg.vocab_size).all()

@@ -1,0 +1,83 @@
+"""Unit + property tests for F_p (Mersenne-31) arithmetic."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field
+
+P = int(field.P)
+elems = st.integers(min_value=0, max_value=P - 1)
+
+
+def as_f(*xs):
+    return [np.asarray(np.uint32(x)) for x in xs]
+
+
+@settings(max_examples=200, deadline=None)
+@given(elems, elems)
+def test_add_matches_python(a, b):
+    fa, fb = as_f(a, b)
+    assert int(field.add(fa, fb)) == (a + b) % P
+
+
+@settings(max_examples=200, deadline=None)
+@given(elems, elems)
+def test_mul_matches_python(a, b):
+    fa, fb = as_f(a, b)
+    assert int(field.mul(fa, fb)) == (a * b) % P
+
+
+@settings(max_examples=200, deadline=None)
+@given(elems, elems)
+def test_sub_matches_python(a, b):
+    fa, fb = as_f(a, b)
+    assert int(field.sub(fa, fb)) == (a - b) % P
+
+
+@settings(max_examples=50, deadline=None)
+@given(elems.filter(lambda x: x != 0))
+def test_inverse(a):
+    fa, = as_f(a)
+    assert int(field.mul(fa, field.inv(fa))) == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(elems, elems, elems)
+def test_distributive(a, b, c):
+    fa, fb, fc = as_f(a, b, c)
+    lhs = field.mul(fa, field.add(fb, fc))
+    rhs = field.add(field.mul(fa, fb), field.mul(fa, fc))
+    assert int(lhs) == int(rhs)
+
+
+def test_edge_values():
+    # p-1 squared, 0, 1 — the overflow-critical corners
+    for a in [0, 1, P - 1, P - 2, 2**30]:
+        for b in [0, 1, P - 1, P - 2, 2**30]:
+            fa, fb = as_f(a, b)
+            assert int(field.mul(fa, fb)) == (a * b) % P
+            assert int(field.add(fa, fb)) == (a + b) % P
+
+
+def test_sum_long_axis():
+    # accumulate 1e6 near-maximal values: uint64 accumulator must not wrap
+    n = 1_000_000
+    x = np.full((n,), P - 1, dtype=np.uint32)
+    assert int(field.sum_(jax.numpy.asarray(x))) == ((P - 1) * n) % P
+
+
+def test_matmul_matches_numpy_bigint():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, P, size=(7, 11), dtype=np.uint64)
+    b = rng.integers(0, P, size=(11, 5), dtype=np.uint64)
+    want = (a.astype(object) @ b.astype(object)) % P
+    got = np.asarray(field.matmul(a.astype(np.uint32), b.astype(np.uint32)))
+    assert np.array_equal(got.astype(object), want)
+
+
+def test_uniform_in_range():
+    x = np.asarray(field.uniform(jax.random.PRNGKey(0), (4096,)))
+    assert x.max() < P
+    # crude uniformity: mean within 2% of p/2
+    assert abs(float(x.mean()) / (P / 2) - 1.0) < 0.02

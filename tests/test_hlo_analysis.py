@@ -1,0 +1,53 @@
+"""Unit tests for the roofline-term extraction (HLO collective parsing)."""
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+SAMPLE_HLO = """
+HloModule jit_step
+
+fused_computation {
+  ...
+}
+
+ENTRY main {
+  %p0 = bf16[16,4096,512]{2,1,0} parameter(0)
+  %ag = bf16[16,4096,8192]{2,1,0} all-gather(%p0), dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(%x), to_apply=%add
+  %rs = f32[64,1024]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = u32[128]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = bf16[8,256,256]{2,1,0} all-to-all(%w), dimensions={0}
+  %ars = f32[2,2]{1,0} all-reduce-start(%q), to_apply=%add
+  %not-a-collective = f32[4,4]{1,0} add(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parses_all_kinds():
+    got = H.collective_bytes(SAMPLE_HLO)
+    assert got["all-gather"] == 16 * 4096 * 8192 * 2
+    assert got["all-reduce"] == 1024 * 1024 * 4 + 2 * 2 * 4  # incl. -start
+    assert got["reduce-scatter"] == 64 * 1024 * 4
+    assert got["collective-permute"] == 128 * 4
+    assert got["all-to-all"] == 8 * 256 * 256 * 2
+    assert got["count"] == 6
+    assert got["total"] == sum(got[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_roofline_terms_and_bottleneck():
+    # quantities are PER-DEVICE (the HLO is the SPMD-partitioned module)
+    r = H.Roofline(flops=197e12, bytes_accessed=819e9,
+                   collective_bytes=50e9 * 2, n_chips=256,
+                   collective_detail={})
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert abs(r.t_collective - 2.0) < 1e-9
+    assert r.bottleneck == "collective"
+
+
+def test_shape_bytes_tuple_shapes():
+    assert H._shape_bytes("(f32[8,8], bf16[4])") == 8 * 8 * 4 + 4 * 2
+    assert H._shape_bytes("pred[100]") == 100
+    assert H._shape_bytes("u32[]") == 4  # scalar: empty dims -> 1 elem

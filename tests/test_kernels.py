@@ -1,0 +1,152 @@
+"""Pallas kernel validation: shape sweeps vs pure-jnp oracles (exact match).
+
+Field arithmetic is exact (no tolerance): any mismatch is a bug, so we use
+array_equal, the strictest possible allclose.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+P = 2**31 - 1
+RNG = np.random.default_rng(42)
+
+
+def rand_f(shape):
+    return RNG.integers(0, P, size=shape, dtype=np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# ss_matmul sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (8, 8, 8), (7, 13, 5), (128, 128, 128), (129, 127, 130),
+    (3, 300, 2), (256, 64, 192), (37, 53, 29), (200, 1, 200),
+])
+def test_ss_matmul_shapes(m, k, n):
+    a, b = rand_f((m, k)), rand_f((k, n))
+    got = np.asarray(ops.ss_matmul(jnp.asarray(a), jnp.asarray(b)))
+    want = np.asarray(ref.ss_matmul(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(got, want)
+
+
+def test_ss_matmul_extreme_values():
+    """p-1 everywhere: worst case for limb overflow."""
+    a = np.full((64, 96), P - 1, dtype=np.uint32)
+    b = np.full((96, 64), P - 1, dtype=np.uint32)
+    got = np.asarray(ops.ss_matmul(jnp.asarray(a), jnp.asarray(b)))
+    want = (pow(P - 1, 2, P) * 96) % P
+    assert np.all(got == want)
+
+
+def test_ss_matmul_identity():
+    n = 50
+    eye = np.eye(n, dtype=np.uint32)
+    x = rand_f((n, n))
+    got = np.asarray(ops.ss_matmul(jnp.asarray(eye), jnp.asarray(x)))
+    assert np.array_equal(got, x)
+
+
+def test_ss_matmul_batched():
+    a, b = rand_f((4, 17, 33)), rand_f((4, 33, 9))
+    got = np.asarray(ops.ss_matmul(jnp.asarray(a), jnp.asarray(b)))
+    for i in range(4):
+        want = np.asarray(ref.ss_matmul(jnp.asarray(a[i]), jnp.asarray(b[i])))
+        assert np.array_equal(got[i], want)
+
+
+def test_ss_matmul_vs_bigint_oracle():
+    """Double-check the jnp oracle itself against python bigints."""
+    a, b = rand_f((9, 21)), rand_f((21, 6))
+    want = (a.astype(object) @ b.astype(object)) % P
+    got = np.asarray(ops.ss_matmul(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(got.astype(object), want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 40))
+def test_ss_matmul_property(m, k, n):
+    a, b = rand_f((m, k)), rand_f((k, n))
+    got = np.asarray(ops.ss_matmul(jnp.asarray(a), jnp.asarray(b)))
+    want = np.asarray(ref.ss_matmul(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# aa_match sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,w,a", [
+    (1, 1, 1), (8, 4, 16), (45, 6, 17), (512, 12, 69), (513, 8, 26),
+    (100, 16, 128), (3, 2, 300),
+])
+def test_aa_match_shapes(n, w, a):
+    col, pat = rand_f((n, w, a)), rand_f((w, a))
+    got = np.asarray(ops.aa_match(jnp.asarray(col), jnp.asarray(pat)))
+    want = np.asarray(ref.aa_match(jnp.asarray(col), jnp.asarray(pat)))
+    assert np.array_equal(got, want)
+
+
+def test_aa_match_onehot_semantics():
+    """With real one-hots the kernel must return exact 0/1 matches."""
+    from repro.core.encoding import Codec
+    codec = Codec(word_length=6)
+    col = codec.encode_column(["John", "Adam", "John", "Eve"])
+    pat = codec.encode_word("John")
+    got = np.asarray(ops.aa_match(jnp.asarray(col), jnp.asarray(pat)))
+    assert got.tolist() == [1, 0, 1, 0]
+
+
+def test_aa_match_batched_clouds():
+    col, pat = rand_f((3, 20, 5, 11)), rand_f((3, 5, 11))
+    got = np.asarray(ops.aa_match(jnp.asarray(col), jnp.asarray(pat)))
+    for c in range(3):
+        want = np.asarray(ref.aa_match(jnp.asarray(col[c]),
+                                       jnp.asarray(pat[c])))
+        assert np.array_equal(got[c], want)
+
+
+# ---------------------------------------------------------------------------
+# kernels wired into the query suite ≡ jnp implementation
+# ---------------------------------------------------------------------------
+
+def test_count_query_pallas_equals_jnp():
+    from repro.core import outsource, Codec
+    from repro.core.queries import count_query
+    rows = [["a", "John"], ["b", "Eve"], ["c", "John"], ["d", "Dan"]]
+    db = outsource(jax.random.PRNGKey(0), rows, codec=Codec(word_length=6),
+                   n_shares=16)
+    got_p, _ = count_query(jax.random.PRNGKey(1), db, 1, "John",
+                           impl="pallas")
+    got_j, _ = count_query(jax.random.PRNGKey(1), db, 1, "John", impl="jnp")
+    assert got_p == got_j == 2
+
+
+def test_select_fetch_pallas_equals_jnp():
+    from repro.core import outsource, Codec
+    from repro.core.queries import select_one_round
+    rows = [["a", "x1"], ["b", "x2"], ["c", "x1"], ["d", "x3"]]
+    db = outsource(jax.random.PRNGKey(2), rows, codec=Codec(word_length=6),
+                   n_shares=16)
+    rp, ap, _ = select_one_round(jax.random.PRNGKey(3), db, 1, "x1",
+                                 impl="pallas")
+    rj, aj, _ = select_one_round(jax.random.PRNGKey(3), db, 1, "x1",
+                                 impl="jnp")
+    assert rp == rj and ap == aj == [0, 2]
+
+
+def test_pkfk_join_pallas_equals_jnp():
+    from repro.core import outsource, Codec
+    from repro.core.queries import pkfk_join
+    codec = Codec(word_length=6)
+    X = [["a1", "b1"], ["a2", "b2"]]
+    Y = [["b1", "c1"], ["b2", "c2"], ["b2", "c3"]]
+    dbX = outsource(jax.random.PRNGKey(4), X, codec=codec, n_shares=16)
+    dbY = outsource(jax.random.PRNGKey(5), Y, codec=codec, n_shares=16)
+    rp, _ = pkfk_join(dbX, dbY, 1, 0, impl="pallas")
+    rj, _ = pkfk_join(dbX, dbY, 1, 0, impl="jnp")
+    assert rp == rj

@@ -1,0 +1,74 @@
+"""Structural verification of the paper's non-communicating-clouds model.
+
+The c clouds must never exchange data (§2, footnote 3). In this framework the
+clouds are axis 0 of every share tensor; we verify the property at the HLO
+level: shard the cloud axis across devices and assert the compiled cloud-side
+query program contains ZERO collective ops. (User-side interpolation DOES
+cross the axis — it runs at the trusted user, not in the clouds.)
+
+Runs in a subprocess so the 8-device host-platform flag never leaks into the
+main test process.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    import repro  # x64
+    from repro.core import automata, field
+    from repro.core.shamir import Shares
+
+    mesh = jax.make_mesh((8,), ("clouds",))
+    C, N, W, A = 8, 64, 6, 16
+
+    def cloud_side_count(rel_vals, pat_vals):
+        # the MAP phase of Algorithm 2: everything the CLOUDS compute
+        col = Shares(rel_vals, 1)
+        pat = Shares(pat_vals, 1)
+        return automata.count_column(col, pat).values
+
+    def cloud_side_fetch(matrix_vals, rel_flat):
+        return field.matmul(matrix_vals, rel_flat)
+
+    sh = NamedSharding(mesh, P("clouds"))
+    rel = jax.ShapeDtypeStruct((C, N, W, A), jnp.uint32, sharding=sh)
+    pat = jax.ShapeDtypeStruct((C, W, A), jnp.uint32, sharding=sh)
+    hlo1 = jax.jit(cloud_side_count).lower(rel, pat).compile().as_text()
+
+    mat = jax.ShapeDtypeStruct((C, 4, N), jnp.uint32, sharding=sh)
+    rf = jax.ShapeDtypeStruct((C, N, 3 * W * A), jnp.uint32, sharding=sh)
+    hlo2 = jax.jit(cloud_side_fetch).lower(mat, rf).compile().as_text()
+
+    def n_collectives(hlo):
+        kinds = ("all-gather", "all-reduce", "reduce-scatter",
+                 "all-to-all", "collective-permute")
+        return sum(hlo.count(" " + k) for k in kinds)
+
+    print(json.dumps({"count_q": n_collectives(hlo1),
+                      "fetch_q": n_collectives(hlo2)}))
+""")
+
+
+def test_cloud_side_programs_have_no_cross_cloud_collectives():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["count_q"] == 0, "count query crossed the cloud axis!"
+    assert res["fetch_q"] == 0, "fetch crossed the cloud axis!"

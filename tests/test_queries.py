@@ -1,0 +1,269 @@
+"""End-to-end query correctness: q(R) ≡ q_interpolate(q_1(R^s_1)…) (§2.2).
+
+Uses the paper's own Employee running example plus randomized relations via
+hypothesis. Every query is checked against a plaintext oracle.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import outsource, Codec
+from repro.core.queries import (count_query, select_one_tuple,
+                                select_one_round, select_tree, pkfk_join,
+                                equijoin, range_count, range_select)
+
+CODEC = Codec(word_length=8)
+
+EMPLOYEE = [
+    ["E101", "Adam", "Smith", "1000", "Sale"],
+    ["E102", "John", "Taylor", "2000", "Design"],
+    ["E103", "Eve", "Smith", "500", "Sale"],
+    ["E104", "John", "Williams", "5000", "Sale"],
+]
+
+
+@pytest.fixture(scope="module")
+def employee_db():
+    return outsource(jax.random.PRNGKey(7), EMPLOYEE, codec=CODEC,
+                     n_shares=20, degree=1, numeric_columns={3: 14})
+
+
+# ---------------------------------------------------------------------------
+# Count (§3.1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("col,pat,want", [
+    (1, "John", 2), (1, "Adam", 1), (1, "Eve", 1), (1, "Zoe", 0),
+    (2, "Smith", 2), (4, "Sale", 3), (4, "Design", 1),
+])
+def test_count_employee(employee_db, col, pat, want):
+    got, _ = count_query(jax.random.PRNGKey(hash(pat) % 2**31), employee_db,
+                         col, pat)
+    assert got == want
+
+
+def test_count_exact_word_not_prefix():
+    """The John/Johnson aside (§3.1.2): terminator padding -> exact match."""
+    rows = [["John", "x"], ["Johnson", "y"], ["John", "z"]]
+    db = outsource(jax.random.PRNGKey(1), rows, codec=CODEC, n_shares=20)
+    got, _ = count_query(jax.random.PRNGKey(2), db, 0, "John")
+    assert got == 2
+
+
+def test_count_communication_is_constant_in_n(employee_db):
+    """Theorem 1: communication independent of n; cloud work = n·w."""
+    big = outsource(jax.random.PRNGKey(3),
+                    EMPLOYEE * 8, codec=CODEC, n_shares=20)
+    _, small_led = count_query(jax.random.PRNGKey(4), employee_db, 1, "Eve")
+    _, big_led = count_query(jax.random.PRNGKey(4), big, 1, "Eve")
+    assert big_led.communication_bits == small_led.communication_bits
+    assert big_led.rounds == small_led.rounds == 1
+    assert big_led.cloud_ops_bits == 8 * small_led.cloud_ops_bits
+
+
+# ---------------------------------------------------------------------------
+# Selection (§3.2)
+# ---------------------------------------------------------------------------
+
+def test_select_one_tuple(employee_db):
+    rows, _ = select_one_tuple(jax.random.PRNGKey(5), employee_db, 1, "Eve")
+    assert rows == [["E103", "Eve", "Smith", "500", "Sale"]]
+
+
+def test_select_one_tuple_rejects_multi(employee_db):
+    with pytest.raises(ValueError):
+        select_one_tuple(jax.random.PRNGKey(6), employee_db, 1, "John")
+
+
+def test_select_one_round(employee_db):
+    rows, addrs, led = select_one_round(jax.random.PRNGKey(8), employee_db,
+                                        1, "John")
+    assert addrs == [1, 3]
+    assert rows == [EMPLOYEE[1], EMPLOYEE[3]]
+    assert led.rounds == 2  # one to get bits, one to fetch
+
+
+def test_select_one_round_padded_output(employee_db):
+    """Fake-row padding hides ℓ (output-size attack defence, §3.2.2)."""
+    rows, addrs, led = select_one_round(jax.random.PRNGKey(8), employee_db,
+                                        1, "John", padded_rows=4)
+    assert rows == [EMPLOYEE[1], EMPLOYEE[3]]      # padding stripped by user
+
+
+def test_select_tree(employee_db):
+    rows, addrs, led = select_tree(jax.random.PRNGKey(9), employee_db,
+                                   4, "Sale")
+    assert addrs == [0, 2, 3]
+    assert rows == [EMPLOYEE[0], EMPLOYEE[2], EMPLOYEE[3]]
+
+
+def test_select_tree_round_bound():
+    """Theorem 4: rounds ≤ ⌊log_ℓ n⌋ + ⌊log₂ ℓ⌋ + 1 (+1 count, +1 fetch)."""
+    n_rep = 8
+    rows = [[f"id{i}", "John" if i % 4 == 0 else f"nm{i}"]
+            for i in range(n_rep * 4)]
+    db = outsource(jax.random.PRNGKey(10), rows, codec=CODEC, n_shares=20)
+    got, addrs, led = select_tree(jax.random.PRNGKey(11), db, 1, "John")
+    ell, n = n_rep, n_rep * 4
+    import math
+    bound = (math.floor(math.log(n, ell)) + math.floor(math.log2(ell)) + 1
+             + 2)  # + count round + fetch round
+    assert led.rounds <= bound
+    assert addrs == [i for i in range(n) if i % 4 == 0]
+
+
+def test_select_tree_single_hit(employee_db):
+    rows, addrs, _ = select_tree(jax.random.PRNGKey(12), employee_db,
+                                 1, "Adam")
+    assert addrs == [0] and rows == [EMPLOYEE[0]]
+
+
+def test_select_tree_no_hit(employee_db):
+    rows, addrs, _ = select_tree(jax.random.PRNGKey(13), employee_db,
+                                 1, "Zoe")
+    assert rows == [] and addrs == []
+
+
+# ---------------------------------------------------------------------------
+# Joins (§3.3)
+# ---------------------------------------------------------------------------
+
+def test_pkfk_join_paper_example():
+    codec = Codec(word_length=6)
+    X = [["a1", "b1"], ["a2", "b2"], ["a3", "b3"]]
+    Y = [["b1", "c1"], ["b2", "c2"], ["b2", "c3"], ["b2", "c4"]]
+    dbX = outsource(jax.random.PRNGKey(1), X, codec=codec, n_shares=16)
+    dbY = outsource(jax.random.PRNGKey(2), Y, codec=codec, n_shares=16)
+    rows, led = pkfk_join(dbX, dbY, 1, 0)
+    assert rows == [["a1", "b1", "c1"], ["a2", "b2", "c2"],
+                    ["a2", "b2", "c3"], ["a2", "b2", "c4"]]
+    assert led.rounds == 1
+
+
+def test_pkfk_join_dangling_child():
+    codec = Codec(word_length=6)
+    X = [["a1", "b1"]]
+    Y = [["b1", "c1"], ["b9", "c2"]]
+    dbX = outsource(jax.random.PRNGKey(3), X, codec=codec, n_shares=16)
+    dbY = outsource(jax.random.PRNGKey(4), Y, codec=codec, n_shares=16)
+    rows, _ = pkfk_join(dbX, dbY, 1, 0)
+    assert rows == [["a1", "b1", "c1"]]
+
+
+def test_equijoin_multi_multi():
+    codec = Codec(word_length=6)
+    X = [["a1", "b1"], ["a2", "b2"], ["a3", "b2"]]
+    Y = [["b2", "c1"], ["b2", "c2"], ["b9", "c3"]]
+    dbX = outsource(jax.random.PRNGKey(5), X, codec=codec, n_shares=16)
+    dbY = outsource(jax.random.PRNGKey(6), Y, codec=codec, n_shares=16)
+    rows, led = equijoin(jax.random.PRNGKey(7), dbX, dbY, 1, 0)
+    want = sorted([("a2", "b2", "c1"), ("a2", "b2", "c2"),
+                   ("a3", "b2", "c1"), ("a3", "b2", "c2")])
+    assert sorted(map(tuple, rows)) == want
+
+
+def test_equijoin_padded_fake_values():
+    codec = Codec(word_length=6)
+    X = [["a1", "b1"]]
+    Y = [["b1", "c1"]]
+    dbX = outsource(jax.random.PRNGKey(8), X, codec=codec, n_shares=16)
+    dbY = outsource(jax.random.PRNGKey(9), Y, codec=codec, n_shares=16)
+    rows, led = equijoin(jax.random.PRNGKey(10), dbX, dbY, 1, 0,
+                         padded_values=2)
+    assert rows == [["a1", "b1", "c1"]]
+    assert led.rounds == 1 + 2 * 3  # fake jobs cost rounds too (k hidden)
+
+
+# ---------------------------------------------------------------------------
+# Range (§3.4)
+# ---------------------------------------------------------------------------
+
+SALARY_DB = None
+
+
+def _salary_db():
+    global SALARY_DB
+    if SALARY_DB is None:
+        SALARY_DB = outsource(jax.random.PRNGKey(20),
+                              EMPLOYEE, codec=CODEC, n_shares=34, degree=1,
+                              numeric_columns={3: 14})
+    return SALARY_DB
+
+
+@pytest.mark.parametrize("lo,hi,want", [
+    (1000, 2000, 2), (0, 8000, 4), (400, 600, 1), (6000, 7000, 0),
+    (500, 500, 1), (5000, 5000, 1),
+])
+def test_range_count(lo, hi, want):
+    got, _ = range_count(jax.random.PRNGKey(lo + hi), _salary_db(), 3, lo, hi)
+    assert got == want
+
+
+def test_range_count_negative_bounds():
+    rows = [["a", "-5"], ["b", "3"], ["c", "-1"]]
+    db = outsource(jax.random.PRNGKey(21), rows, codec=CODEC, n_shares=34,
+                   degree=1, numeric_columns={1: 14})
+    got, _ = range_count(jax.random.PRNGKey(22), db, 1, -4, 3)
+    assert got == 2  # -1 and 3
+
+
+def test_range_select():
+    rows, addrs, _ = range_select(jax.random.PRNGKey(23), _salary_db(), 3,
+                                  400, 1500)
+    assert addrs == [0, 2]
+    assert rows == [EMPLOYEE[0], EMPLOYEE[2]]
+
+
+def test_range_with_degree_reduction():
+    """reduce_every keeps the carry degree low -> fewer clouds needed."""
+    db = outsource(jax.random.PRNGKey(24), EMPLOYEE, codec=CODEC,
+                   n_shares=12, degree=1, numeric_columns={3: 14})
+    got, led = range_count(jax.random.PRNGKey(25), db, 3, 1000, 2000,
+                           reduce_every=2)
+    assert got == 2
+    assert led.rounds > 1  # degree-reduction rounds are counted
+
+
+# ---------------------------------------------------------------------------
+# Property: random relations, query ≡ plaintext oracle
+# ---------------------------------------------------------------------------
+
+names = st.sampled_from(["ann", "bob", "cat", "dan", "eve", "fay"])
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(names, min_size=2, max_size=10), names)
+def test_count_matches_oracle(col_vals, pat):
+    rows = [[f"id{i}", v] for i, v in enumerate(col_vals)]
+    db = outsource(jax.random.PRNGKey(len(col_vals)), rows,
+                   codec=Codec(word_length=6), n_shares=16)
+    got, _ = count_query(jax.random.PRNGKey(0), db, 1, pat)
+    assert got == col_vals.count(pat)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.lists(names, min_size=2, max_size=8), names)
+def test_one_round_select_matches_oracle(col_vals, pat):
+    rows = [[f"id{i}", v] for i, v in enumerate(col_vals)]
+    db = outsource(jax.random.PRNGKey(1 + len(col_vals)), rows,
+                   codec=Codec(word_length=6), n_shares=16)
+    got, addrs, _ = select_one_round(jax.random.PRNGKey(2), db, 1, pat)
+    assert addrs == [i for i, v in enumerate(col_vals) if v == pat]
+    assert got == [rows[i] for i in addrs]
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.lists(st.integers(min_value=-100, max_value=100),
+                min_size=2, max_size=8),
+       st.integers(min_value=-50, max_value=50),
+       st.integers(min_value=0, max_value=60))
+def test_range_count_matches_oracle(vals, lo, span):
+    hi = lo + span
+    rows = [[f"id{i}", str(v)] for i, v in enumerate(vals)]
+    db = outsource(jax.random.PRNGKey(3 + len(vals)), rows,
+                   codec=Codec(word_length=6), n_shares=14, degree=1,
+                   numeric_columns={1: 9})
+    got, _ = range_count(jax.random.PRNGKey(4), db, 1, lo, hi,
+                         reduce_every=1)
+    assert got == sum(1 for v in vals if lo <= v <= hi)

@@ -1,0 +1,99 @@
+"""Shamir sharing: round-trip, homomorphisms, privacy, degree reduction."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import field, shamir
+
+P = int(field.P)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=0, max_value=P - 1),
+       st.integers(min_value=1, max_value=4),
+       st.integers(min_value=0, max_value=5))
+def test_roundtrip(secret, degree, extra_shares):
+    s = shamir.share(jax.random.PRNGKey(secret % 997),
+                     np.array([secret]), n_shares=degree + 1 + extra_shares,
+                     degree=degree)
+    assert int(shamir.interpolate(s)[0]) == secret
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=P - 1),
+       st.integers(min_value=0, max_value=P - 1))
+def test_additive_homomorphism(a, b):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(a % 991))
+    sa = shamir.share(k1, np.array([a]), n_shares=4, degree=1)
+    sb = shamir.share(k2, np.array([b]), n_shares=4, degree=1)
+    assert int(shamir.interpolate(sa + sb)[0]) == (a + b) % P
+    assert int(shamir.interpolate(sa - sb)[0]) == (a - b) % P
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=P - 1),
+       st.integers(min_value=0, max_value=P - 1))
+def test_multiplicative_homomorphism(a, b):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(a % 983))
+    sa = shamir.share(k1, np.array([a]), n_shares=5, degree=1)
+    sb = shamir.share(k2, np.array([b]), n_shares=5, degree=1)
+    prod = sa * sb
+    assert prod.degree == 2
+    assert int(shamir.interpolate(prod)[0]) == (a * b) % P
+
+
+def test_insufficient_shares_raises():
+    s = shamir.share(jax.random.PRNGKey(0), np.array([5]), n_shares=3,
+                     degree=1)
+    with pytest.raises(ValueError):
+        shamir.interpolate(s * s * s)  # degree 3 needs 4 shares
+
+
+def test_identical_secrets_get_distinct_shares():
+    """§2.1: multiple occurrences of a value must have different shares
+    (frequency-count attack defence)."""
+    secrets = np.zeros((64,), dtype=np.uint32) + 7
+    s = shamir.share(jax.random.PRNGKey(1), secrets, n_shares=3, degree=1)
+    vals = np.asarray(s.values)           # (3, 64)
+    for k in range(3):
+        assert len(np.unique(vals[k])) > 32, "shares of equal secrets collide"
+
+
+def test_single_share_is_uniformish():
+    """One cloud's view of a fixed secret is (near-)uniform over F_p."""
+    n = 20_000
+    s = shamir.share(jax.random.PRNGKey(2),
+                     np.zeros((n,), dtype=np.uint32) + 12345,
+                     n_shares=3, degree=1)
+    one_cloud = np.asarray(s.values[0], dtype=np.float64)
+    assert abs(one_cloud.mean() / (P / 2) - 1.0) < 0.05
+    # spread over the field, not clustered
+    assert np.percentile(one_cloud, 90) > 0.8 * P
+
+
+def test_degree_reduction_preserves_secret():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    sa = shamir.share(k1, np.array([123]), n_shares=9, degree=2)
+    sb = shamir.share(k2, np.array([456]), n_shares=9, degree=2)
+    prod = sa * sb                        # degree 4
+    red = shamir.reduce_degree(k3, prod, target_degree=2)
+    assert red.degree == 2
+    assert int(shamir.interpolate(red)[0]) == (123 * 456) % P
+
+
+def test_consistency_check_detects_corruption():
+    s = shamir.share(jax.random.PRNGKey(4), np.array([99]), n_shares=5,
+                     degree=1)
+    assert bool(shamir.verify_consistency(s).all())
+    bad_vals = s.values.at[4, 0].add(1)
+    bad = shamir.Shares(bad_vals, 1)
+    assert not bool(shamir.verify_consistency(bad).all())
+
+
+def test_tensor_shapes_and_sum():
+    x = np.arange(24, dtype=np.uint32).reshape(2, 3, 4)
+    s = shamir.share(jax.random.PRNGKey(5), x, n_shares=4, degree=1)
+    assert s.shape == (2, 3, 4)
+    total = shamir.interpolate(s.sum(axis=(0, 2)))
+    assert np.array_equal(np.asarray(total), x.sum(axis=(0, 2)) % P)
