@@ -2,6 +2,12 @@
 cloud/user computational cost for every query class, at several relation
 sizes, printed next to the paper's asymptotic claim.
 
+Queries run through the unified ``repro.api.QueryClient`` (the client
+delegates to the protocol implementations, so measured ledgers are identical
+to the legacy free functions — asserted by tests/test_api.py). Strategies
+are forced where a bench targets one paper row; ``bench_planner_auto``
+reports what the cost-based planner picks.
+
 Each function returns rows of
   (name, n, us_per_call, comm_bits, rounds, cloud_bits, user_bits, claim)
 """
@@ -11,21 +17,20 @@ import time
 from typing import List
 
 import jax
-import numpy as np
 
+from repro.api import DBStats, QueryClient, choose_select_strategy
 from repro.core import outsource, Codec
-from repro.core.queries import (count_query, select_one_tuple,
-                                select_one_round, select_tree, pkfk_join,
-                                equijoin, range_count)
 from repro.data import synthetic_relation
 
 CODEC = Codec(word_length=8)
 W = 31  # field word bits
+COLUMNS = ["EmployeeId", "FirstName", "LastName", "Salary", "Department"]
 
 
 def _db(n, *, seed=0, skew=0.0, n_shares=20, numeric=False):
     rows = synthetic_relation(n, seed=seed, skew=skew)
-    return rows, outsource(jax.random.PRNGKey(seed), rows, codec=CODEC,
+    return rows, outsource(jax.random.PRNGKey(seed), rows,
+                           column_names=COLUMNS, codec=CODEC,
                            n_shares=n_shares, degree=1,
                            numeric_columns={3: 14} if numeric else None)
 
@@ -41,10 +46,11 @@ def bench_count() -> List[tuple]:
     rows_out = []
     for n in (32, 128, 512):
         rows, db = _db(n, skew=0.3)
-        (got, led), us = _timed(count_query, jax.random.PRNGKey(1), db, 1,
-                                "John")
+        client = QueryClient(db, key=1)
+        res, us = _timed(client.count, "FirstName", "John")
         want = sum(1 for r in rows if r[1] == "John")
-        assert got == want, (got, want)
+        assert res.count == want, (res.count, want)
+        led = res.ledger
         rows_out.append(("count_3.1", n, us, led.communication_bits,
                          led.rounds, led.cloud_ops_bits, led.user_ops_bits,
                          "comm O(1), cloud nw, 1 round"))
@@ -57,13 +63,14 @@ def bench_select_single() -> List[tuple]:
     for n in (32, 128, 512):
         rows = synthetic_relation(n - 1, seed=3)
         rows.append([f"E{99 + n}", "Zed", "Quine", "777", "HR"])
-        db = outsource(jax.random.PRNGKey(3), rows, codec=CODEC,
-                       n_shares=20, degree=1)
+        db = outsource(jax.random.PRNGKey(3), rows, column_names=COLUMNS,
+                       codec=CODEC, n_shares=20, degree=1)
+        client = QueryClient(db, key=2)
         unique = "Zed"   # guaranteed single occurrence
-        (res, us) = _timed(select_one_tuple, jax.random.PRNGKey(2), db, 1,
-                           unique)
-        (got, led) = res
-        assert got[0][1] == unique
+        res, us = _timed(client.select, "FirstName", unique,
+                         strategy="one_tuple")
+        assert res.rows[0][1] == unique
+        led = res.ledger
         out.append(("select_one_3.2.1", n, us, led.communication_bits,
                     led.rounds, led.cloud_ops_bits, led.user_ops_bits,
                     "comm O(mw), cloud O(nmw), user O(mw)"))
@@ -75,10 +82,12 @@ def bench_select_one_round() -> List[tuple]:
     out = []
     for n in (32, 128, 256):
         rows, db = _db(n, seed=4, skew=0.2)
-        (res, us) = _timed(select_one_round, jax.random.PRNGKey(3), db, 1,
-                           "John")
-        got, addrs, led = res
-        assert addrs == [i for i, r in enumerate(rows) if r[1] == "John"]
+        client = QueryClient(db, key=3)
+        res, us = _timed(client.select, "FirstName", "John",
+                         strategy="one_round")
+        assert res.addresses == [i for i, r in enumerate(rows)
+                                 if r[1] == "John"]
+        led = res.ledger
         out.append(("select_oneround_3.2.2", n, us, led.communication_bits,
                     led.rounds, led.cloud_ops_bits, led.user_ops_bits,
                     "comm O((n+m)lw), cloud O(lnmw), 1+1 rounds"))
@@ -91,15 +100,30 @@ def bench_select_tree() -> List[tuple]:
     out = []
     for n in (64, 256):
         rows, db = _db(n, seed=5, skew=0.15)
-        (res, us) = _timed(select_tree, jax.random.PRNGKey(4), db, 1, "John")
-        got, addrs, led = res
-        ell = max(len(addrs), 2)
+        client = QueryClient(db, key=4)
+        res, us = _timed(client.select, "FirstName", "John", strategy="tree")
+        led = res.ledger
+        ell = max(len(res.addresses), 2)
         bound = (math.floor(math.log(n, ell)) + math.floor(math.log2(ell))
                  + 1 + 2)
         assert led.rounds <= bound, (led.rounds, bound)
         out.append(("select_tree_3.2.2", n, us, led.communication_bits,
                     led.rounds, led.cloud_ops_bits, led.user_ops_bits,
                     f"rounds<= {bound} (log_l n + log2 l + 1 [+2])"))
+    return out
+
+
+def bench_planner_auto() -> List[tuple]:
+    """Planner sanity: one_round for small n, tree once c·n dominates."""
+    out = []
+    for n in (64, 1 << 20):
+        stats = DBStats(n=n, m=5, c=20, w=CODEC.word_length,
+                        a=CODEC.alphabet_size)
+        est = choose_select_strategy(stats, ell=4)
+        out.append((f"planner_auto_{est.strategy}", n, 0.0, est.bits,
+                    est.rounds, 0, 0,
+                    "planner: one_round small n -> tree large n"))
+    assert out[0][0].endswith("one_round") and out[1][0].endswith("tree")
     return out
 
 
@@ -110,22 +134,28 @@ def bench_join() -> List[tuple]:
     for n in (8, 16, 32):
         X = [[f"a{i}", f"b{i}"] for i in range(n)]
         Y = [[f"b{i % (n // 2)}", f"c{i}"] for i in range(n)]
-        dbX = outsource(jax.random.PRNGKey(5), X, codec=codec, n_shares=16)
-        dbY = outsource(jax.random.PRNGKey(6), Y, codec=codec, n_shares=16)
-        (res, us) = _timed(pkfk_join, dbX, dbY, 1, 0)
-        got, led = res
-        assert len(got) == n  # every child joins exactly one parent
+        dbX = outsource(jax.random.PRNGKey(5), X, column_names=["A", "B"],
+                        codec=codec, n_shares=16)
+        dbY = outsource(jax.random.PRNGKey(6), Y, column_names=["B", "C"],
+                        codec=codec, n_shares=16)
+        client = QueryClient(dbX, key=5)
+        res, us = _timed(client.join, dbY, on=("B", "B"), kind="pkfk")
+        assert len(res.rows) == n  # every child joins exactly one parent
+        led = res.ledger
         out.append(("pkfk_join_3.3.1", n, us, led.communication_bits,
                     led.rounds, led.cloud_ops_bits, led.user_ops_bits,
                     "comm O(nmw), cloud O(n^2 mw), user O(nmw)"))
     X = [["a1", "b1"], ["a2", "b2"], ["a3", "b2"], ["a4", "b9"]]
     Y = [["b2", "c1"], ["b2", "c2"], ["b1", "c3"], ["b7", "c4"]]
-    dbX = outsource(jax.random.PRNGKey(7), X, codec=codec, n_shares=16)
-    dbY = outsource(jax.random.PRNGKey(8), Y, codec=codec, n_shares=16)
-    (res, us) = _timed(equijoin, jax.random.PRNGKey(9), dbX, dbY, 1, 0)
-    got, led = res
+    dbX = outsource(jax.random.PRNGKey(7), X, column_names=["A", "B"],
+                    codec=codec, n_shares=16)
+    dbY = outsource(jax.random.PRNGKey(8), Y, column_names=["B", "C"],
+                    codec=codec, n_shares=16)
+    client = QueryClient(dbX, key=9)
+    res, us = _timed(client.join, dbY, on=("B", "B"), kind="equi")
     # b1 joins 1×1, b2 joins 2×2 -> 5 output tuples
-    assert len(got) == 5
+    assert len(res.rows) == 5
+    led = res.ledger
     out.append(("equijoin_3.3.2", 4, us, led.communication_bits, led.rounds,
                 led.cloud_ops_bits, led.user_ops_bits,
                 "rounds O(2k), comm O(2nwk + 2k l^2 mw)"))
@@ -137,12 +167,12 @@ def bench_range() -> List[tuple]:
     out = []
     for n in (16, 64):
         rows, db = _db(n, seed=10, n_shares=34, numeric=True)
+        client = QueryClient(db, key=11)
         lo, hi = 1000, 4000
-        (res, us) = _timed(range_count, jax.random.PRNGKey(11), db, 3, lo,
-                           hi)
-        got, led = res
+        res, us = _timed(client.range_count, "Salary", lo, hi)
         want = sum(1 for r in rows if lo <= int(r[3]) <= hi)
-        assert got == want, (got, want)
+        assert res.count == want, (res.count, want)
+        led = res.ledger
         out.append(("range_count_3.4", n, us, led.communication_bits,
                     led.rounds, led.cloud_ops_bits, led.user_ops_bits,
                     "same order as count (Thm 7)"))
@@ -156,7 +186,7 @@ def bench_scaling_verification() -> List[tuple]:
     led_prev = None
     for n in (64, 256, 1024):
         rows, db = _db(n, seed=12)
-        _, led = count_query(jax.random.PRNGKey(13), db, 1, "Eve")
+        led = QueryClient(db, key=13).count("FirstName", "Eve").ledger
         if led_prev is not None:
             assert led.communication_bits == led_prev.communication_bits
             ratio = led.cloud_ops_bits / led_prev.cloud_ops_bits
@@ -169,5 +199,5 @@ def bench_scaling_verification() -> List[tuple]:
 
 
 ALL = [bench_count, bench_select_single, bench_select_one_round,
-       bench_select_tree, bench_join, bench_range,
+       bench_select_tree, bench_planner_auto, bench_join, bench_range,
        bench_scaling_verification]

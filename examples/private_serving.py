@@ -1,5 +1,8 @@
 """Private serving: batched LM inference where the embedding lookup runs as
-the paper's oblivious selection (§3.2.1) over Shamir-shared tables.
+the paper's oblivious selection (§3.2.1) over Shamir-shared tables, plus an
+oblivious QueryServer draining logical query plans over a secret-shared
+user-profile relation — both through the unified ``repro.api`` surface
+(backend registry for the kernels, QueryClient for the query suite).
 
 The serving "clouds" hold only shares of the (fixed-point) embedding table;
 each request's token ids are one-hot-encoded (the paper's unary encoding),
@@ -18,10 +21,13 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 import repro.configs as configs  # noqa: E402
+from repro.api import Count, Eq, Select  # noqa: E402
+from repro.core import outsource, Codec  # noqa: E402
 from repro.models import init_params  # noqa: E402
 from repro.models.private_embed import (setup_private_embed,  # noqa: E402
                                         private_lookup)
-from repro.launch.serve import BatchServer, Request  # noqa: E402
+from repro.launch.serve import (BatchServer, QueryRequest,  # noqa: E402
+                                QueryServer, Request)
 
 
 def main():
@@ -60,6 +66,21 @@ def main():
     done2 = server_plain.serve(reqs2)
     same = all(np.array_equal(a.out, b.out) for a, b in zip(done, done2))
     print(f"private == plaintext generations: {same}")
+
+    # --- the same clouds also serve oblivious DB queries ----------------
+    profiles = [["u01", "gold", "150"], ["u02", "free", "12"],
+                ["u03", "gold", "87"], ["u04", "silver", "45"]]
+    # word_length 6 -> match degree (1+1)·6 = 12, openable by 16 clouds
+    db = outsource(jax.random.PRNGKey(5), profiles,
+                   column_names=["UserId", "Tier", "Requests"],
+                   codec=Codec(word_length=6), n_shares=16)
+    qserver = QueryServer(db, key=11)
+    queries = [QueryRequest(Count(Eq("Tier", "gold"))),
+               QueryRequest(Select(Eq("Tier", "gold")))]
+    for q in qserver.serve(queries):
+        print(f"plan {type(q.plan).__name__}: strategy={q.result.strategy} "
+              f"count={q.result.count} ({q.latency_s:.2f}s, "
+              f"{q.result.ledger.rounds} rounds)")
 
 
 if __name__ == "__main__":

@@ -1,19 +1,20 @@
-"""Quickstart: the paper's Employee example, end to end.
+"""Quickstart: the paper's Employee example through the unified QueryClient.
 
 A trusted DB owner outsources a relation as Shamir secret-shares to c
-simulated clouds; an (authorized) user then runs oblivious count, selection,
-join and range queries WITHOUT the owner being online, and without any cloud
-learning the data, the query, or the result.
+simulated clouds; an (authorized) user then holds ONE QueryClient over the
+shares and runs oblivious count, selection, join and range queries WITHOUT
+the owner being online, and without any cloud learning the data, the query,
+or the result. Queries are logical plans (columns by name, predicate
+objects, explicit padding policy); per-query keys derive from the client's
+root key; the cost-based planner picks the paper-optimal selection strategy.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
+from repro.api import Eq, Padding, QueryClient, Select
 from repro.core import outsource, Codec
-from repro.core.queries import (count_query, select_one_tuple,
-                                select_one_round, select_tree, pkfk_join,
-                                range_count, range_select)
 
 EMPLOYEE = [
     ["E101", "Adam", "Smith", "1000", "Sale"],
@@ -42,41 +43,51 @@ def main():
     print(f"  cloud 0's share of 'J' in tuple 2: {v0[:4]}...")
     print(f"  cloud 0's share of 'J' in tuple 4: {v1[:4]}...  (different!)\n")
 
+    print("== User: one QueryClient, per-query keys derived automatically ==")
+    client = QueryClient(db, key=42, backend="jnp")
+
     print("== COUNT (§3.1): how many employees named John? ==")
-    cnt, led = count_query(jax.random.PRNGKey(1), db, 1, "John")
-    print(f"  -> {cnt}   [{led}]\n")
+    res = client.count("FirstName", "John")
+    print(f"  -> {res.count}   [{res.ledger}]\n")
 
-    print("== SELECT one-tuple (§3.2.1): WHERE FirstName='Eve' ==")
-    rows, led = select_one_tuple(jax.random.PRNGKey(2), db, 1, "Eve")
-    print(f"  -> {rows[0]}\n")
+    print("== SELECT (§3.2): WHERE FirstName='John', planner-chosen ==")
+    plan = Select(Eq("FirstName", "John"))
+    for est in client.explain(plan):
+        print(f"  planner: {est.strategy:<10} ~{est.bits} bits, "
+              f"{est.rounds} rounds")
+    res = client.run(plan)
+    print(f"  -> chose {res.strategy!r}; addresses {res.addresses}; "
+          f"rows: {res.rows}  [rounds={res.ledger.rounds}]\n")
 
-    print("== SELECT one-round (§3.2.2): WHERE FirstName='John' ==")
-    rows, addrs, led = select_one_round(jax.random.PRNGKey(3), db, 1,
-                                        "John")
-    print(f"  -> addresses {addrs}; rows: {rows}  "
-          f"[rounds={led.rounds}]\n")
-
-    print("== SELECT tree-based (§3.2.2): WHERE Department='Sale' ==")
-    rows, addrs, led = select_tree(jax.random.PRNGKey(4), db, 4, "Sale")
-    print(f"  -> {len(rows)} rows in {led.rounds} Q&A rounds\n")
+    print("== SELECT forced strategies (§3.2.1 / §3.2.2) ==")
+    res = client.select("FirstName", "Eve", strategy="one_tuple")
+    print(f"  one_tuple  -> {res.rows[0]}")
+    res = client.select("Department", "Sale", strategy="tree")
+    print(f"  tree       -> {res.count} rows in {res.ledger.rounds} "
+          f"Q&A rounds")
+    # fake-row padding hides the true result size from the clouds
+    res = client.select("FirstName", "John", strategy="one_round",
+                        padding=Padding.to_rows(4))
+    print(f"  one_round  -> {len(res.rows)} real rows behind a 4-row "
+          f"padded fetch\n")
 
     print("== RANGE (§3.4): Salary in [1000, 2000] ==")
     # 14-bit SS-SUB grows the polynomial degree past our 20 clouds ->
     # apply the paper's degree-reduction (re-sharing) every 2 bits
-    cnt, led = range_count(jax.random.PRNGKey(5), db, 3, 1000, 2000,
-                           reduce_every=2)
-    rows, addrs, _ = range_select(jax.random.PRNGKey(6), db, 3, 1000,
-                                  2000, reduce_every=2)
-    print(f"  -> count {cnt}; rows {[r[0] for r in rows]}\n")
+    cnt = client.range_count("Salary", 1000, 2000, reduce_every=2)
+    sel = client.range_select("Salary", 1000, 2000, reduce_every=2)
+    print(f"  -> count {cnt.count}; rows {[r[0] for r in sel.rows]}\n")
 
     print("== PK/FK JOIN (§3.3.1): X(A,B) |x| Y(B,C) ==")
     codec6 = Codec(word_length=6)
     X = [["a1", "b1"], ["a2", "b2"], ["a3", "b3"]]
     Y = [["b1", "c1"], ["b2", "c2"], ["b2", "c3"], ["b2", "c4"]]
-    dbX = outsource(jax.random.PRNGKey(8), X, codec=codec6, n_shares=16)
-    dbY = outsource(jax.random.PRNGKey(9), Y, codec=codec6, n_shares=16)
-    rows, led = pkfk_join(dbX, dbY, 1, 0)
-    print(f"  -> {rows}")
+    dbX = outsource(jax.random.PRNGKey(8), X, column_names=["A", "B"],
+                    codec=codec6, n_shares=16)
+    dbY = outsource(jax.random.PRNGKey(9), Y, column_names=["B", "C"],
+                    codec=codec6, n_shares=16)
+    res = QueryClient(dbX, key=3).join(dbY, on=("B", "B"))
+    print(f"  -> {res.rows}")
     print("\nAll queries executed obliviously on shares; the clouds saw "
           "only uniform field elements.")
 

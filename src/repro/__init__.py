@@ -3,8 +3,10 @@
 Implements Dolev, Li, Sharma, "Privacy-Preserving Secret Shared Computations
 using MapReduce" (2018) as a production-grade JAX framework: Shamir
 secret-sharing over F_p (Mersenne-31), accumulating-automata string matching,
-oblivious count/selection/join/range queries, a fault-tolerant MapReduce
-runtime, and a 10-architecture LM zoo with multi-pod pjit sharding.
+oblivious count/selection/join/range queries behind the unified
+``repro.api.QueryClient`` (logical plans, cost-based strategy planner,
+backend registry), a fault-tolerant MapReduce runtime, and a
+10-architecture LM zoo with multi-pod pjit sharding.
 """
 import jax
 

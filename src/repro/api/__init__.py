@@ -1,0 +1,37 @@
+"""repro.api — the stable, composable client surface for the query suite.
+
+OBSCURE-style framing: the user holds a :class:`QueryClient` over the
+secret-shared clouds; queries are *logical plans* (``Count``, ``Select``,
+``RangeCount``, ``RangeSelect``, ``Join``) with columns by name, predicate
+objects and an explicit padding policy; a cost-based planner picks the
+paper-optimal selection strategy; backends are looked up in a registry
+(``jnp``, ``pallas``, or anything registered); and every query returns one
+:class:`QueryResult`.
+
+    from repro.api import QueryClient, Eq, Select
+    client = QueryClient(db, key=7, backend="jnp")
+    res = client.select("FirstName", "John")      # planner picks strategy
+    res.rows, res.count, res.ledger, res.strategy
+
+The legacy free functions in ``repro.core.queries`` remain as thin
+deprecated wrappers; new code should go through this package.
+"""
+from .backends import (Backend, available_backends, get_backend,
+                       register_backend)
+from .client import QueryClient
+from .executor import MapReduceExecutor
+from .planner import (DEFAULT_ELL, CostEstimate, DBStats,
+                      candidate_estimates, choose_select_strategy,
+                      estimate_select_cost)
+from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
+                    QueryResult, RangeCount, RangeSelect, Select,
+                    resolve_column)
+
+__all__ = [
+    "Backend", "available_backends", "get_backend", "register_backend",
+    "QueryClient", "MapReduceExecutor",
+    "DEFAULT_ELL", "CostEstimate", "DBStats", "candidate_estimates",
+    "choose_select_strategy", "estimate_select_cost",
+    "AUTO", "Between", "ColumnRef", "Count", "Eq", "Join", "Padding", "Plan",
+    "QueryResult", "RangeCount", "RangeSelect", "Select", "resolve_column",
+]

@@ -1,0 +1,107 @@
+"""Backend registry: named implementations of the cloud-side hot ops.
+
+Replaces the ad-hoc ``impl="jnp"|"pallas"`` strings that used to be threaded
+through every query function. A :class:`Backend` bundles the three share-space
+hotspots every query is built from:
+
+  * ``aa_match``     — accumulating-automata word match (§3.1, Table 3),
+  * ``ss_matmul``    — share-space mod-p matmul (the oblivious-fetch and
+                       embedding-lookup hotspot),
+  * ``match_matrix`` — all-pairs word match (the §3.3.1 join inner loop).
+
+All three operate on *raw* uint32 share arrays (cloud axis first where
+batched); polynomial-degree bookkeeping stays at the query layer. Queries
+resolve a backend by name via :func:`get_backend`; ``repro.api.QueryClient``
+exposes the choice as a constructor argument. Third parties can plug in
+alternatives (a GPU kernel set, a distributed runner) with
+:func:`register_backend` — see ``repro.api.executor.MapReduceExecutor`` for a
+wrapping backend that fans the map phase out over MapReduce splits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple, Union
+
+import jax
+
+Array = jax.Array
+_Op = Callable[[Array, Array], Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Named bundle of cloud-side primitives on raw uint32 share arrays.
+
+    aa_match:     (c, n, W, A), (c, W, A)    -> (c, n)
+    ss_matmul:    ([c,] M, K),  ([c,] K, N)  -> ([c,] M, N)
+    match_matrix: (c, nx, W, A), (c, ny, W, A) -> (c, nx, ny)
+    """
+    name: str
+    aa_match: _Op
+    ss_matmul: _Op
+    match_matrix: _Op
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+BackendLike = Union[str, Backend]
+
+
+def register_backend(backend: Backend, *, overwrite: bool = False) -> Backend:
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(backend: BackendLike) -> Backend:
+    """Resolve a backend name (a ``Backend`` instance passes through)."""
+    if isinstance(backend, Backend):
+        return backend
+    _ensure_builtins()
+    if backend == "pallas" and not _try_register_pallas():
+        raise ValueError("backend 'pallas' is unavailable: the Pallas "
+                         "kernel import failed on this jax build")
+    try:
+        return _REGISTRY[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; available: "
+                         f"{available_backends()}") from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    _ensure_builtins()
+    _try_register_pallas()
+    return tuple(sorted(_REGISTRY))
+
+
+def _ensure_builtins() -> None:
+    """Register the pure-jnp backend (import-cycle safe, no kernel deps)."""
+    if "jnp" in _REGISTRY:
+        return
+    from ..core import automata, field
+    from ..core.shamir import Shares
+
+    def _raw(op):                       # Shares-level op -> raw-array op
+        def run(a: Array, b: Array) -> Array:
+            return op(Shares(a, 0), Shares(b, 0)).values
+        return run
+
+    register_backend(Backend(
+        "jnp",
+        aa_match=_raw(automata.match_words),
+        ss_matmul=field.matmul,
+        match_matrix=_raw(automata.match_matrix)))
+
+
+def _try_register_pallas() -> bool:
+    """Register the Pallas kernels on first request; the pure-jnp query
+    suite must keep working on builds where the kernel import fails."""
+    if "pallas" in _REGISTRY:
+        return True
+    try:
+        from ..kernels import ops as kops
+    except ImportError:
+        return False
+    register_backend(kops.as_backend())
+    return True

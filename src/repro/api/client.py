@@ -1,0 +1,217 @@
+"""QueryClient — the unified user-side facade over the secret-shared clouds.
+
+One object replaces the nine free query functions: it owns the root PRNG key
+(per-query keys derive via ``jax.random.fold_in``, no manual threading), the
+backend choice (``repro.api.backends`` registry), the optional MapReduce
+executor, and the cost-based selection planner (``repro.api.planner``).
+Every query family returns the same :class:`~.plans.QueryResult`.
+
+The client *delegates* to the original protocol implementations in
+``repro.core.queries`` — it adds planning and ergonomics, never new protocol
+steps — so a client-run query produces exactly the rows and ``CostLedger``
+of the equivalent legacy call (asserted by ``tests/test_api.py``).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Optional, Tuple, Union
+
+import jax
+
+from ..core.costs import CostLedger
+from ..core.engine import SecretSharedDB
+from ..core.queries import (CardinalityError, count_query, equijoin,
+                            pkfk_join, range_count, range_select,
+                            select_one_round, select_one_tuple, select_tree)
+from . import planner as _planner
+from .backends import BackendLike, get_backend
+from .executor import MapReduceExecutor
+from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
+                    QueryResult, RangeCount, RangeSelect, Select,
+                    resolve_column)
+
+
+class QueryClient:
+    """Authorized-user facade over one outsourced relation.
+
+    db:              the user's secret-shared relation (``core.outsource``).
+    key:             root PRNG key (or int seed); per-query keys derive via
+                     ``fold_in`` so identical plans replay identically.
+    backend:         registered backend name or Backend instance.
+    executor:        optional :class:`MapReduceExecutor` — fans every
+                     cloud-side map phase out over fault-tolerant splits.
+    round_cost_bits: planner latency weight — how many communication bits
+                     one extra protocol round is worth to this user.
+    """
+
+    def __init__(self, db: SecretSharedDB, key, *,
+                 backend: BackendLike = "jnp",
+                 executor: Optional[MapReduceExecutor] = None,
+                 round_cost_bits: int = 0):
+        self.db = db
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self._root_key = key
+        self.backend = get_backend(backend)
+        if executor is not None:
+            self.backend = executor.wrap(self.backend)
+        self.executor = executor
+        self.round_cost_bits = round_cost_bits
+        self._query_counter = itertools.count()
+
+    # -- keys ---------------------------------------------------------------
+    def _next_key(self) -> jax.Array:
+        return jax.random.fold_in(self._root_key, next(self._query_counter))
+
+    # -- planning -----------------------------------------------------------
+    def stats(self) -> _planner.DBStats:
+        return _planner.DBStats.of(self.db)
+
+    def explain(self, plan: Select):
+        """Planner's eligible strategies for ``plan``, cheapest first."""
+        cands = _planner.candidate_estimates(
+            self.stats(), ell=plan.expected_matches,
+            padded_rows=plan.padding.rows)
+        return sorted(cands,
+                      key=lambda e: (e.score(self.round_cost_bits), e.rounds))
+
+    # -- execution ----------------------------------------------------------
+    def run(self, plan: Plan) -> QueryResult:
+        if isinstance(plan, Count):
+            return self._run_count(plan)
+        if isinstance(plan, Select):
+            return self._run_select(plan)
+        if isinstance(plan, RangeCount):
+            return self._run_range_count(plan)
+        if isinstance(plan, RangeSelect):
+            return self._run_range_select(plan)
+        if isinstance(plan, Join):
+            return self._run_join(plan)
+        raise TypeError(f"not a logical plan: {plan!r}")
+
+    def _run_count(self, plan: Count) -> QueryResult:
+        col = resolve_column(self.db, plan.where.column)
+        cnt, led = count_query(self._next_key(), self.db, col,
+                               plan.where.pattern, backend=self.backend)
+        return QueryResult(plan=plan, ledger=led, strategy="count", count=cnt)
+
+    def _run_select(self, plan: Select) -> QueryResult:
+        col = resolve_column(self.db, plan.where.column)
+        pat = plan.where.pattern
+        key = self._next_key()
+        strategy = plan.strategy
+        if strategy == AUTO:
+            strategy = _planner.choose_select_strategy(
+                self.stats(), ell=plan.expected_matches,
+                padded_rows=plan.padding.rows,
+                round_cost_bits=self.round_cost_bits).strategy
+
+        led = CostLedger()
+        if strategy == "one_tuple":
+            if plan.padding.rows:
+                raise ValueError(
+                    "one_tuple returns the single tuple directly and cannot "
+                    "pad its output size — use one_round/tree (or auto, "
+                    "which excludes one_tuple when padding is requested)")
+            try:
+                rows, led = select_one_tuple(key, self.db, col, pat,
+                                             ledger=led,
+                                             backend=self.backend)
+                return QueryResult(plan=plan, ledger=led,
+                                   strategy="one_tuple", rows=rows)
+            except CardinalityError as e:
+                if plan.strategy != AUTO:
+                    raise
+                # cardinality hint was wrong (ℓ ≠ 1): replan with the true ℓ
+                # the aborted count phase just learned, on a fresh key.
+                # ``led`` keeps the aborted attempt's count-phase cost so the
+                # result's ledger reports everything the protocol spent.
+                strategy = _planner.choose_select_strategy(
+                    self.stats(), ell=e.count,
+                    padded_rows=plan.padding.rows,
+                    round_cost_bits=self.round_cost_bits).strategy
+                key, known_count = self._next_key(), e.count
+        else:
+            known_count = None
+
+        if strategy == "one_round":
+            rows, addrs, led = select_one_round(
+                key, self.db, col, pat, ledger=led,
+                padded_rows=plan.padding.rows, backend=self.backend)
+        else:                                   # tree
+            rows, addrs, led = select_tree(
+                key, self.db, col, pat, ledger=led, branching=plan.branching,
+                padded_rows=plan.padding.rows, known_count=known_count,
+                backend=self.backend)
+        return QueryResult(plan=plan, ledger=led, strategy=strategy,
+                           rows=rows, addresses=addrs)
+
+    def _run_range_count(self, plan: RangeCount) -> QueryResult:
+        # Range counting is pure element-wise share arithmetic (SS-SUB
+        # ripple + sum) — it has no registry hotspot, so the client's
+        # backend/executor choice does not apply to this family.
+        col = resolve_column(self.db, plan.where.column)
+        cnt, led = range_count(self._next_key(), self.db, col, plan.where.lo,
+                               plan.where.hi, reduce_every=plan.reduce_every)
+        return QueryResult(plan=plan, ledger=led, strategy="range_count",
+                           count=cnt)
+
+    def _run_range_select(self, plan: RangeSelect) -> QueryResult:
+        col = resolve_column(self.db, plan.where.column)
+        rows, addrs, led = range_select(
+            self._next_key(), self.db, col, plan.where.lo, plan.where.hi,
+            reduce_every=plan.reduce_every, padded_rows=plan.padding.rows,
+            backend=self.backend)
+        return QueryResult(plan=plan, ledger=led, strategy="range_select",
+                           rows=rows, addresses=addrs)
+
+    def _run_join(self, plan: Join) -> QueryResult:
+        col_l = resolve_column(self.db, plan.on[0])
+        col_r = resolve_column(plan.right, plan.on[1])
+        if plan.padding.rows:
+            raise ValueError("joins take Padding.fake_values (fake join "
+                             "jobs), not Padding.rows")
+        key = self._next_key()
+        if plan.kind == "pkfk":
+            if plan.padding.values:
+                raise ValueError(
+                    "pkfk_join's output size is always n_y (one reducer per "
+                    "child tuple) — nothing to hide; Padding.fake_values "
+                    "applies to kind='equi' only")
+            rows, led = pkfk_join(key, self.db, plan.right, col_l, col_r,
+                                  backend=self.backend)
+        else:
+            rows, led = equijoin(key, self.db, plan.right, col_l, col_r,
+                                 padded_values=plan.padding.values,
+                                 backend=self.backend)
+        return QueryResult(plan=plan, ledger=led, strategy=plan.kind,
+                           rows=rows)
+
+    # -- conveniences (build the plan, run it) ------------------------------
+    def count(self, column: ColumnRef, pattern: str) -> QueryResult:
+        return self.run(Count(Eq(column, pattern)))
+
+    def select(self, column: ColumnRef, pattern: str, *,
+               strategy: str = AUTO, expected_matches: Optional[int] = None,
+               padding: Padding = Padding.NONE,
+               branching: Optional[int] = None) -> QueryResult:
+        return self.run(Select(Eq(column, pattern), strategy=strategy,
+                               expected_matches=expected_matches,
+                               padding=padding, branching=branching))
+
+    def range_count(self, column: ColumnRef, lo: int, hi: int, *,
+                    reduce_every: int = 0) -> QueryResult:
+        return self.run(RangeCount(Between(column, lo, hi),
+                                   reduce_every=reduce_every))
+
+    def range_select(self, column: ColumnRef, lo: int, hi: int, *,
+                     reduce_every: int = 0,
+                     padding: Padding = Padding.NONE) -> QueryResult:
+        return self.run(RangeSelect(Between(column, lo, hi),
+                                    reduce_every=reduce_every,
+                                    padding=padding))
+
+    def join(self, right: SecretSharedDB,
+             on: Tuple[ColumnRef, ColumnRef], *, kind: str = "pkfk",
+             padding: Padding = Padding.NONE) -> QueryResult:
+        return self.run(Join(right=right, on=on, kind=kind, padding=padding))

@@ -1,0 +1,133 @@
+"""Cost-based selection-strategy planner (paper §3.2 / Table 1 formulas).
+
+The paper gives per-algorithm communication/round costs; this module turns
+them into static ``(bits, rounds)`` estimates in exactly the units
+``CostLedger`` records (field elements × 31 bits), so the planner's numbers
+are directly comparable with measured ledgers:
+
+  one_tuple  (§3.2.1, Alg 3): count + pattern + one m·w·A tuple; 2 rounds.
+               Only valid when the predicate hits exactly ℓ = 1 tuple.
+  one_round  (§3.2.2):        pattern + n match bits + ℓ'×n fetch; 2 rounds.
+  tree       (§3.2.2, Alg 4): count + pattern + per-round block counts +
+               ℓ address-fetches + ℓ'×n fetch;
+               rounds ≤ ⌊log_ℓ n⌋ + ⌊log₂ ℓ⌋ + 1 (+ count + fetch).
+
+The crossover the planner captures is the paper's own: ``one_round`` ships
+(and the user interpolates) all n match bits — unbeatable for small n, linear
+pain for large n — while ``tree`` replaces that n-vector with O(ℓ·log n)
+block counts at the price of extra rounds. Estimates are pure functions of
+the public relation statistics (n, m, w, A, c′) plus the cardinality hint ℓ,
+so the planner runs without touching shares.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+from ..core.costs import WORD_BITS
+from ..core.engine import SecretSharedDB
+
+#: ℓ assumed when the plan carries no ``expected_matches`` hint. Two is the
+#: smallest multi-match cardinality: it keeps ``one_tuple`` out of the
+#: running (which would raise on ℓ≠1) without inflating tree-round counts.
+DEFAULT_ELL = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class CostEstimate:
+    """Planner-side (bits, rounds) prediction for one strategy."""
+    strategy: str
+    bits: int
+    rounds: int
+
+    def score(self, round_cost_bits: int = 0) -> int:
+        """Total cost with rounds priced at ``round_cost_bits`` each."""
+        return self.bits + round_cost_bits * self.rounds
+
+
+@dataclasses.dataclass(frozen=True)
+class DBStats:
+    """The public statistics the planner works from (§2.3: the adversary —
+    and hence the planner — may know n, m and the schema)."""
+    n: int          # tuples
+    m: int          # attributes
+    c: int          # clouds / shares
+    w: int          # word length
+    a: int          # alphabet size
+
+    @classmethod
+    def of(cls, db: SecretSharedDB) -> "DBStats":
+        return cls(n=db.n_tuples, m=db.n_attrs, c=db.n_shares,
+                   w=db.codec.word_length, a=db.codec.alphabet_size)
+
+
+def _pattern_elems(s: DBStats) -> int:
+    return s.c * s.w * s.a
+
+
+def _count_elems(s: DBStats) -> int:
+    # Alg 2: pattern up, one word per cloud down.
+    return _pattern_elems(s) + s.c
+
+
+def _fetch_elems(s: DBStats, ell: int, padded_rows: Optional[int]) -> int:
+    # ℓ'×n one-hot matrix up, ℓ' tuples down (fetch_by_addresses).
+    ellp = max(padded_rows or ell, ell)
+    return s.c * ellp * s.n + s.c * ellp * s.m * s.w * s.a
+
+
+def estimate_select_cost(strategy: str, stats: DBStats, *,
+                         ell: int = DEFAULT_ELL,
+                         padded_rows: Optional[int] = None) -> CostEstimate:
+    """(bits, rounds) for one §3.2 strategy at cardinality ℓ."""
+    s = stats
+    if strategy == "one_tuple":
+        if ell != 1:
+            raise ValueError("one_tuple requires ℓ = 1")
+        elems = _count_elems(s) + _pattern_elems(s) + s.c * s.m * s.w * s.a
+        return CostEstimate("one_tuple", elems * WORD_BITS, rounds=2)
+    if strategy == "one_round":
+        elems = _pattern_elems(s) + s.c * s.n + _fetch_elems(s, ell,
+                                                             padded_rows)
+        return CostEstimate("one_round", elems * WORD_BITS, rounds=2)
+    if strategy == "tree":
+        if ell <= 1:
+            # Alg 4 line 2: count, one whole-table Address_fetch, fetch.
+            elems = (_count_elems(s) + _pattern_elems(s) + s.c
+                     + _fetch_elems(s, max(ell, 1), padded_rows))
+            return CostEstimate("tree", elems * WORD_BITS, rounds=3)
+        qa_rounds = (math.floor(math.log(max(s.n, 2), ell))
+                     + math.floor(math.log2(ell)) + 1)       # Theorem 4
+        elems = (_count_elems(s) + _pattern_elems(s)
+                 + qa_rounds * ell * s.c                     # block counts
+                 + ell * s.c                                 # address fetches
+                 + _fetch_elems(s, ell, padded_rows))
+        return CostEstimate("tree", elems * WORD_BITS,
+                            rounds=1 + qa_rounds + 1)
+    raise ValueError(f"unknown selection strategy {strategy!r}")
+
+
+def candidate_estimates(stats: DBStats, *, ell: Optional[int] = None,
+                        padded_rows: Optional[int] = None
+                        ) -> List[CostEstimate]:
+    """All eligible strategies for cardinality hint ℓ (None = unknown)."""
+    known_one = ell == 1
+    ell_eff = DEFAULT_ELL if ell is None else max(ell, 1)
+    out = []
+    if known_one and not padded_rows:
+        out.append(estimate_select_cost("one_tuple", stats, ell=1))
+    for strat in ("one_round", "tree"):
+        out.append(estimate_select_cost(strat, stats, ell=ell_eff,
+                                        padded_rows=padded_rows))
+    return out
+
+
+def choose_select_strategy(stats: DBStats, *, ell: Optional[int] = None,
+                           padded_rows: Optional[int] = None,
+                           round_cost_bits: int = 0) -> CostEstimate:
+    """Pick the paper-optimal strategy: min bits, rounds as tie-break
+    (price a round via ``round_cost_bits`` to trade bandwidth for latency).
+    """
+    cands = candidate_estimates(stats, ell=ell, padded_rows=padded_rows)
+    return min(cands, key=lambda e: (e.score(round_cost_bits), e.rounds))

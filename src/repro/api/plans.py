@@ -1,0 +1,211 @@
+"""Logical query plans — the user-facing half of the OBSCURE-style API.
+
+A plan is a small frozen dataclass describing *what* to compute (predicate,
+columns by name, padding policy); the :class:`repro.api.QueryClient` decides
+*how* (strategy, backend, keys) and returns a uniform :class:`QueryResult`.
+Plans never touch shares: they are plain data, cheap to build, hash and log.
+
+Padding is explicit because it is a security knob, not a tuning knob: the
+paper's output-size attack (§3.2.2 / §3.3.2 leakage discussion) is defeated
+by fetching ``Padding.rows`` fake rows (selection) or running
+``Padding.values`` fake join jobs (equijoin) so the clouds cannot learn the
+true result size ℓ.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple, Union
+
+from ..core.costs import CostLedger
+from ..core.engine import SecretSharedDB
+
+ColumnRef = Union[str, int]
+
+AUTO = "auto"
+SELECT_STRATEGIES = ("one_tuple", "one_round", "tree")
+JOIN_KINDS = ("pkfk", "equi")
+
+
+def resolve_column(db: SecretSharedDB, column: ColumnRef) -> int:
+    """Name-or-index -> validated column index of ``db``."""
+    names = list(db.column_names)
+    if isinstance(column, int):
+        if not 0 <= column < db.n_attrs:
+            raise IndexError(f"column index {column} out of range "
+                             f"(relation has {db.n_attrs} attributes)")
+        return column
+    try:
+        return names.index(column)
+    except ValueError:
+        raise KeyError(f"unknown column {column!r}; relation has "
+                       f"{names}") from None
+
+
+# ---------------------------------------------------------------------------
+# predicates
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Eq:
+    """Equality predicate: ``column = pattern`` (exact word, §3.1.2)."""
+    column: ColumnRef
+    pattern: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Between:
+    """Inclusive range predicate: ``lo <= column <= hi`` (§3.4)."""
+    column: ColumnRef
+    lo: int
+    hi: int
+
+    def __post_init__(self):
+        if self.lo > self.hi:
+            raise ValueError(f"empty range: lo={self.lo} > hi={self.hi}")
+
+
+# ---------------------------------------------------------------------------
+# padding policy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Padding:
+    """Output-size-attack resistance policy.
+
+    rows:   pad the oblivious fetch to this many rows (≥ true ℓ); the extra
+            rows carry all-zero one-hots and fetch nothing.
+    values: number of fake (no-op) equijoin jobs, hiding the number of
+            common join values k.
+    """
+    rows: Optional[int] = None
+    values: int = 0
+
+    def __post_init__(self):
+        if self.rows is not None and self.rows < 0:
+            raise ValueError("Padding.rows must be >= 0")
+        if self.values < 0:
+            raise ValueError("Padding.values must be >= 0")
+
+    @classmethod
+    def to_rows(cls, rows: int) -> "Padding":
+        return cls(rows=rows)
+
+    @classmethod
+    def fake_values(cls, values: int) -> "Padding":
+        return cls(values=values)
+
+
+Padding.NONE = Padding()
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+class Plan:
+    """Marker base class for logical plans."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Count(Plan):
+    """COUNT(*) WHERE col = pattern (§3.1, Algorithm 2)."""
+    where: Eq
+
+
+@dataclasses.dataclass(frozen=True)
+class Select(Plan):
+    """SELECT * WHERE col = pattern (§3.2, Algorithms 3 & 4).
+
+    strategy: ``"auto"`` lets the cost-based planner pick among the paper's
+    three algorithms using the §3.2 bit/round formulas; or force one of
+    ``"one_tuple" | "one_round" | "tree"``. ``expected_matches`` is the
+    planner's cardinality hint (ℓ); ``one_tuple`` is only eligible when the
+    hint says ℓ = 1 (the algorithm itself verifies and raises otherwise).
+    """
+    where: Eq
+    strategy: str = AUTO
+    expected_matches: Optional[int] = None
+    padding: Padding = Padding.NONE
+    branching: Optional[int] = None     # tree fan-out override
+
+    def __post_init__(self):
+        if self.strategy not in (AUTO,) + SELECT_STRATEGIES:
+            raise ValueError(f"unknown strategy {self.strategy!r}; choose "
+                             f"from {(AUTO,) + SELECT_STRATEGIES}")
+        if self.expected_matches is not None and self.expected_matches < 0:
+            raise ValueError("expected_matches must be >= 0")
+        if self.padding.values:
+            raise ValueError("selection hides the result size with "
+                             "Padding.rows (fake fetch rows); "
+                             "Padding.fake_values applies to equijoins")
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeCount(Plan):
+    """COUNT(*) WHERE lo <= col <= hi (§3.4, Algorithm 5).
+
+    reduce_every > 0 inserts the paper's degree-reduction (re-sharing) round
+    every that many SS-SUB bit positions, trading rounds for cloud count.
+    """
+    where: Between
+    reduce_every: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeSelect(Plan):
+    """Fetch all tuples with col in [lo, hi] (§3.4 + §3.2 fetch)."""
+    where: Between
+    reduce_every: int = 0
+    padding: Padding = Padding.NONE
+
+    def __post_init__(self):
+        if self.padding.values:
+            raise ValueError("selection hides the result size with "
+                             "Padding.rows (fake fetch rows); "
+                             "Padding.fake_values applies to equijoins")
+
+
+@dataclasses.dataclass(frozen=True)
+class Join(Plan):
+    """Oblivious join of the client's relation with ``right`` (§3.3).
+
+    on:   (left column, right column) — names or indices.
+    kind: ``"pkfk"`` (§3.3.1, left column is a primary key) or ``"equi"``
+          (§3.3.2, join values may repeat on both sides).
+    """
+    right: SecretSharedDB
+    on: Tuple[ColumnRef, ColumnRef]
+    kind: str = "pkfk"
+    padding: Padding = Padding.NONE
+
+    def __post_init__(self):
+        if self.kind not in JOIN_KINDS:
+            raise ValueError(f"unknown join kind {self.kind!r}; choose from "
+                             f"{JOIN_KINDS}")
+        if len(self.on) != 2:
+            raise ValueError("Join.on must be a (left, right) column pair")
+
+
+# ---------------------------------------------------------------------------
+# result
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """Uniform result for every query family.
+
+    rows/addresses are None for pure counting queries; count is the number
+    of satisfying tuples whenever it is known. ``strategy`` echoes the
+    executed algorithm (planner-chosen or forced) and ``plan`` echoes the
+    logical plan for logging/replay.
+    """
+    plan: Plan
+    ledger: CostLedger
+    strategy: str
+    rows: Optional[List[List[str]]] = None
+    count: Optional[int] = None
+    addresses: Optional[List[int]] = None
+
+    def __post_init__(self):
+        if self.count is None and self.rows is not None:
+            object.__setattr__(self, "count", len(self.rows))

@@ -10,9 +10,10 @@ chaining per-position one-hot inner products:
 positions hold the terminator one-hot, equality is exact-word (the paper's
 "John " fix). Everything here is per-cloud local — no cross-share traffic.
 
-Two implementations:
-  * ``impl="jnp"``   — reference, pure jnp (this file),
-  * ``impl="pallas"``— fused VMEM-tiled kernel (repro.kernels.ops.aa_match).
+Two implementations, selected through the backend registry
+(``repro.api.backends``):
+  * ``backend="jnp"``    — reference, pure jnp (this file),
+  * ``backend="pallas"`` — fused VMEM-tiled kernel (repro.kernels.ops).
 """
 from __future__ import annotations
 

@@ -1,0 +1,40 @@
+"""Shared backend resolution for the query suite.
+
+Queries accept ``backend=`` (a registered name or ``repro.api.backends
+.Backend`` instance). The historical ``impl="jnp"|"pallas"`` strings are
+still accepted as a deprecated alias so pre-registry callers keep working.
+The import of the registry is deferred: ``repro.api`` sits *above* the core
+layer, and resolving at call time keeps the layering acyclic.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+from ..shamir import Shares
+
+
+def resolve_backend(backend, impl: Optional[str] = None):
+    """-> Backend; ``impl`` (deprecated) overrides ``backend`` when given."""
+    from ...api import backends as _registry
+    if impl is not None:
+        warnings.warn(
+            "the impl= argument is deprecated; use backend= (see "
+            "repro.api.backends)", DeprecationWarning, stacklevel=3)
+        backend = impl
+    return _registry.get_backend(backend)
+
+
+def match_bits(be, col: Shares, pattern: Shares) -> Shares:
+    """Backend AA match with the query layer's degree bookkeeping:
+    degree = (deg_col + deg_pat) · word_length (Table 3 chain)."""
+    w = col.values.shape[-2]
+    return Shares(be.aa_match(col.values, pattern.values),
+                  (col.degree + pattern.degree) * w)
+
+
+def match_matrix_shares(be, col_x: Shares, col_y: Shares) -> Shares:
+    """Backend all-pairs match with the same degree bookkeeping."""
+    w = col_x.values.shape[-2]
+    return Shares(be.match_matrix(col_x.values, col_y.values),
+                  (col_x.degree + col_y.degree) * w)

@@ -3,6 +3,9 @@
 User sends a secret-shared predicate (O(1) communication — independent of n),
 each cloud runs the accumulating automaton over the target attribute (nw work)
 and returns ONE share; the user interpolates c' = deg+1 values (O(1) work).
+
+Prefer ``repro.api.QueryClient.count`` — this free function remains as the
+protocol implementation the client delegates to.
 """
 from __future__ import annotations
 
@@ -11,17 +14,20 @@ from typing import Optional, Tuple
 import jax
 import numpy as np
 
-from .. import automata, encoding, shamir
+from .. import encoding, shamir
 from ..costs import CostLedger
 from ..engine import SecretSharedDB
+from ._common import match_bits, resolve_backend
 
 
 def count_query(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
                 *, ledger: Optional[CostLedger] = None,
-                impl: str = "jnp") -> Tuple[int, CostLedger]:
+                backend="jnp", impl: Optional[str] = None
+                ) -> Tuple[int, CostLedger]:
     """COUNT(*) WHERE col = pattern — oblivious, one round."""
     ledger = ledger if ledger is not None else CostLedger()
     codec = db.codec
+    be = resolve_backend(backend, impl)
 
     # --- user side: encode + share the predicate (Alg 2 line 1-2) ----------
     p_sh = encoding.share_pattern(key, codec, pattern,
@@ -31,13 +37,7 @@ def count_query(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
 
     # --- cloud side: AA over every value of the attribute (MAP_count) ------
     col = db.column(column)                      # (c, n, W, A)
-    if impl == "pallas":
-        from ...kernels import ops as kops
-        match_vals = kops.aa_match(col.values, p_sh.values)
-        deg = (col.degree + p_sh.degree) * codec.word_length
-        counts = shamir.Shares(match_vals, deg).sum(axis=0)
-    else:
-        counts = automata.count_column(col, p_sh)    # (c,) share of count
+    counts = match_bits(be, col, p_sh).sum(axis=0)   # (c,) count share
     ledger.cloud(db.n_tuples * codec.word_length * codec.alphabet_size)
 
     # --- cloud -> user: one word per cloud ---------------------------------

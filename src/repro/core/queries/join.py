@@ -14,6 +14,12 @@ then per common value the first layer obliviously fetches the matching tuples
 (one-hot matrix fetch) and hands the *still-shared* results to its same-index
 second-layer cloud, which emits the ℓx×ℓy concatenations. Clouds within a
 layer never communicate.
+
+Prefer ``repro.api.QueryClient.join``; the canonical ``pkfk_join`` signature
+is key-first like the rest of the suite (the key re-randomizes the outgoing
+joined shares with owner-provisioned zero-sharings so transmitted shares
+cannot be linked to the stored relation); the historical key-less positional
+form is still accepted.
 """
 from __future__ import annotations
 
@@ -23,22 +29,45 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import automata, encoding, field, shamir
+from .. import encoding, field, shamir
 from ..costs import CostLedger
 from ..engine import SecretSharedDB
 from ..shamir import Shares
+from ._common import match_matrix_shares, resolve_backend
 
 
 # ---------------------------------------------------------------------------
 # §3.3.1 — PK/FK oblivious join
 # ---------------------------------------------------------------------------
 
-def pkfk_join(dbX: SecretSharedDB, dbY: SecretSharedDB, col_x: int, col_y: int,
-              *, ledger: Optional[CostLedger] = None,
-              impl: str = "jnp") -> Tuple[List[List[str]], CostLedger]:
-    """X ⋈ Y on X.col_x = Y.col_y, where col_x is a primary key of X."""
+def _rerandomize(key: jax.Array, s: Shares) -> Shares:
+    """Add a fresh sharing of zero: same secret, unlinkable share values."""
+    zero = shamir.share(key, jnp.zeros(s.shape, dtype=s.values.dtype),
+                        n_shares=s.n_shares, degree=s.degree)
+    return s + zero
+
+
+def pkfk_join(*args, **kwargs) -> Tuple[List[List[str]], CostLedger]:
+    """X ⋈ Y on X.col_x = Y.col_y, where col_x is a primary key of X.
+
+    Canonical call: ``pkfk_join(key, dbX, dbY, col_x, col_y)`` — key-first
+    like every other query. The legacy key-less form
+    ``pkfk_join(dbX, dbY, col_x, col_y)`` (positional or with ``col_x=``/
+    ``col_y=`` keywords; no output re-randomization) is still accepted.
+    """
+    if args and isinstance(args[0], SecretSharedDB):  # key-less positional
+        args = (kwargs.pop("key", None),) + args
+    return _pkfk_join(*args, **kwargs)
+
+
+def _pkfk_join(key: Optional[jax.Array], dbX: SecretSharedDB,
+               dbY: SecretSharedDB, col_x: int, col_y: int, *,
+               ledger: Optional[CostLedger] = None,
+               backend="jnp", impl: Optional[str] = None
+               ) -> Tuple[List[List[str]], CostLedger]:
     ledger = ledger if ledger is not None else CostLedger()
     codec = dbX.codec
+    be = resolve_backend(backend, impl)
     c = dbX.n_shares
     nx, ny = dbX.n_tuples, dbY.n_tuples
     W, A = codec.word_length, codec.alphabet_size
@@ -46,18 +75,13 @@ def pkfk_join(dbX: SecretSharedDB, dbY: SecretSharedDB, col_x: int, col_y: int,
     # --- cloud: match matrix over join columns (the n² string matches) -----
     bx = dbX.column(col_x)                       # (c, nx, W, A)
     by = dbY.column(col_y)                       # (c, ny, W, A)
-    if impl == "pallas":
-        from ...kernels import ops as kops
-        m_vals = kops.match_matrix(bx.values, by.values)
-        M = Shares(m_vals, (bx.degree + by.degree) * W)
-    else:
-        M = automata.match_matrix(bx, by)        # (c, nx, ny)
+    M = match_matrix_shares(be, bx, by)          # (c, nx, ny)
     ledger.cloud(nx * ny * W * A)
 
     # --- reducer j: Σ_i M[i,j] · X_tuple_i  (share-space select) -----------
     relX = dbX.relation.values                   # (c, nx, m, W, A)
     mX = dbX.n_attrs
-    joined_x_flat = field.matmul(
+    joined_x_flat = be.ss_matmul(
         jnp.swapaxes(M.values, -1, -2),          # (c, ny, nx)
         relX.reshape(c, nx, mX * W * A))         # -> (c, ny, m·W·A)
     joined_x = Shares(joined_x_flat.reshape(c, ny, mX, W, A),
@@ -66,6 +90,15 @@ def pkfk_join(dbX: SecretSharedDB, dbY: SecretSharedDB, col_x: int, col_y: int,
 
     # child's own attributes ride along at base degree
     y_part = dbY.relation                        # (c, ny, mY, W, A)
+
+    # key-threaded output re-randomization: each cloud adds its slice of an
+    # owner-provisioned zero-sharing before transmitting, so the returned
+    # shares cannot be correlated with the stored relation shares.
+    if key is not None:
+        kx, ky = jax.random.split(key)
+        joined_x = _rerandomize(kx, joined_x)
+        y_part = _rerandomize(ky, y_part)
+        ledger.cloud(ny * (mX + dbY.n_attrs) * W * A)
 
     # --- cloud -> user: n_y joined tuples per cloud -------------------------
     ledger.round()
@@ -91,7 +124,7 @@ def pkfk_join(dbX: SecretSharedDB, dbY: SecretSharedDB, col_x: int, col_y: int,
 # ---------------------------------------------------------------------------
 
 def _fetch_shares(key: jax.Array, db: SecretSharedDB, addresses: List[int],
-                  ledger: CostLedger) -> Shares:
+                  ledger: CostLedger, be) -> Shares:
     """Layer-1 oblivious fetch that KEEPS the result in share form."""
     n = db.n_tuples
     m_host = np.zeros((len(addresses), n), dtype=np.uint32)
@@ -101,7 +134,7 @@ def _fetch_shares(key: jax.Array, db: SecretSharedDB, addresses: List[int],
                                   degree=db.base_degree)
     ledger.send(db.n_shares * len(addresses) * n)
     c, _, m, w, a = db.relation.values.shape
-    fetched = field.matmul(m_sh.values,
+    fetched = be.ss_matmul(m_sh.values,
                            db.relation.values.reshape(c, n, m * w * a))
     ledger.cloud(len(addresses) * n * m * w * a)
     return Shares(fetched.reshape(c, len(addresses), m, w, a),
@@ -111,7 +144,8 @@ def _fetch_shares(key: jax.Array, db: SecretSharedDB, addresses: List[int],
 def equijoin(key: jax.Array, dbX: SecretSharedDB, dbY: SecretSharedDB,
              col_x: int, col_y: int, *,
              ledger: Optional[CostLedger] = None,
-             padded_values: int = 0
+             padded_values: int = 0,
+             backend="jnp", impl: Optional[str] = None
              ) -> Tuple[List[List[str]], CostLedger]:
     """General equijoin; join values may repeat in BOTH relations.
 
@@ -120,6 +154,7 @@ def equijoin(key: jax.Array, dbX: SecretSharedDB, dbY: SecretSharedDB,
     """
     ledger = ledger if ledger is not None else CostLedger()
     codec = dbX.codec
+    be = resolve_backend(backend, impl)
 
     # --- step 1: user interpolates both join columns ------------------------
     bx, by = dbX.column(col_x), dbY.column(col_y)
@@ -150,8 +185,8 @@ def equijoin(key: jax.Array, dbX: SecretSharedDB, dbY: SecretSharedDB,
             addr_x, addr_y = [0], [0]
         # layer 1: oblivious fetches (one round per value — Thm 6's 2k rounds)
         ledger.round(2)
-        Xp = _fetch_shares(kx, dbX, addr_x, ledger)     # (c, ℓx, mX, W, A)
-        Yp = _fetch_shares(ky, dbY, addr_y, ledger)     # (c, ℓy, mY, W, A)
+        Xp = _fetch_shares(kx, dbX, addr_x, ledger, be)  # (c, ℓx, mX, W, A)
+        Yp = _fetch_shares(ky, dbY, addr_y, ledger, be)  # (c, ℓy, mY, W, A)
 
         # layer-1 -> layer-2 hand-off (cloud i -> cloud i): counted as cloud
         # traffic, not user traffic; layer 2 concatenates all ℓx×ℓy pairs.

@@ -109,7 +109,11 @@ def _in_range_bits(key: jax.Array, db: SecretSharedDB, column: int,
 def range_count(key: jax.Array, db: SecretSharedDB, column: int,
                 lo: int, hi: int, *, ledger: Optional[CostLedger] = None,
                 reduce_every: int = 0) -> Tuple[int, CostLedger]:
-    """COUNT(*) WHERE lo <= col <= hi (Algorithm 5, counting phase)."""
+    """COUNT(*) WHERE lo <= col <= hi (Algorithm 5, counting phase).
+
+    Backend-independent by construction: SS-SUB is element-wise share
+    arithmetic with no registry hotspot (no aa_match / ss_matmul).
+    """
     ledger = ledger if ledger is not None else CostLedger()
     ind = _in_range_bits(key, db, column, lo, hi, ledger=ledger,
                          reduce_every=reduce_every)
@@ -122,7 +126,8 @@ def range_count(key: jax.Array, db: SecretSharedDB, column: int,
 
 def range_select(key: jax.Array, db: SecretSharedDB, column: int,
                  lo: int, hi: int, *, ledger: Optional[CostLedger] = None,
-                 reduce_every: int = 0, padded_rows: Optional[int] = None
+                 reduce_every: int = 0, padded_rows: Optional[int] = None,
+                 backend="jnp", impl: Optional[str] = None
                  ) -> Tuple[List[List[str]], List[int], CostLedger]:
     """Fetch all tuples with col ∈ [lo, hi] (Alg 5 "simple solution" path:
     per-tuple indicator bits -> addresses -> oblivious matrix fetch)."""
@@ -135,5 +140,6 @@ def range_select(key: jax.Array, db: SecretSharedDB, column: int,
     ledger.user((ind.degree + 1) * db.n_tuples)
     addresses = [int(i) for i in np.nonzero(v)[0]]
     rows = fetch_by_addresses(k_fetch, db, addresses, ledger=ledger,
-                              padded_rows=padded_rows)
+                              padded_rows=padded_rows, backend=backend,
+                              impl=impl)
     return rows, addresses, ledger

@@ -12,6 +12,8 @@ Three variants, exactly as the paper structures them:
   address of a single-hit block via Address_fetch (Σ matchᵢ · i).
 
 All cloud work is oblivious: identical ops on every tuple regardless of data.
+Cloud-side hotspots go through the backend registry (``repro.api.backends``);
+prefer ``repro.api.QueryClient.select``, which also cost-plans the strategy.
 """
 from __future__ import annotations
 
@@ -22,12 +24,24 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import automata, encoding, field, shamir
+from .. import encoding, field, shamir
 from ..costs import CostLedger
-from ..encoding import Codec
 from ..engine import SecretSharedDB
 from ..shamir import Shares
+from ._common import match_bits as _match_bits
+from ._common import resolve_backend
 from .count import count_query
+
+
+class CardinalityError(ValueError):
+    """A selection algorithm's ℓ precondition failed (e.g. one_tuple on a
+    multi-match predicate). Carries the true ``count`` the aborted count
+    phase learned, so callers can replan without re-counting. Subclasses
+    ValueError for backward compat."""
+
+    def __init__(self, message: str, *, count: Optional[int] = None):
+        super().__init__(message)
+        self.count = count
 
 
 # ---------------------------------------------------------------------------
@@ -37,17 +51,21 @@ from .count import count_query
 def select_one_tuple(key: jax.Array, db: SecretSharedDB, column: int,
                      pattern: str, *, ledger: Optional[CostLedger] = None,
                      skip_count_phase: bool = False,
-                     impl: str = "jnp") -> Tuple[List[List[str]], CostLedger]:
+                     backend="jnp", impl: Optional[str] = None
+                     ) -> Tuple[List[List[str]], CostLedger]:
     """SELECT * WHERE col = pattern, when the predicate hits exactly 1 tuple."""
     ledger = ledger if ledger is not None else CostLedger()
     codec = db.codec
+    be = resolve_backend(backend, impl)
     k_count, k_sel = jax.random.split(key)
 
     if not skip_count_phase:  # Phase 0 (Alg 3 line 1)
-        ell, ledger = count_query(k_count, db, column, pattern, ledger=ledger)
+        ell, ledger = count_query(k_count, db, column, pattern, ledger=ledger,
+                                  backend=be)
         if ell != 1:
-            raise ValueError(f"select_one_tuple needs ℓ=1, predicate has {ell}"
-                             " — use select_one_round/select_tree")
+            raise CardinalityError(
+                f"select_one_tuple needs ℓ=1, predicate has {ell}"
+                " — use select_one_round/select_tree", count=ell)
 
     # --- user: send shared predicate (Alg 3 line 3) ------------------------
     p_sh = encoding.share_pattern(k_sel, codec, pattern,
@@ -57,7 +75,7 @@ def select_one_tuple(key: jax.Array, db: SecretSharedDB, column: int,
 
     # --- cloud: MAP_single_tuple_fetch (Alg 3 lines 8-12) ------------------
     col = db.column(column)
-    m_bits = automata.match_words(col, p_sh)            # (c, n)
+    m_bits = _match_bits(be, col, p_sh)                 # (c, n)
     rel = db.relation                                    # (c, n, m, W, A)
     mb = Shares(m_bits.values[:, :, None, None, None], m_bits.degree)
     picked = Shares(
@@ -85,13 +103,15 @@ def select_one_tuple(key: jax.Array, db: SecretSharedDB, column: int,
 def fetch_by_addresses(key: jax.Array, db: SecretSharedDB,
                        addresses: Sequence[int], *, ledger: CostLedger,
                        padded_rows: Optional[int] = None,
-                       impl: str = "jnp") -> List[List[str]]:
+                       backend="jnp", impl: Optional[str] = None
+                       ) -> List[List[str]]:
     """Fetch tuples at known addresses with an ℓ'×n shared one-hot matrix.
 
     ``padded_rows`` ≥ ℓ hides the true result size (fake-row padding, §3.2.2
     leakage discussion): extra rows are all-zero one-hots and fetch nothing.
     """
     codec = db.codec
+    be = resolve_backend(backend, impl)
     n = db.n_tuples
     ell = len(addresses)
     ellp = max(padded_rows or ell, ell)
@@ -109,11 +129,7 @@ def fetch_by_addresses(key: jax.Array, db: SecretSharedDB,
     rel = db.relation.values                         # (c, n, m, W, A)
     c, _, m, w, a = rel.shape
     rel_flat = rel.reshape(c, n, m * w * a)
-    if impl == "pallas":
-        from ...kernels import ops as kops
-        fetched_flat = kops.ss_matmul(m_sh.values, rel_flat)
-    else:
-        fetched_flat = field.matmul(m_sh.values, rel_flat)
+    fetched_flat = be.ss_matmul(m_sh.values, rel_flat)
     fetched = Shares(fetched_flat.reshape(c, ellp, m, w, a),
                      m_sh.degree + db.relation.degree)
     ledger.cloud(ellp * n * m * w * a)
@@ -133,12 +149,13 @@ def fetch_by_addresses(key: jax.Array, db: SecretSharedDB,
 def select_one_round(key: jax.Array, db: SecretSharedDB, column: int,
                      pattern: str, *, ledger: Optional[CostLedger] = None,
                      padded_rows: Optional[int] = None,
-                     impl: str = "jnp"
+                     backend="jnp", impl: Optional[str] = None
                      ) -> Tuple[List[List[str]], List[int], CostLedger]:
     """Phase 1: per-tuple match bits in ONE round (user interpolates n·c′).
     Phase 2: oblivious matrix fetch."""
     ledger = ledger if ledger is not None else CostLedger()
     codec = db.codec
+    be = resolve_backend(backend, impl)
     k_pat, k_fetch = jax.random.split(key)
 
     # --- round 1: user sends predicate, cloud returns n match bits ---------
@@ -147,7 +164,7 @@ def select_one_round(key: jax.Array, db: SecretSharedDB, column: int,
     ledger.round()
     ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
     col = db.column(column)
-    m_bits = automata.match_words(col, p_sh)                  # (c, n)
+    m_bits = _match_bits(be, col, p_sh)                       # (c, n)
     ledger.cloud(db.n_tuples * codec.word_length * codec.alphabet_size)
     ledger.recv(db.n_shares * db.n_tuples)
 
@@ -158,7 +175,7 @@ def select_one_round(key: jax.Array, db: SecretSharedDB, column: int,
 
     # --- round 2: oblivious fetch -------------------------------------------
     rows = fetch_by_addresses(k_fetch, db, addresses, ledger=ledger,
-                              padded_rows=padded_rows, impl=impl)
+                              padded_rows=padded_rows, backend=be)
     return rows, addresses, ledger
 
 
@@ -176,7 +193,7 @@ class _Block:
         return self.end - self.start
 
 
-def _count_blocks(db: SecretSharedDB, column: int, p_sh: Shares,
+def _count_blocks(be, db: SecretSharedDB, column: int, p_sh: Shares,
                   blocks: Sequence[_Block], ledger: CostLedger
                   ) -> List[int]:
     """One Q&A round: cloud counts p in each block, user interpolates."""
@@ -185,7 +202,7 @@ def _count_blocks(db: SecretSharedDB, column: int, p_sh: Shares,
     for b in blocks:
         col = Shares(db.relation.values[:, b.start:b.end, column],
                      db.relation.degree)
-        cnt = automata.count_column(col, p_sh)          # (c,) share
+        cnt = _match_bits(be, col, p_sh).sum(axis=0)    # (c,) share
         counts.append(cnt)
         ledger.cloud(b.size * codec.word_length * codec.alphabet_size)
     ledger.round()
@@ -197,12 +214,12 @@ def _count_blocks(db: SecretSharedDB, column: int, p_sh: Shares,
     return out
 
 
-def _address_fetch(db: SecretSharedDB, column: int, p_sh: Shares,
+def _address_fetch(be, db: SecretSharedDB, column: int, p_sh: Shares,
                    block: _Block, ledger: CostLedger) -> int:
     """Alg 4 line 14: line_number = Σ matchᵢ · (i+1) over the block."""
     col = Shares(db.relation.values[:, block.start:block.end, column],
                  db.relation.degree)
-    m_bits = automata.match_words(col, p_sh)             # (c, h)
+    m_bits = _match_bits(be, col, p_sh)                  # (c, h)
     idx = jnp.arange(block.start + 1, block.end + 1, dtype=field.DTYPE)
     line = Shares(field.mul(m_bits.values,
                             jnp.broadcast_to(idx[None], m_bits.values.shape)),
@@ -218,19 +235,26 @@ def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
                 *, ledger: Optional[CostLedger] = None,
                 branching: Optional[int] = None,
                 padded_rows: Optional[int] = None,
-                impl: str = "jnp"
+                known_count: Optional[int] = None,
+                backend="jnp", impl: Optional[str] = None
                 ) -> Tuple[List[List[str]], List[int], CostLedger]:
     """Tree-based multi-round address discovery + oblivious fetch (Alg 4).
 
     Rounds ≤ ⌊log_ℓ n⌋ + ⌊log₂ ℓ⌋ + 1 (Theorem 4). The user interpolates only
-    per-block counts, never the full n-vector.
+    per-block counts, never the full n-vector. ``known_count`` skips the
+    Phase-0 count when the caller (e.g. the planner) already ran it.
     """
     ledger = ledger if ledger is not None else CostLedger()
     codec = db.codec
+    be = resolve_backend(backend, impl)
     k_count, k_pat, k_fetch = jax.random.split(key, 3)
 
-    # Phase 0: count occurrences
-    ell, ledger = count_query(k_count, db, column, pattern, ledger=ledger)
+    # Phase 0: count occurrences (unless the caller already did)
+    if known_count is None:
+        ell, ledger = count_query(k_count, db, column, pattern, ledger=ledger,
+                                  backend=be)
+    else:
+        ell = known_count
     if ell == 0:
         return [], [], ledger
     p_sh = encoding.share_pattern(k_pat, codec, pattern,
@@ -238,11 +262,11 @@ def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
     ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
     if ell == 1:
         # Alg 4 line 2 -> Alg 3; reuse the generic path below with one block.
-        addr = _address_fetch(db, column, p_sh,
+        addr = _address_fetch(be, db, column, p_sh,
                               _Block(0, db.n_tuples), ledger)
         ledger.round()
         rows = fetch_by_addresses(k_fetch, db, [addr], ledger=ledger,
-                                  padded_rows=padded_rows, impl=impl)
+                                  padded_rows=padded_rows, backend=be)
         return rows, [addr], ledger
 
     fanout = branching or ell
@@ -258,13 +282,14 @@ def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
             sub_blocks += [_Block(int(bounds[i]), int(bounds[i + 1]))
                            for i in range(k) if bounds[i] < bounds[i + 1]]
         first_round = False
-        counts = _count_blocks(db, column, p_sh, sub_blocks, ledger)
+        counts = _count_blocks(be, db, column, p_sh, sub_blocks, ledger)
         active = []
         for b, cnt in zip(sub_blocks, counts):
             if cnt == 0:                       # Case 1
                 continue
             if cnt == 1:                       # Case 2: Address_fetch
-                addresses.append(_address_fetch(db, column, p_sh, b, ledger))
+                addresses.append(_address_fetch(be, db, column, p_sh, b,
+                                                ledger))
             elif cnt == b.size:                # Case 3: whole block matches
                 addresses.extend(range(b.start, b.end))
             else:                              # Case 4: recurse
@@ -272,5 +297,5 @@ def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
 
     addresses.sort()
     rows = fetch_by_addresses(k_fetch, db, addresses, ledger=ledger,
-                              padded_rows=padded_rows, impl=impl)
+                              padded_rows=padded_rows, backend=be)
     return rows, addresses, ledger

@@ -60,3 +60,12 @@ def match_matrix(col_x: jax.Array, col_y: jax.Array) -> jax.Array:
                        jnp.swapaxes(col_y[:, :, j, :], -1, -2))
         acc = pj if acc is None else field.mul(acc, pj)
     return acc
+
+
+def as_backend():
+    """Bundle these kernels as the ``"pallas"`` entry of the backend
+    registry (``repro.api.backends``) — the query suite selects them with
+    ``backend="pallas"`` instead of the old ``impl=`` strings."""
+    from ..api.backends import Backend  # local import to avoid cycle
+    return Backend(name="pallas", aa_match=aa_match, ss_matmul=ss_matmul,
+                   match_matrix=match_matrix)

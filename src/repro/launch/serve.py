@@ -1,8 +1,15 @@
-"""Batched serving driver: continuous prefill+decode over a request queue.
+"""Serving drivers: batched LM inference and oblivious query serving.
 
-Minimal but real: fixed-capacity batch slots, greedy sampling, per-slot
-lengths, jitted prefill and decode steps. The decode step is the same
-function the dry-run lowers for the decode_32k / long_500k cells.
+``BatchServer`` — continuous prefill+decode over a request queue. Minimal
+but real: fixed-capacity batch slots, greedy sampling, per-slot lengths,
+jitted prefill and decode steps. The decode step is the same function the
+dry-run lowers for the decode_32k / long_500k cells.
+
+``QueryServer`` — the paper-workload analog: drains a queue of logical
+query plans (``repro.api.plans``) through one ``QueryClient`` over a
+secret-shared relation. Per-request keys derive from the client's root key;
+an optional ``MapReduceExecutor`` fans each cloud-side map phase out over
+fault-tolerant worker splits.
 """
 from __future__ import annotations
 
@@ -14,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..api import MapReduceExecutor, Plan, QueryClient, QueryResult
+from ..core.engine import SecretSharedDB
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ModelConfig
 
@@ -59,4 +68,31 @@ class BatchServer:
         for i, r in enumerate(requests):
             r.out = gen[i, :r.max_new]
             r.latency_s = dt
+        return requests
+
+
+# ---------------------------------------------------------------------------
+# oblivious query serving (the paper's workload behind the same queue idiom)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class QueryRequest:
+    plan: Plan
+    result: Optional[QueryResult] = None
+    latency_s: float = 0.0
+
+
+class QueryServer:
+    """Serves logical query plans against one secret-shared relation."""
+
+    def __init__(self, db: SecretSharedDB, key, *, backend="jnp",
+                 executor: Optional[MapReduceExecutor] = None):
+        self.client = QueryClient(db, key, backend=backend,
+                                  executor=executor)
+
+    def serve(self, requests: List[QueryRequest]) -> List[QueryRequest]:
+        for r in requests:
+            t0 = time.time()
+            r.result = self.client.run(r.plan)
+            r.latency_s = time.time() - t0
         return requests

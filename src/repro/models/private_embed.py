@@ -44,15 +44,22 @@ def setup_private_embed(key, embed: jax.Array, *, n_shares: int = 4,
                         degree=degree)
 
 
-def private_lookup(key, embed_shares: Shares, tokens: jax.Array
-                   ) -> jax.Array:
-    """Oblivious lookup of ``tokens`` (any shape) -> float32 embeddings."""
+def private_lookup(key, embed_shares: Shares, tokens: jax.Array,
+                   *, backend="jnp") -> jax.Array:
+    """Oblivious lookup of ``tokens`` (any shape) -> float32 embeddings.
+
+    The share-space matmul goes through the backend registry
+    (``repro.api.backends``), so the serving stack picks kernels the same
+    way the query suite does.
+    """
+    from ..api.backends import get_backend  # deferred: api sits above models
+    be = get_backend(backend)
     v = embed_shares.shape[0]
     flat = tokens.reshape(-1)
     onehot = jax.nn.one_hot(flat, v, dtype=jnp.uint32)
     q_sh = shamir.share(key, onehot, n_shares=embed_shares.n_shares,
                         degree=embed_shares.degree)          # (c, n, V)
-    picked = field.matmul(q_sh.values, embed_shares.values)  # (c, n, D)
+    picked = be.ss_matmul(q_sh.values, embed_shares.values)  # (c, n, D)
     out = shamir.interpolate(
         Shares(picked, q_sh.degree + embed_shares.degree))
     return dequantize_from_field(out).reshape(*tokens.shape, -1)

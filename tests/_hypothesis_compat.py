@@ -1,0 +1,174 @@
+"""Offline fallback for ``hypothesis``: seeded deterministic example cases.
+
+The container cannot ``pip install`` anything, so ``hypothesis`` may be
+absent. ``install()`` registers a minimal stand-in module under the
+``hypothesis`` name in ``sys.modules`` implementing exactly the API surface
+this test-suite uses:
+
+  * ``strategies.integers / sampled_from / lists`` (plus ``.filter``/``.map``)
+  * ``@given(...)``  — tags the test with its strategies
+  * ``@settings(max_examples=..., deadline=...)`` — tags the example budget
+
+The tags are expanded at collection time by the ``pytest_generate_tests``
+hook in ``conftest.py`` (via :func:`generate`), which draws ``max_examples``
+seeded examples per test and hands them to ``metafunc.parametrize`` — so the
+property tests still run against a deterministic spread of inputs and report
+per-example, just without shrinking. When the real hypothesis is installed,
+none of this activates.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+import zlib
+from typing import Any, Callable, List, Sequence
+
+DEFAULT_EXAMPLES = 10
+_MAX_FILTER_TRIES = 1000
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class Strategy:
+    """Base: a seeded example generator with hypothesis' combinators."""
+
+    def example(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def filter(self, pred: Callable[[Any], bool]) -> "Strategy":
+        return _Filtered(self, pred)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return _Mapped(self, fn)
+
+
+class _Filtered(Strategy):
+    def __init__(self, base: Strategy, pred: Callable[[Any], bool]):
+        self._base, self._pred = base, pred
+
+    def example(self, rng: random.Random) -> Any:
+        for _ in range(_MAX_FILTER_TRIES):
+            x = self._base.example(rng)
+            if self._pred(x):
+                return x
+        raise ValueError("filter predicate rejected every drawn example")
+
+
+class _Mapped(Strategy):
+    def __init__(self, base: Strategy, fn: Callable[[Any], Any]):
+        self._base, self._fn = base, fn
+
+    def example(self, rng: random.Random) -> Any:
+        return self._fn(self._base.example(rng))
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self._lo = -(2 ** 16) if min_value is None else min_value
+        self._hi = 2 ** 16 if max_value is None else max_value
+
+    def example(self, rng: random.Random) -> int:
+        return rng.randint(self._lo, self._hi)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements: Sequence[Any]):
+        self._elements = list(elements)
+
+    def example(self, rng: random.Random) -> Any:
+        return rng.choice(self._elements)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements: Strategy, min_size: int = 0,
+                 max_size=None):
+        self._elem = elements
+        self._lo = min_size
+        self._hi = max_size if max_size is not None else min_size + 8
+
+    def example(self, rng: random.Random) -> List[Any]:
+        size = rng.randint(self._lo, self._hi)
+        return [self._elem.example(rng) for _ in range(size)]
+
+
+def integers(min_value=None, max_value=None) -> Strategy:
+    return _Integers(min_value, max_value)
+
+
+def sampled_from(elements: Sequence[Any]) -> Strategy:
+    return _SampledFrom(elements)
+
+
+def lists(elements: Strategy, *, min_size: int = 0, max_size=None) -> Strategy:
+    return _Lists(elements, min_size, max_size)
+
+
+# ---------------------------------------------------------------------------
+# decorators
+# ---------------------------------------------------------------------------
+
+def given(*strats: Strategy, **kwstrats: Strategy):
+    def deco(fn):
+        fn._hyp_given = (strats, kwstrats)
+        return fn
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# pytest integration
+# ---------------------------------------------------------------------------
+
+def generate(metafunc) -> None:
+    """Expand an ``@given``-tagged test into seeded parametrize cases.
+
+    Called from ``conftest.pytest_generate_tests`` (shim-active runs only).
+    """
+    fn = metafunc.function
+    tag = getattr(fn, "_hyp_given", None)
+    if tag is None:
+        return
+    strats, kwstrats = tag
+    n = getattr(fn, "_hyp_max_examples", DEFAULT_EXAMPLES)
+    # positional strategies fill the test's TRAILING parameters (hypothesis
+    # fills from the right, leaving leading params for pytest fixtures)
+    sig_names = [p.name for p in
+                 inspect.signature(fn).parameters.values()]
+    free = [p for p in sig_names if p not in kwstrats]
+    pos_names = free[len(free) - len(strats):] if strats else []
+    argnames = pos_names + list(kwstrats)
+    pairs = list(zip(pos_names, strats)) + list(kwstrats.items())
+    # stable per-test seed -> identical cases on every run/machine
+    rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+    cases = []
+    for _ in range(n):
+        drawn = {name: s.example(rng) for name, s in pairs}
+        cases.append(tuple(drawn[a] for a in argnames))
+    if len(argnames) == 1:
+        metafunc.parametrize(argnames[0], [c[0] for c in cases])
+    else:
+        metafunc.parametrize(",".join(argnames), cases)
+
+
+def install() -> None:
+    """Register the stand-in ``hypothesis`` module tree in ``sys.modules``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.sampled_from = sampled_from
+    st_mod.lists = lists
+    mod.strategies = st_mod
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st_mod

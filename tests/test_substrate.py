@@ -98,6 +98,7 @@ def test_mapreduce_happy_path():
     assert runner.reexecutions == 0
 
 
+@pytest.mark.slow
 def test_mapreduce_reexecutes_failed_tasks():
     pool = WorkerPool(4, fail_prob=0.4, seed=1)
     runner = MapReduceRunner(pool, lease_s=0.3, max_attempts=50)
@@ -106,6 +107,7 @@ def test_mapreduce_reexecutes_failed_tasks():
     assert runner.reexecutions > 0  # failures happened and were recovered
 
 
+@pytest.mark.slow
 def test_mapreduce_dead_worker_recovery():
     pool = WorkerPool(3, dead_workers={1}, seed=2)
     runner = MapReduceRunner(pool, lease_s=0.3, max_attempts=20)
@@ -114,6 +116,7 @@ def test_mapreduce_dead_worker_recovery():
     assert runner.worker_deaths > 0
 
 
+@pytest.mark.slow
 def test_mapreduce_speculative_backup_beats_straggler():
     # worker 0 is 10x slower than the lease; the backup copy must win
     pool = WorkerPool(4, slow_workers={0: 3.0})
@@ -126,6 +129,7 @@ def test_mapreduce_speculative_backup_beats_straggler():
     assert runner.speculative_launched + runner.reexecutions > 0
 
 
+@pytest.mark.slow
 def test_mapreduce_drives_secret_shared_count():
     """The paper's count query as an actual MapReduce job over input splits
     with injected failures: result must equal the plaintext count."""
