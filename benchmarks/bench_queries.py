@@ -6,19 +6,33 @@ Queries run through the unified ``repro.api.QueryClient`` (the client
 delegates to the protocol implementations, so measured ledgers are identical
 to the legacy free functions — asserted by tests/test_api.py). Strategies
 are forced where a bench targets one paper row; ``bench_planner_auto``
-reports what the cost-based planner picks.
+reports what the cost-based planner picks; ``bench_batched_vs_sequential``
+sweeps ``QueryClient.run_batch`` against the per-query loop and asserts
+ledger equality while measuring the fusion speedup.
 
-Each function returns rows of
+Each table function returns rows of
   (name, n, us_per_call, comm_bits, rounds, cloud_bits, user_bits, claim)
+
+Run as a script to track the perf trajectory across PRs:
+
+  PYTHONPATH=src python benchmarks/bench_queries.py --smoke \
+      --out BENCH_queries.json
+
+writes machine-readable per-config results (rounds, bits, wall-times and
+the batched sweep) to ``BENCH_queries.json``.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
-from typing import List
+from typing import List, Optional, Sequence
 
 import jax
 
-from repro.api import DBStats, QueryClient, choose_select_strategy
+from repro.api import DBStats, QueryClient, Select, Eq, Padding, \
+    choose_select_strategy
 from repro.core import outsource, Codec
 from repro.data import synthetic_relation
 
@@ -41,10 +55,10 @@ def _timed(fn, *args, **kw):
     return out, (time.time() - t0) * 1e6
 
 
-def bench_count() -> List[tuple]:
+def bench_count(sizes: Optional[Sequence[int]] = None) -> List[tuple]:
     """Table 1 row: 'Our solution §3.1' — O(1) comm, nw cloud, 1 round."""
     rows_out = []
-    for n in (32, 128, 512):
+    for n in (sizes or (32, 128, 512)):
         rows, db = _db(n, skew=0.3)
         client = QueryClient(db, key=1)
         res, us = _timed(client.count, "FirstName", "John")
@@ -57,10 +71,11 @@ def bench_count() -> List[tuple]:
     return rows_out
 
 
-def bench_select_single() -> List[tuple]:
+def bench_select_single(sizes: Optional[Sequence[int]] = None
+                        ) -> List[tuple]:
     """Row 'Our §3.2.1': comm O(mw), cloud O(nmw), user O(mw), 1 round."""
     out = []
-    for n in (32, 128, 512):
+    for n in (sizes or (32, 128, 512)):
         rows = synthetic_relation(n - 1, seed=3)
         rows.append([f"E{99 + n}", "Zed", "Quine", "777", "HR"])
         db = outsource(jax.random.PRNGKey(3), rows, column_names=COLUMNS,
@@ -77,10 +92,11 @@ def bench_select_single() -> List[tuple]:
     return out
 
 
-def bench_select_one_round() -> List[tuple]:
+def bench_select_one_round(sizes: Optional[Sequence[int]] = None
+                           ) -> List[tuple]:
     """Row 'Our §3.2.2 fetching tuples': comm O((n+m)ℓw), cloud O(ℓnmw)."""
     out = []
-    for n in (32, 128, 256):
+    for n in (sizes or (32, 128, 256)):
         rows, db = _db(n, seed=4, skew=0.2)
         client = QueryClient(db, key=3)
         res, us = _timed(client.select, "FirstName", "John",
@@ -94,11 +110,11 @@ def bench_select_one_round() -> List[tuple]:
     return out
 
 
-def bench_select_tree() -> List[tuple]:
+def bench_select_tree(sizes: Optional[Sequence[int]] = None) -> List[tuple]:
     """Row 'Our §3.2.2 knowing addresses': rounds ≤ log_ℓ n + log₂ ℓ + 1."""
     import math
     out = []
-    for n in (64, 256):
+    for n in (sizes or (64, 256)):
         rows, db = _db(n, seed=5, skew=0.15)
         client = QueryClient(db, key=4)
         res, us = _timed(client.select, "FirstName", "John", strategy="tree")
@@ -127,11 +143,11 @@ def bench_planner_auto() -> List[tuple]:
     return out
 
 
-def bench_join() -> List[tuple]:
+def bench_join(sizes: Optional[Sequence[int]] = None) -> List[tuple]:
     """Rows '§3.3': PK/FK join O(nmw) comm / O(n²mw) cloud; equijoin Thm 6."""
     out = []
     codec = Codec(word_length=6)
-    for n in (8, 16, 32):
+    for n in (sizes or (8, 16, 32)):
         X = [[f"a{i}", f"b{i}"] for i in range(n)]
         Y = [[f"b{i % (n // 2)}", f"c{i}"] for i in range(n)]
         dbX = outsource(jax.random.PRNGKey(5), X, column_names=["A", "B"],
@@ -162,10 +178,10 @@ def bench_join() -> List[tuple]:
     return out
 
 
-def bench_range() -> List[tuple]:
+def bench_range(sizes: Optional[Sequence[int]] = None) -> List[tuple]:
     """Row '§3.4': same order as count (Thm 7)."""
     out = []
-    for n in (16, 64):
+    for n in (sizes or (16, 64)):
         rows, db = _db(n, seed=10, n_shares=34, numeric=True)
         client = QueryClient(db, key=11)
         lo, hi = 1000, 4000
@@ -179,12 +195,13 @@ def bench_range() -> List[tuple]:
     return out
 
 
-def bench_scaling_verification() -> List[tuple]:
+def bench_scaling_verification(sizes: Optional[Sequence[int]] = None
+                               ) -> List[tuple]:
     """Empirical check of Table 1 *scaling*: count comm must be flat in n;
     cloud work linear in n."""
     out = []
     led_prev = None
-    for n in (64, 256, 1024):
+    for n in (sizes or (64, 256, 1024)):
         rows, db = _db(n, seed=12)
         led = QueryClient(db, key=13).count("FirstName", "Eve").ledger
         if led_prev is not None:
@@ -198,6 +215,95 @@ def bench_scaling_verification() -> List[tuple]:
     return out
 
 
+def bench_batched_vs_sequential(*, batch_sizes: Sequence[int] = (8, 32),
+                                n: int = 256) -> List[dict]:
+    """The tentpole sweep: B same-relation selects via ``run_batch`` (every
+    protocol round fused over the group) vs the same plans in a sequential
+    loop. Asserts per-query ledger equality — batching must be free in
+    protocol cost — and reports the wall-time speedup.
+    """
+    out: List[dict] = []
+    rows, db = _db(n, seed=6, skew=0.25)
+    patterns = sorted({r[1] for r in rows})
+    for strategy in ("one_round", "tree", "auto"):
+        for b in batch_sizes:
+            plans = [Select(Eq("FirstName", patterns[i % len(patterns)]),
+                            strategy=("auto" if strategy == "auto"
+                                      else strategy))
+                     for i in range(b)]
+            seq_client = QueryClient(db, key=21)
+            t0 = time.time()
+            seq = [seq_client.run(p) for p in plans]
+            seq_us = (time.time() - t0) * 1e6
+            bat_client = QueryClient(db, key=21)
+            t0 = time.time()
+            bat = bat_client.run_batch(plans)
+            bat_us = (time.time() - t0) * 1e6
+            assert all(a.rows == c.rows and a.ledger == c.ledger
+                       and a.strategy == c.strategy
+                       for a, c in zip(seq, bat)), "batch != sequential"
+            out.append(dict(name=f"batched_select_{strategy}", n=n, batch=b,
+                            seq_us=round(seq_us), batch_us=round(bat_us),
+                            speedup=round(seq_us / max(bat_us, 1e-9), 2),
+                            rounds=bat[0].ledger.rounds,
+                            comm_bits=bat[0].ledger.communication_bits,
+                            ledger_equal=True))
+    return out
+
+
 ALL = [bench_count, bench_select_single, bench_select_one_round,
        bench_select_tree, bench_planner_auto, bench_join, bench_range,
        bench_scaling_verification]
+
+# tiny per-section configs for the CI bench-smoke lane (keeps the 4x ratio
+# bench_scaling_verification asserts on)
+SMOKE_SIZES = {
+    "bench_count": (32,), "bench_select_single": (32,),
+    "bench_select_one_round": (32,), "bench_select_tree": (64,),
+    "bench_join": (8,), "bench_range": (16,),
+    "bench_scaling_verification": (16, 64),
+}
+
+
+def collect(*, smoke: bool = False) -> dict:
+    """Run every section and return the machine-readable result document."""
+    results = []
+    for fn in ALL:
+        kw = {}
+        if smoke and fn.__name__ in SMOKE_SIZES:
+            kw["sizes"] = SMOKE_SIZES[fn.__name__]
+        for row in fn(**kw):
+            name, size, us, comm, rounds, cloud, user, claim = row
+            results.append(dict(bench=fn.__name__, name=name, n=size,
+                                us_per_call=round(us),
+                                comm_bits=comm, rounds=rounds,
+                                cloud_bits=cloud, user_bits=user,
+                                paper_claim=claim))
+    batched = bench_batched_vs_sequential(
+        batch_sizes=(4, 16) if smoke else (8, 32),
+        n=64 if smoke else 256)
+    return dict(schema="bench_queries/v1", smoke=smoke,
+                results=results, batched=batched)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny configs (CI bench-smoke lane)")
+    ap.add_argument("--out", default="BENCH_queries.json",
+                    help="where to write the JSON document")
+    args = ap.parse_args(argv)
+    doc = collect(smoke=args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+    n_res, n_bat = len(doc["results"]), len(doc["batched"])
+    print(f"wrote {args.out}: {n_res} table rows, {n_bat} batched-sweep "
+          f"rows", file=sys.stderr)
+    for b in doc["batched"]:
+        print(f"  {b['name']} B={b['batch']} n={b['n']}: "
+              f"{b['seq_us']}us -> {b['batch_us']}us "
+              f"({b['speedup']}x)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -74,13 +74,17 @@ def main():
     db = outsource(jax.random.PRNGKey(5), profiles,
                    column_names=["UserId", "Tier", "Requests"],
                    codec=Codec(word_length=6), n_shares=16)
-    qserver = QueryServer(db, key=11)
+    qserver = QueryServer(db, key=11, max_batch=8)
     queries = [QueryRequest(Count(Eq("Tier", "gold"))),
                QueryRequest(Select(Eq("Tier", "gold")))]
     for q in qserver.serve(queries):
         print(f"plan {type(q.plan).__name__}: strategy={q.result.strategy} "
               f"count={q.result.count} ({q.latency_s:.2f}s, "
               f"{q.result.ledger.rounds} rounds)")
+    st = qserver.stats
+    print(f"server: {st.served} queries in {st.batches} micro-batch(es), "
+          f"mean batch {st.mean_batch_size:.1f}, "
+          f"p50 latency {st.latency_quantile(0.5):.2f}s")
 
 
 if __name__ == "__main__":

@@ -16,8 +16,8 @@ paper-optimal selection strategy; backends are looked up in a registry
 The legacy free functions in ``repro.core.queries`` remain as thin
 deprecated wrappers; new code should go through this package.
 """
-from .backends import (Backend, available_backends, get_backend,
-                       register_backend)
+from .backends import (Backend, available_backends, batched_matcher,
+                       get_backend, register_backend)
 from .client import QueryClient
 from .executor import MapReduceExecutor
 from .planner import (DEFAULT_ELL, CostEstimate, DBStats,
@@ -28,8 +28,8 @@ from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
                     resolve_column)
 
 __all__ = [
-    "Backend", "available_backends", "get_backend", "register_backend",
-    "QueryClient", "MapReduceExecutor",
+    "Backend", "available_backends", "batched_matcher", "get_backend",
+    "register_backend", "QueryClient", "MapReduceExecutor",
     "DEFAULT_ELL", "CostEstimate", "DBStats", "candidate_estimates",
     "choose_select_strategy", "estimate_select_cost",
     "AUTO", "Between", "ColumnRef", "Count", "Eq", "Join", "Padding", "Plan",

@@ -1,26 +1,34 @@
 """Backend registry: named implementations of the cloud-side hot ops.
 
 Replaces the ad-hoc ``impl="jnp"|"pallas"`` strings that used to be threaded
-through every query function. A :class:`Backend` bundles the three share-space
+through every query function. A :class:`Backend` bundles the share-space
 hotspots every query is built from:
 
-  * ``aa_match``     — accumulating-automata word match (§3.1, Table 3),
-  * ``ss_matmul``    — share-space mod-p matmul (the oblivious-fetch and
-                       embedding-lookup hotspot),
-  * ``match_matrix`` — all-pairs word match (the §3.3.1 join inner loop).
+  * ``aa_match``       — accumulating-automata word match (§3.1, Table 3),
+  * ``ss_matmul``      — share-space mod-p matmul (the oblivious-fetch and
+                         embedding-lookup hotspot),
+  * ``match_matrix``   — all-pairs word match (the §3.3.1 join inner loop),
+  * ``aa_match_batch`` — AA match over a *stack* of predicates, one per
+                         batch row. This is the primitive the batched query
+                         engine (``repro.core.queries.rounds``) issues once
+                         per protocol round: B concurrent queries (or B
+                         padded blocks of one tree-selection round) become a
+                         single device dispatch instead of B.
 
-All three operate on *raw* uint32 share arrays (cloud axis first where
-batched); polynomial-degree bookkeeping stays at the query layer. Queries
-resolve a backend by name via :func:`get_backend`; ``repro.api.QueryClient``
-exposes the choice as a constructor argument. Third parties can plug in
-alternatives (a GPU kernel set, a distributed runner) with
-:func:`register_backend` — see ``repro.api.executor.MapReduceExecutor`` for a
-wrapping backend that fans the map phase out over MapReduce splits.
+All operate on *raw* uint32 share arrays (cloud axis first where batched);
+polynomial-degree bookkeeping stays at the query layer. Queries resolve a
+backend by name via :func:`get_backend`; ``repro.api.QueryClient`` exposes
+the choice as a constructor argument. Third parties can plug in alternatives
+(a GPU kernel set, a distributed runner) with :func:`register_backend` — see
+``repro.api.executor.MapReduceExecutor`` for a wrapping backend that fans
+the map phase (including the fused batch) out over MapReduce splits. A
+backend that omits ``aa_match_batch`` still works: :func:`batched_matcher`
+falls back to ``vmap`` over its ``aa_match`` when that is traceable.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple, Union
+from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
 
@@ -32,14 +40,28 @@ _Op = Callable[[Array, Array], Array]
 class Backend:
     """Named bundle of cloud-side primitives on raw uint32 share arrays.
 
-    aa_match:     (c, n, W, A), (c, W, A)    -> (c, n)
-    ss_matmul:    ([c,] M, K),  ([c,] K, N)  -> ([c,] M, N)
-    match_matrix: (c, nx, W, A), (c, ny, W, A) -> (c, nx, ny)
+    aa_match:       (c, n, W, A), (c, W, A)       -> (c, n)
+    ss_matmul:      ([c,] M, K),  ([c,] K, N)     -> ([c,] M, N)
+    match_matrix:   (c, nx, W, A), (c, ny, W, A)  -> (c, nx, ny)
+    aa_match_batch: (c, B, n, W, A), (c, B, W, A) -> (c, B, n)
     """
     name: str
     aa_match: _Op
     ss_matmul: _Op
     match_matrix: _Op
+    aa_match_batch: Optional[_Op] = None
+
+
+def batched_matcher(backend: Backend) -> _Op:
+    """The backend's batched AA match, or a vmap fallback over ``aa_match``.
+
+    The fallback covers third-party backends whose ``aa_match`` is a
+    traceable jax function; backends built from host-side callables (e.g.
+    the MapReduce executor wrapper) must provide ``aa_match_batch``.
+    """
+    if backend.aa_match_batch is not None:
+        return backend.aa_match_batch
+    return jax.vmap(backend.aa_match, in_axes=1, out_axes=1)
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -87,11 +109,14 @@ def _ensure_builtins() -> None:
             return op(Shares(a, 0), Shares(b, 0)).values
         return run
 
+    aa_match = _raw(automata.match_words)
+
     register_backend(Backend(
         "jnp",
-        aa_match=_raw(automata.match_words),
+        aa_match=aa_match,
         ss_matmul=field.matmul,
-        match_matrix=_raw(automata.match_matrix)))
+        match_matrix=_raw(automata.match_matrix),
+        aa_match_batch=jax.jit(jax.vmap(aa_match, in_axes=1, out_axes=1))))
 
 
 def _try_register_pallas() -> bool:

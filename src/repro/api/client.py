@@ -6,29 +6,45 @@ backend choice (``repro.api.backends`` registry), the optional MapReduce
 executor, and the cost-based selection planner (``repro.api.planner``).
 Every query family returns the same :class:`~.plans.QueryResult`.
 
-The client *delegates* to the original protocol implementations in
-``repro.core.queries`` — it adds planning and ergonomics, never new protocol
-steps — so a client-run query produces exactly the rows and ``CostLedger``
-of the equivalent legacy call (asserted by ``tests/test_api.py``).
+Count and selection plans execute through the round-structured batch engine
+(``repro.core.queries.rounds``): :meth:`QueryClient.run_batch` cost-plans
+each query, groups compatible strategies, stacks their shared predicates and
+executes each protocol round *once for the whole group* — one fused device
+dispatch + one interpolation per round instead of one per query (or per
+block). :meth:`QueryClient.run` is the B = 1 case of the same machinery, so
+per-query rows and ``CostLedger`` totals are bit-identical between a batch
+and the equivalent sequential calls (asserted by ``tests/test_batch.py``).
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
-from typing import Optional, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 
 from ..core.costs import CostLedger
 from ..core.engine import SecretSharedDB
-from ..core.queries import (CardinalityError, count_query, equijoin,
-                            pkfk_join, range_count, range_select,
-                            select_one_round, select_one_tuple, select_tree)
+from ..core.queries import (CardinalityError, equijoin, pkfk_join,
+                            range_count, range_select, rounds)
 from . import planner as _planner
 from .backends import BackendLike, get_backend
 from .executor import MapReduceExecutor
 from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
                     QueryResult, RangeCount, RangeSelect, Select,
                     resolve_column)
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One plan's execution state inside a batch."""
+    idx: int
+    plan: Plan
+    key: jax.Array
+    ledger: CostLedger = dataclasses.field(default_factory=CostLedger)
+    strategy: str = ""
+    known_count: Optional[int] = None
+    column: int = -1
 
 
 class QueryClient:
@@ -77,101 +93,183 @@ class QueryClient:
 
     # -- execution ----------------------------------------------------------
     def run(self, plan: Plan) -> QueryResult:
-        if isinstance(plan, Count):
-            return self._run_count(plan)
-        if isinstance(plan, Select):
-            return self._run_select(plan)
-        if isinstance(plan, RangeCount):
-            return self._run_range_count(plan)
-        if isinstance(plan, RangeSelect):
-            return self._run_range_select(plan)
-        if isinstance(plan, Join):
-            return self._run_join(plan)
-        raise TypeError(f"not a logical plan: {plan!r}")
+        """Execute one logical plan (the B = 1 case of :meth:`run_batch`)."""
+        return self.run_batch([plan])[0]
 
-    def _run_count(self, plan: Count) -> QueryResult:
-        col = resolve_column(self.db, plan.where.column)
-        cnt, led = count_query(self._next_key(), self.db, col,
-                               plan.where.pattern, backend=self.backend)
-        return QueryResult(plan=plan, ledger=led, strategy="count", count=cnt)
+    def run_batch(self, plans: Sequence[Plan]) -> List[QueryResult]:
+        """Execute B logical plans, fusing each protocol round per group.
 
-    def _run_select(self, plan: Select) -> QueryResult:
-        col = resolve_column(self.db, plan.where.column)
-        pat = plan.where.pattern
-        key = self._next_key()
-        strategy = plan.strategy
-        if strategy == AUTO:
-            strategy = _planner.choose_select_strategy(
-                self.stats(), ell=plan.expected_matches,
-                padded_rows=plan.padding.rows,
-                round_cost_bits=self.round_cost_bits).strategy
+        Per-plan keys derive from the root key in list order; every plan is
+        cost-planned exactly as :meth:`run` would, then Count/Select plans
+        with a *compatible strategy* are grouped and executed through the
+        batched round engine — the group's predicates are stacked and each
+        protocol round (count, match, Q&A, address-fetch, oblivious fetch)
+        is one fused device dispatch + one interpolation for the whole
+        group. Families without a batched protocol (range, join) run
+        per-query. Results come back in plan order; each query's rows and
+        ``CostLedger`` are bit-identical to running it sequentially (ledgers
+        record the query's own protocol cost, never a groupmate's padding).
 
-        led = CostLedger()
-        if strategy == "one_tuple":
-            if plan.padding.rows:
-                raise ValueError(
-                    "one_tuple returns the single tuple directly and cannot "
-                    "pad its output size — use one_round/tree (or auto, "
-                    "which excludes one_tuple when padding is requested)")
-            try:
-                rows, led = select_one_tuple(key, self.db, col, pat,
-                                             ledger=led,
-                                             backend=self.backend)
-                return QueryResult(plan=plan, ledger=led,
-                                   strategy="one_tuple", rows=rows)
-            except CardinalityError as e:
-                if plan.strategy != AUTO:
-                    raise
-                # cardinality hint was wrong (ℓ ≠ 1): replan with the true ℓ
-                # the aborted count phase just learned, on a fresh key.
-                # ``led`` keeps the aborted attempt's count-phase cost so the
-                # result's ledger reports everything the protocol spent.
-                strategy = _planner.choose_select_strategy(
-                    self.stats(), ell=e.count,
-                    padded_rows=plan.padding.rows,
+        A forced ``one_tuple`` whose predicate turns out to hit ℓ ≠ 1 tuples
+        raises :class:`CardinalityError` (as sequentially); with
+        ``strategy="auto"`` the query replans onto one_round/tree inside the
+        batch, reusing the learned count.
+        """
+        results: Dict[int, QueryResult] = {}
+        count_grp: List[_Slot] = []
+        sel_grp: Dict[str, List[_Slot]] = {"one_tuple": [], "one_round": [],
+                                           "tree": []}
+        passthrough: List[_Slot] = []
+        for idx, plan in enumerate(plans):
+            slot = _Slot(idx, plan, self._next_key())
+            if isinstance(plan, Count):
+                slot.column = resolve_column(self.db, plan.where.column)
+                count_grp.append(slot)
+            elif isinstance(plan, Select):
+                slot.column = resolve_column(self.db, plan.where.column)
+                strategy = plan.strategy
+                if strategy == AUTO:
+                    strategy = _planner.choose_select_strategy(
+                        self.stats(), ell=plan.expected_matches,
+                        padded_rows=plan.padding.rows,
+                        round_cost_bits=self.round_cost_bits).strategy
+                if strategy == "one_tuple" and plan.padding.rows:
+                    raise ValueError(
+                        "one_tuple returns the single tuple directly and "
+                        "cannot pad its output size — use one_round/tree "
+                        "(or auto, which excludes one_tuple when padding is "
+                        "requested)")
+                slot.strategy = strategy
+                sel_grp[strategy].append(slot)
+            elif isinstance(plan, (RangeCount, RangeSelect, Join)):
+                passthrough.append(slot)
+            else:
+                raise TypeError(f"not a logical plan: {plan!r}")
+
+        be = self.backend
+        if count_grp:
+            counts = rounds.count_phase(be, self.db, [
+                rounds.MatchJob(s.column, s.plan.where.pattern, s.key,
+                                s.ledger) for s in count_grp])
+            for s, cnt in zip(count_grp, counts):
+                results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
+                                             strategy="count", count=cnt)
+
+        # -- one_tuple: batched count phase, then the Alg 3 map round -------
+        if sel_grp["one_tuple"]:
+            group = sel_grp["one_tuple"]
+            keys = [jax.random.split(s.key) for s in group]
+            ells = rounds.count_phase(be, self.db, [
+                rounds.MatchJob(s.column, s.plan.where.pattern, kc, s.ledger)
+                for s, (kc, _) in zip(group, keys)])
+            verified: List[Tuple[_Slot, jax.Array]] = []
+            for s, (_, k_sel), ell in zip(group, keys, ells):
+                if ell == 1:
+                    verified.append((s, k_sel))
+                    continue
+                if s.plan.strategy != AUTO:
+                    raise CardinalityError(
+                        f"select_one_tuple needs ℓ=1, predicate has {ell}"
+                        " — use select_one_round/select_tree", count=ell)
+                # hint was wrong: replan with the learned ℓ on a fresh key;
+                # the slot's ledger keeps the aborted count-phase cost.
+                s.strategy = _planner.choose_select_strategy(
+                    self.stats(), ell=ell, padded_rows=s.plan.padding.rows,
                     round_cost_bits=self.round_cost_bits).strategy
-                key, known_count = self._next_key(), e.count
-        else:
-            known_count = None
+                s.key, s.known_count = self._next_key(), ell
+                sel_grp[s.strategy].append(s)
+            if verified:
+                rows = rounds.one_tuple_round(be, self.db, [
+                    rounds.MatchJob(s.column, s.plan.where.pattern, k_sel,
+                                    s.ledger) for s, k_sel in verified])
+                for (s, _), row in zip(verified, rows):
+                    results[s.idx] = QueryResult(
+                        plan=s.plan, ledger=s.ledger, strategy="one_tuple",
+                        rows=[row])
 
-        if strategy == "one_round":
-            rows, addrs, led = select_one_round(
-                key, self.db, col, pat, ledger=led,
-                padded_rows=plan.padding.rows, backend=self.backend)
-        else:                                   # tree
-            rows, addrs, led = select_tree(
-                key, self.db, col, pat, ledger=led, branching=plan.branching,
-                padded_rows=plan.padding.rows, known_count=known_count,
-                backend=self.backend)
-        return QueryResult(plan=plan, ledger=led, strategy=strategy,
-                           rows=rows, addresses=addrs)
+        # -- one_round: fused Phase 1, then the group-fused fetch -----------
+        if sel_grp["one_round"]:
+            group = sel_grp["one_round"]
+            keys = [jax.random.split(s.key) for s in group]
+            addrs = rounds.match_all_round(be, self.db, [
+                rounds.MatchJob(s.column, s.plan.where.pattern, kp, s.ledger)
+                for s, (kp, _) in zip(group, keys)])
+            rows = rounds.fetch_round(be, self.db, [
+                rounds.FetchJob(kf, a, s.ledger, s.plan.padding.rows)
+                for s, (_, kf), a in zip(group, keys, addrs)])
+            for s, a, r in zip(group, addrs, rows):
+                results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
+                                             strategy="one_round", rows=r,
+                                             addresses=a)
 
-    def _run_range_count(self, plan: RangeCount) -> QueryResult:
+        # -- tree: batched count phase, lockstep Q&A rounds, fused fetch ----
+        if sel_grp["tree"]:
+            group = sel_grp["tree"]
+            keys = [jax.random.split(s.key, 3) for s in group]
+            need = [(s, kc) for s, (kc, _, _) in zip(group, keys)
+                    if s.known_count is None]
+            ells = rounds.count_phase(be, self.db, [
+                rounds.MatchJob(s.column, s.plan.where.pattern, kc, s.ledger)
+                for s, kc in need])
+            for (s, _), ell in zip(need, ells):
+                s.known_count = ell
+            live: List[Tuple[_Slot, jax.Array, jax.Array]] = []
+            for s, (_, kp, kf) in zip(group, keys):
+                if s.known_count == 0:
+                    results[s.idx] = QueryResult(
+                        plan=s.plan, ledger=s.ledger, strategy="tree",
+                        rows=[], addresses=[])
+                else:
+                    live.append((s, kp, kf))
+            if live:
+                addrs = rounds.tree_rounds(be, self.db, [
+                    rounds.TreeJob(s.column, s.plan.where.pattern, kp,
+                                   s.ledger, ell=s.known_count,
+                                   branching=s.plan.branching)
+                    for s, kp, _ in live])
+                rows = rounds.fetch_round(be, self.db, [
+                    rounds.FetchJob(kf, a, s.ledger, s.plan.padding.rows)
+                    for (s, _, kf), a in zip(live, addrs)])
+                for (s, _, _), a, r in zip(live, addrs, rows):
+                    results[s.idx] = QueryResult(
+                        plan=s.plan, ledger=s.ledger, strategy="tree",
+                        rows=r, addresses=a)
+
+        # -- families without a batched protocol run per-query --------------
+        for s in passthrough:
+            if isinstance(s.plan, RangeCount):
+                results[s.idx] = self._run_range_count(s.plan, s.key)
+            elif isinstance(s.plan, RangeSelect):
+                results[s.idx] = self._run_range_select(s.plan, s.key)
+            else:
+                results[s.idx] = self._run_join(s.plan, s.key)
+        return [results[i] for i in range(len(plans))]
+
+    def _run_range_count(self, plan: RangeCount, key) -> QueryResult:
         # Range counting is pure element-wise share arithmetic (SS-SUB
         # ripple + sum) — it has no registry hotspot, so the client's
         # backend/executor choice does not apply to this family.
         col = resolve_column(self.db, plan.where.column)
-        cnt, led = range_count(self._next_key(), self.db, col, plan.where.lo,
+        cnt, led = range_count(key, self.db, col, plan.where.lo,
                                plan.where.hi, reduce_every=plan.reduce_every)
         return QueryResult(plan=plan, ledger=led, strategy="range_count",
                            count=cnt)
 
-    def _run_range_select(self, plan: RangeSelect) -> QueryResult:
+    def _run_range_select(self, plan: RangeSelect, key) -> QueryResult:
         col = resolve_column(self.db, plan.where.column)
         rows, addrs, led = range_select(
-            self._next_key(), self.db, col, plan.where.lo, plan.where.hi,
+            key, self.db, col, plan.where.lo, plan.where.hi,
             reduce_every=plan.reduce_every, padded_rows=plan.padding.rows,
             backend=self.backend)
         return QueryResult(plan=plan, ledger=led, strategy="range_select",
                            rows=rows, addresses=addrs)
 
-    def _run_join(self, plan: Join) -> QueryResult:
+    def _run_join(self, plan: Join, key) -> QueryResult:
         col_l = resolve_column(self.db, plan.on[0])
         col_r = resolve_column(plan.right, plan.on[1])
         if plan.padding.rows:
             raise ValueError("joins take Padding.fake_values (fake join "
                              "jobs), not Padding.rows")
-        key = self._next_key()
         if plan.kind == "pkfk":
             if plan.padding.values:
                 raise ValueError(

@@ -20,16 +20,14 @@ from typing import List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.partition import split_bounds
 from ..runtime.mapreduce import MapReduceRunner
 from .backends import Backend
 
 
 def _bounds(total: int, n_splits: int) -> List[Tuple[int, int]]:
     """Non-empty, contiguous [lo, hi) split bounds covering [0, total)."""
-    k = max(1, min(n_splits, total))
-    edges = np.linspace(0, total, k + 1).astype(int)
-    return [(int(edges[i]), int(edges[i + 1])) for i in range(k)
-            if edges[i] < edges[i + 1]]
+    return split_bounds(0, total, n_splits)
 
 
 @dataclasses.dataclass
@@ -76,5 +74,23 @@ class MapReduceExecutor:
                 splits)
             return jnp.concatenate([jnp.asarray(p) for p in parts], axis=1)
 
+        from .backends import batched_matcher
+        base_batch = batched_matcher(base)
+
+        def aa_match_batch(col, pat):
+            # col: (c, B, n, W, A) — one fused dispatch per protocol round
+            # for B stacked predicates. Split the *tuple* axis (a data axis,
+            # like aa_match) so each map task still sees every predicate but
+            # only a slice of the relation; the batch axis stays fused inside
+            # each task.
+            if col.shape[2] == 0 or col.shape[1] == 0:
+                return base_batch(col, pat)
+            splits = _bounds(col.shape[2], self.n_splits)
+            parts = self.runner.run(
+                lambda s: np.asarray(base_batch(col[:, :, s[0]:s[1]], pat)),
+                splits)
+            return jnp.concatenate([jnp.asarray(p) for p in parts], axis=2)
+
         return Backend(name=f"{base.name}+mapreduce", aa_match=aa_match,
-                       ss_matmul=ss_matmul, match_matrix=match_matrix)
+                       ss_matmul=ss_matmul, match_matrix=match_matrix,
+                       aa_match_batch=aa_match_batch)

@@ -1,0 +1,37 @@
+"""Contiguous range partitioning — the one split helper everyone shares.
+
+Three call sites used to carry their own ``np.linspace``-based variant of
+this logic: the MapReduce input-split bounds (``repro.api.executor``), the
+tree-selection block partitioning (``repro.core.queries``), and the executor
+backend wrappers. They now all call :func:`split_bounds`, so a split computed
+for a MapReduce map task and a block computed for a §3.2.2 Q&A round follow
+the same rounding rules (``linspace`` edges truncated toward zero, empty
+sub-ranges dropped).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+Bounds = Tuple[int, int]
+
+
+def split_bounds(lo: int, hi: int, k: int) -> List[Bounds]:
+    """Split [lo, hi) into at most ``k`` non-empty contiguous [a, b) ranges.
+
+    Ranges cover [lo, hi) exactly, are close to equal-sized (linspace edges),
+    and are never empty — for ``hi - lo < k`` fewer than ``k`` ranges come
+    back. An empty input range yields no bounds.
+    """
+    if hi <= lo:
+        return []
+    k = max(1, min(k, hi - lo))
+    edges = np.linspace(lo, hi, k + 1).astype(int)
+    return [(int(edges[i]), int(edges[i + 1])) for i in range(k)
+            if edges[i] < edges[i + 1]]
+
+
+def split_sizes(total: int, k: int) -> List[int]:
+    """Sizes of :func:`split_bounds`(0, total, k) — handy for stacking."""
+    return [b - a for a, b in split_bounds(0, total, k)]

@@ -25,14 +25,6 @@ def resolve_backend(backend, impl: Optional[str] = None):
     return _registry.get_backend(backend)
 
 
-def match_bits(be, col: Shares, pattern: Shares) -> Shares:
-    """Backend AA match with the query layer's degree bookkeeping:
-    degree = (deg_col + deg_pat) · word_length (Table 3 chain)."""
-    w = col.values.shape[-2]
-    return Shares(be.aa_match(col.values, pattern.values),
-                  (col.degree + pattern.degree) * w)
-
-
 def match_matrix_shares(be, col_x: Shares, col_y: Shares) -> Shares:
     """Backend all-pairs match with the same degree bookkeeping."""
     w = col_x.values.shape[-2]

@@ -12,38 +12,25 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-import numpy as np
 
-from .. import encoding, shamir
 from ..costs import CostLedger
 from ..engine import SecretSharedDB
-from ._common import match_bits, resolve_backend
+from . import rounds
+from ._common import resolve_backend
 
 
 def count_query(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
                 *, ledger: Optional[CostLedger] = None,
                 backend="jnp", impl: Optional[str] = None
                 ) -> Tuple[int, CostLedger]:
-    """COUNT(*) WHERE col = pattern — oblivious, one round."""
+    """COUNT(*) WHERE col = pattern — oblivious, one round.
+
+    Thin wrapper over the batched count phase at B = 1: user shares the
+    predicate, the cloud runs one fused AA dispatch, the user interpolates
+    one count share per contacted cloud.
+    """
     ledger = ledger if ledger is not None else CostLedger()
-    codec = db.codec
     be = resolve_backend(backend, impl)
-
-    # --- user side: encode + share the predicate (Alg 2 line 1-2) ----------
-    p_sh = encoding.share_pattern(key, codec, pattern,
-                                  n_shares=db.n_shares, degree=db.base_degree)
-    ledger.round()
-    ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
-
-    # --- cloud side: AA over every value of the attribute (MAP_count) ------
-    col = db.column(column)                      # (c, n, W, A)
-    counts = match_bits(be, col, p_sh).sum(axis=0)   # (c,) count share
-    ledger.cloud(db.n_tuples * codec.word_length * codec.alphabet_size)
-
-    # --- cloud -> user: one word per cloud ---------------------------------
-    ledger.recv(db.n_shares)
-
-    # --- user side: interpolate c' shares (Alg 2 line 5-6) -----------------
-    result = shamir.interpolate(counts)
-    ledger.user(counts.degree + 1)
-    return int(np.asarray(result)), ledger
+    cnt = rounds.count_phase(
+        be, db, [rounds.MatchJob(column, pattern, key, ledger)])[0]
+    return cnt, ledger

@@ -1,0 +1,389 @@
+"""Round-structured, batch-first protocol core for §3.1/§3.2 queries.
+
+Every selection/count protocol is decomposed here into explicit *rounds*,
+each round being one pure cloud step (a single fused device dispatch over a
+stack of B concurrent queries) followed by one user step (a single Lagrange
+interpolation over everything that round returned). The per-query free
+functions in ``select.py`` / ``count.py`` are thin wrappers that run these
+engines with B = 1, so a batch of B queries and B sequential queries execute
+*the same code* — per-query ``CostLedger`` totals and result rows are
+bit-identical by construction (asserted by ``tests/test_batch.py``).
+
+Protocol phases (one function per phase; a phase is one round except the
+tree engine, which loops):
+
+  * :func:`count_phase`     — §3.1 Alg 2 over B predicates: one
+    ``aa_match_batch`` dispatch, one interpolation of the B count shares.
+  * :func:`one_tuple_round` — §3.2.1 Alg 3 map round over B (verified ℓ=1)
+    predicates: one dispatch, one interpolation of B tuples.
+  * :func:`match_all_round` — §3.2.2 one-round Phase 1: one dispatch, one
+    interpolation of the B·n match-bit matrix.
+  * :func:`tree_rounds`     — §3.2.2 Alg 4 Q&A rounds, *lockstep over the
+    batch*: per round, every query's active blocks are padded to a uniform
+    height and stacked into one block matrix — a single dispatch and a
+    single interpolation replace the historical per-block Python loop.
+    Address fetches (Alg 4 line 14) discovered in a round are likewise
+    batched into one dispatch + one interpolation.
+  * :func:`fetch_round`     — §3.2.2 Phase 2 oblivious fetch: the B padded
+    one-hot matrices are stacked row-wise and multiplied against the
+    relation in one fused ``ss_matmul``.
+
+Ledgers record *protocol* cost (each query's own blocks/rows, Table 1
+units), never the padding the fused dispatch adds — padding is an execution
+artifact of batching, invisible to the user↔cloud transcript.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import encoding, field, shamir
+from ..costs import CostLedger
+from ..engine import SecretSharedDB
+from ..partition import split_bounds
+from ..shamir import Shares
+
+
+# ---------------------------------------------------------------------------
+# batch job descriptors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MatchJob:
+    """One query's slot in a predicate-match phase (count / select)."""
+    column: int
+    pattern: str
+    key: jax.Array          # key for sharing this query's predicate
+    ledger: CostLedger
+
+
+@dataclasses.dataclass
+class TreeJob(MatchJob):
+    """One query's slot in the tree-selection Q&A engine (ℓ ≥ 1 known)."""
+    ell: int = 1
+    branching: Optional[int] = None
+
+
+@dataclasses.dataclass
+class FetchJob:
+    """One query's slot in the fused oblivious-fetch round."""
+    key: jax.Array
+    addresses: Sequence[int]
+    ledger: CostLedger
+    padded_rows: Optional[int] = None
+
+
+# ---------------------------------------------------------------------------
+# shared user/cloud helpers
+# ---------------------------------------------------------------------------
+
+def _batched_matcher(be):
+    """Backend's fused stacked-predicate matcher (deferred registry import
+    keeps core below ``repro.api`` in the layering)."""
+    from ...api import backends as _registry
+    return _registry.batched_matcher(be)
+
+
+def _share_patterns(db: SecretSharedDB, jobs: Sequence[MatchJob]) -> Shares:
+    """User step: encode + share every job's predicate -> (c, B, W, A)."""
+    vals = [encoding.share_pattern(j.key, db.codec, j.pattern,
+                                   n_shares=db.n_shares,
+                                   degree=db.base_degree).values
+            for j in jobs]
+    return Shares(jnp.stack(vals, axis=1), db.base_degree)
+
+
+def _stack_columns(db: SecretSharedDB, columns: Sequence[int]) -> Shares:
+    """Cloud-local view: each job's attribute column -> (c, B, n, W, A).
+
+    When every job targets the same column the stack is a broadcast view,
+    not a copy.
+    """
+    rel = db.relation.values                       # (c, n, m, W, A)
+    if len(set(columns)) == 1:
+        one = rel[:, :, columns[0]]                # (c, n, W, A)
+        stacked = jnp.broadcast_to(one[:, None],
+                                   (one.shape[0], len(columns))
+                                   + one.shape[1:])
+    else:
+        stacked = jnp.moveaxis(rel[:, :, np.asarray(columns)], 2, 1)
+    return Shares(stacked, db.relation.degree)
+
+
+def _match_stack(be, cols: Shares, pats: Shares) -> Shares:
+    """One fused AA dispatch over the stack, with degree bookkeeping."""
+    w = cols.values.shape[-2]
+    bits = _batched_matcher(be)(cols.values, pats.values)      # (c, B, n)
+    return Shares(bits, (cols.degree + pats.degree) * w)
+
+
+def _block_match(be, db: SecretSharedDB, p_all: Shares,
+                 columns: Sequence[int],
+                 entries: Sequence[Tuple[int, int, int]]) -> Shares:
+    """One padded block-matrix dispatch for tree rounds.
+
+    entries: (job_index, start, end) block jobs, possibly from different
+    queries. Blocks are padded to the round's max height H; padded positions
+    are masked to share-of-0 so block sums are exact. Returns match-bit
+    Shares (c, K, H).
+    """
+    starts = np.asarray([s for _, s, _ in entries])
+    ends = np.asarray([e for _, _, e in entries])
+    jidx = np.asarray([i for i, _, _ in entries])
+    h = int((ends - starts).max())
+    idx = starts[:, None] + np.arange(h)[None, :]              # (K, H)
+    mask = idx < ends[:, None]
+    idx = np.where(mask, idx, 0)
+    cols_e = np.asarray([columns[i] for i in jidx])
+    rel = db.relation.values                                   # (c,n,m,W,A)
+    gathered = rel[:, jnp.asarray(idx), jnp.asarray(cols_e)[:, None]]
+    pats = Shares(p_all.values[:, jnp.asarray(jidx)], p_all.degree)
+    bits = _match_stack(be, Shares(gathered, db.relation.degree), pats)
+    masked = jnp.where(jnp.asarray(mask)[None], bits.values, 0)
+    return Shares(masked, bits.degree)
+
+
+# ---------------------------------------------------------------------------
+# §3.1 — batched count phase (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def count_phase(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
+                ) -> List[int]:
+    """COUNT for B predicates: one cloud dispatch, one interpolation."""
+    if not jobs:
+        return []
+    codec = db.codec
+    p_all = _share_patterns(db, jobs)
+    cols = _stack_columns(db, [j.column for j in jobs])
+    bits = _match_stack(be, cols, p_all)                       # (c, B, n)
+    counts = bits.sum(axis=1)                                  # (c, B)
+    out = np.asarray(shamir.interpolate(counts))
+    per_q = codec.word_length * codec.alphabet_size
+    for j in jobs:
+        j.ledger.round()
+        j.ledger.send(db.n_shares * per_q)
+        j.ledger.cloud(db.n_tuples * per_q)
+        j.ledger.recv(db.n_shares)
+        j.ledger.user(counts.degree + 1)
+    return [int(v) for v in out]
+
+
+# ---------------------------------------------------------------------------
+# §3.2.1 — batched single-tuple map round (Algorithm 3 lines 3-12)
+# ---------------------------------------------------------------------------
+
+def one_tuple_round(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
+                    ) -> List[List[str]]:
+    """Fetch the single satisfying tuple for B (ℓ=1-verified) predicates."""
+    if not jobs:
+        return []
+    codec = db.codec
+    b = len(jobs)
+    p_all = _share_patterns(db, jobs)
+    cols = _stack_columns(db, [j.column for j in jobs])
+    bits = _match_stack(be, cols, p_all)                       # (c, B, n)
+    rel = db.relation.values                                   # (c,n,m,W,A)
+    c, n, m, w, a = rel.shape
+    # Σ_n bit·tuple is a share-space matmul of the match bits against the
+    # flattened relation — same mod-p result as the elementwise broadcast
+    # product, without materializing a B-fold (c,B,n,m,W,A) intermediate.
+    sums_flat = be.ss_matmul(bits.values, rel.reshape(c, n, m * w * a))
+    sums = Shares(sums_flat.reshape(c, b, m, w, a),
+                  bits.degree + db.relation.degree)            # (c,B,m,W,A)
+    tup = np.asarray(shamir.interpolate(sums))                 # (B, m, W, A)
+    per_q = codec.word_length * codec.alphabet_size
+    for j in jobs:
+        j.ledger.round()
+        j.ledger.send(db.n_shares * per_q)
+        j.ledger.cloud(db.n_tuples * db.n_attrs * per_q)
+        j.ledger.recv(db.n_shares * db.n_attrs * per_q)
+        j.ledger.user((sums.degree + 1) * db.n_attrs * codec.word_length)
+    return [codec.decode_row(tup[i]) for i in range(b)]
+
+
+# ---------------------------------------------------------------------------
+# §3.2.2 one-round — batched Phase 1 (all n match bits per query)
+# ---------------------------------------------------------------------------
+
+def match_all_round(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
+                    ) -> List[List[int]]:
+    """Per-query satisfying addresses via one fused match-bit round."""
+    if not jobs:
+        return []
+    codec = db.codec
+    p_all = _share_patterns(db, jobs)
+    cols = _stack_columns(db, [j.column for j in jobs])
+    bits = _match_stack(be, cols, p_all)                       # (c, B, n)
+    v = np.asarray(shamir.interpolate(bits))                   # (B, n)
+    per_q = codec.word_length * codec.alphabet_size
+    for j in jobs:
+        j.ledger.round()
+        j.ledger.send(db.n_shares * per_q)
+        j.ledger.cloud(db.n_tuples * per_q)
+        j.ledger.recv(db.n_shares * db.n_tuples)
+        j.ledger.user((bits.degree + 1) * db.n_tuples)
+    return [[int(i) for i in np.nonzero(v[b])[0]] for b in range(len(jobs))]
+
+
+# ---------------------------------------------------------------------------
+# §3.2.2 tree — lockstep Q&A rounds over the batch (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+def tree_rounds(be, db: SecretSharedDB, jobs: Sequence[TreeJob]
+                ) -> List[List[int]]:
+    """Address discovery for B tree selections, every round fused.
+
+    Each loop iteration performs at most one *count* Q&A round (all active
+    blocks of all queries, padded + stacked, one dispatch + one
+    interpolation) and at most one *address-fetch* round (all blocks whose
+    count came back 1, same fusion). A query stops participating once it has
+    no active blocks; its ledger only ever records its own rounds, blocks
+    and bits — identical to running it alone.
+    """
+    if not jobs:
+        return []
+    codec = db.codec
+    per_q = codec.word_length * codec.alphabet_size
+    n = db.n_tuples
+    columns = [j.column for j in jobs]
+    p_all = _share_patterns(db, jobs)
+    for j in jobs:
+        j.ledger.send(db.n_shares * per_q)
+
+    addresses: List[List[int]] = [[] for _ in jobs]
+    active: List[List[Tuple[int, int]]] = []
+    first = [True] * len(jobs)
+    pending_addr: List[Tuple[int, int, int]] = []
+    # ℓ=1 queries take the Alg 4 line 2 path: one whole-table address fetch
+    # that counts as its own round (the per-query wrapper's legacy
+    # behaviour), then straight to Phase 2.
+    one_shot = set()
+    for i, j in enumerate(jobs):
+        if j.ell == 1:
+            pending_addr.append((i, 0, n))
+            one_shot.add(i)
+            active.append([])
+        else:
+            active.append([(0, n)])
+
+    while any(active) or pending_addr:
+        # -- partition every query's active blocks (public, host-side) ------
+        entries: List[Tuple[int, int, int]] = []
+        for i, blocks in enumerate(active):
+            if not blocks:
+                continue
+            fanout = jobs[i].branching or jobs[i].ell
+            k = fanout if first[i] else max(2, fanout)
+            first[i] = False
+            subs = []
+            for (s, e) in blocks:
+                subs += split_bounds(s, e, k)
+            entries += [(i, s, e) for (s, e) in subs]
+            active[i] = []
+
+        # -- count Q&A round: ONE dispatch + ONE interpolation --------------
+        if entries:
+            bits = _block_match(be, db, p_all, columns, entries)
+            counts = Shares(field.sum_(bits.values, axis=2), bits.degree)
+            vals = np.asarray(shamir.interpolate(counts))      # (K,)
+            n_blocks: dict = {}
+            for (i, s, e) in entries:
+                jobs[i].ledger.cloud((e - s) * per_q)
+                n_blocks[i] = n_blocks.get(i, 0) + 1
+            for i, k_i in n_blocks.items():
+                jobs[i].ledger.round()
+                jobs[i].ledger.recv(db.n_shares * k_i)
+                jobs[i].ledger.user((counts.degree + 1) * k_i)
+            for (i, s, e), v in zip(entries, (int(x) for x in vals)):
+                if v == 0:                     # Case 1: dead block
+                    continue
+                if v == 1:                     # Case 2: Address_fetch
+                    pending_addr.append((i, s, e))
+                elif v == e - s:               # Case 3: whole block matches
+                    addresses[i].extend(range(s, e))
+                else:                          # Case 4: recurse
+                    active[i].append((s, e))
+
+        # -- address-fetch round: ONE dispatch + ONE interpolation ----------
+        if pending_addr:
+            addr_entries, pending_addr = pending_addr, []
+            bits = _block_match(be, db, p_all, columns, addr_entries)
+            h = bits.values.shape[2]
+            starts = np.asarray([s for _, s, _ in addr_entries])
+            # line_number = Σ match_h · (global index + 1); padded positions
+            # hold shares of 0 so their weight never contributes.
+            weights = (starts[:, None] + np.arange(h)[None, :] + 1)
+            line = Shares(
+                field.sum_(field.mul(bits.values,
+                                     jnp.asarray(weights,
+                                                 field.DTYPE)[None]),
+                           axis=2), bits.degree)               # (c, K)
+            vals = np.asarray(shamir.interpolate(line))
+            for (i, s, e), v in zip(addr_entries, vals):
+                jobs[i].ledger.cloud((e - s) * per_q)
+                jobs[i].ledger.recv(db.n_shares)
+                jobs[i].ledger.user(line.degree + 1)
+                addresses[i].append(int(v) - 1)
+                if i in one_shot:
+                    jobs[i].ledger.round()
+                    one_shot.discard(i)
+
+    return [sorted(a) for a in addresses]
+
+
+# ---------------------------------------------------------------------------
+# §3.2.2 Phase 2 — fused oblivious fetch for the whole batch
+# ---------------------------------------------------------------------------
+
+def fetch_round(be, db: SecretSharedDB, jobs: Sequence[FetchJob]
+                ) -> List[List[List[str]]]:
+    """Fetch every job's tuples with ONE share-space matmul.
+
+    Each query's ℓ'×n one-hot matrix (``padded_rows`` ≥ ℓ hides the true
+    result size, §3.2.2 leakage discussion) is shared under that query's own
+    key; the B matrices are stacked row-wise so the cloud performs a single
+    (Σℓ'_b × n) @ (n × mWA) fused fetch, then the user interpolates all
+    fetched tuples at once and splits them back per query.
+    """
+    if not jobs:
+        return []
+    codec = db.codec
+    n = db.n_tuples
+    ellps = []
+    mats = []
+    for j in jobs:
+        ell = len(j.addresses)
+        ellp = max(j.padded_rows or ell, ell)
+        ellps.append(ellp)
+        m_host = np.zeros((ellp, n), dtype=np.uint32)
+        for r, a in enumerate(j.addresses):
+            m_host[r, a] = 1
+        m_sh = encoding.share_encoded(j.key, m_host, n_shares=db.n_shares,
+                                      degree=db.base_degree)   # (c, ℓ', n)
+        mats.append(m_sh.values)
+    stacked = jnp.concatenate(mats, axis=1)                    # (c, R, n)
+    rel = db.relation.values                                   # (c,n,m,W,A)
+    c, _, m, w, a = rel.shape
+    rel_flat = rel.reshape(c, n, m * w * a)
+    fetched_flat = be.ss_matmul(stacked, rel_flat)             # ONE dispatch
+    total = stacked.shape[1]
+    fetched = Shares(fetched_flat.reshape(c, total, m, w, a),
+                     db.base_degree + db.relation.degree)
+    out = np.asarray(shamir.interpolate(fetched))              # (R, m, W, A)
+
+    results: List[List[List[str]]] = []
+    off = 0
+    for j, ellp in zip(jobs, ellps):
+        ell = len(j.addresses)
+        j.ledger.round()
+        j.ledger.send(db.n_shares * ellp * n)
+        j.ledger.cloud(ellp * n * m * w * a)
+        j.ledger.recv(db.n_shares * ellp * m * w * a)
+        j.ledger.user((fetched.degree + 1) * ellp * m * w)
+        results.append([codec.decode_row(out[off + r]) for r in range(ell)])
+        off += ellp
+    return results

@@ -12,23 +12,23 @@ Three variants, exactly as the paper structures them:
   address of a single-hit block via Address_fetch (Σ matchᵢ · i).
 
 All cloud work is oblivious: identical ops on every tuple regardless of data.
-Cloud-side hotspots go through the backend registry (``repro.api.backends``);
-prefer ``repro.api.QueryClient.select``, which also cost-plans the strategy.
+
+These free functions are thin wrappers over the round-structured batch
+engine in ``repro.core.queries.rounds`` run at batch size 1 — every protocol
+round is one fused device dispatch plus one interpolation (never a per-block
+Python loop), and a query run here is bit-identical (rows *and* ledger) to
+the same query run inside a ``QueryClient.run_batch`` group. Prefer
+``repro.api.QueryClient.select``, which also cost-plans the strategy.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from .. import encoding, field, shamir
 from ..costs import CostLedger
 from ..engine import SecretSharedDB
-from ..shamir import Shares
-from ._common import match_bits as _match_bits
+from . import rounds
 from ._common import resolve_backend
 from .count import count_query
 
@@ -55,7 +55,6 @@ def select_one_tuple(key: jax.Array, db: SecretSharedDB, column: int,
                      ) -> Tuple[List[List[str]], CostLedger]:
     """SELECT * WHERE col = pattern, when the predicate hits exactly 1 tuple."""
     ledger = ledger if ledger is not None else CostLedger()
-    codec = db.codec
     be = resolve_backend(backend, impl)
     k_count, k_sel = jax.random.split(key)
 
@@ -67,32 +66,9 @@ def select_one_tuple(key: jax.Array, db: SecretSharedDB, column: int,
                 f"select_one_tuple needs ℓ=1, predicate has {ell}"
                 " — use select_one_round/select_tree", count=ell)
 
-    # --- user: send shared predicate (Alg 3 line 3) ------------------------
-    p_sh = encoding.share_pattern(k_sel, codec, pattern,
-                                  n_shares=db.n_shares, degree=db.base_degree)
-    ledger.round()
-    ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
-
-    # --- cloud: MAP_single_tuple_fetch (Alg 3 lines 8-12) ------------------
-    col = db.column(column)
-    m_bits = _match_bits(be, col, p_sh)                 # (c, n)
-    rel = db.relation                                    # (c, n, m, W, A)
-    mb = Shares(m_bits.values[:, :, None, None, None], m_bits.degree)
-    picked = Shares(
-        field.mul(jnp.broadcast_to(mb.values, rel.values.shape), rel.values),
-        m_bits.degree + rel.degree)
-    sums = picked.sum(axis=0)                            # (c, m, W, A)
-    ledger.cloud(db.n_tuples * db.n_attrs * codec.word_length
-                 * codec.alphabet_size)
-
-    # --- cloud -> user: one summed tuple per cloud -------------------------
-    ledger.recv(db.n_shares * db.n_attrs * codec.word_length
-                * codec.alphabet_size)
-
-    # --- user: interpolate + decode -----------------------------------------
-    tup = shamir.interpolate(sums)                       # (m, W, A)
-    ledger.user((sums.degree + 1) * db.n_attrs * codec.word_length)
-    row = codec.decode_row(np.asarray(tup))
+    # Alg 3 lines 3-12: one fused map round + one interpolation
+    row = rounds.one_tuple_round(
+        be, db, [rounds.MatchJob(column, pattern, k_sel, ledger)])[0]
     return [row], ledger
 
 
@@ -110,36 +86,10 @@ def fetch_by_addresses(key: jax.Array, db: SecretSharedDB,
     ``padded_rows`` ≥ ℓ hides the true result size (fake-row padding, §3.2.2
     leakage discussion): extra rows are all-zero one-hots and fetch nothing.
     """
-    codec = db.codec
     be = resolve_backend(backend, impl)
-    n = db.n_tuples
-    ell = len(addresses)
-    ellp = max(padded_rows or ell, ell)
-
-    # --- user: build + share the fetch matrix ------------------------------
-    m_host = np.zeros((ellp, n), dtype=np.uint32)
-    for r, a in enumerate(addresses):
-        m_host[r, a] = 1
-    m_sh = encoding.share_encoded(key, m_host, n_shares=db.n_shares,
-                                  degree=db.base_degree)   # (c, ℓ', n)
-    ledger.round()
-    ledger.send(db.n_shares * ellp * n)
-
-    # --- cloud: share-space matmul  M @ R  ----------------------------------
-    rel = db.relation.values                         # (c, n, m, W, A)
-    c, _, m, w, a = rel.shape
-    rel_flat = rel.reshape(c, n, m * w * a)
-    fetched_flat = be.ss_matmul(m_sh.values, rel_flat)
-    fetched = Shares(fetched_flat.reshape(c, ellp, m, w, a),
-                     m_sh.degree + db.relation.degree)
-    ledger.cloud(ellp * n * m * w * a)
-
-    # --- cloud -> user, interpolate + decode --------------------------------
-    ledger.recv(db.n_shares * ellp * m * w * a)
-    out = shamir.interpolate(fetched)                 # (ℓ', m, W, A)
-    ledger.user((fetched.degree + 1) * ellp * m * w)
-    rows = [codec.decode_row(np.asarray(out[r])) for r in range(ell)]
-    return rows
+    return rounds.fetch_round(
+        be, db, [rounds.FetchJob(key, list(addresses), ledger,
+                                 padded_rows)])[0]
 
 
 # ---------------------------------------------------------------------------
@@ -154,82 +104,20 @@ def select_one_round(key: jax.Array, db: SecretSharedDB, column: int,
     """Phase 1: per-tuple match bits in ONE round (user interpolates n·c′).
     Phase 2: oblivious matrix fetch."""
     ledger = ledger if ledger is not None else CostLedger()
-    codec = db.codec
     be = resolve_backend(backend, impl)
     k_pat, k_fetch = jax.random.split(key)
 
-    # --- round 1: user sends predicate, cloud returns n match bits ---------
-    p_sh = encoding.share_pattern(k_pat, codec, pattern,
-                                  n_shares=db.n_shares, degree=db.base_degree)
-    ledger.round()
-    ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
-    col = db.column(column)
-    m_bits = _match_bits(be, col, p_sh)                       # (c, n)
-    ledger.cloud(db.n_tuples * codec.word_length * codec.alphabet_size)
-    ledger.recv(db.n_shares * db.n_tuples)
-
-    # --- user: interpolate all n bits, collect addresses --------------------
-    v = np.asarray(shamir.interpolate(m_bits))                # (n,)
-    ledger.user((m_bits.degree + 1) * db.n_tuples)
-    addresses = [int(i) for i in np.nonzero(v)[0]]
-
-    # --- round 2: oblivious fetch -------------------------------------------
-    rows = fetch_by_addresses(k_fetch, db, addresses, ledger=ledger,
-                              padded_rows=padded_rows, backend=be)
+    addresses = rounds.match_all_round(
+        be, db, [rounds.MatchJob(column, pattern, k_pat, ledger)])[0]
+    rows = rounds.fetch_round(
+        be, db, [rounds.FetchJob(k_fetch, addresses, ledger,
+                                 padded_rows)])[0]
     return rows, addresses, ledger
 
 
 # ---------------------------------------------------------------------------
 # §3.2.2 — tree-based algorithm (Algorithm 4)
 # ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class _Block:
-    start: int
-    end: int    # exclusive
-
-    @property
-    def size(self) -> int:
-        return self.end - self.start
-
-
-def _count_blocks(be, db: SecretSharedDB, column: int, p_sh: Shares,
-                  blocks: Sequence[_Block], ledger: CostLedger
-                  ) -> List[int]:
-    """One Q&A round: cloud counts p in each block, user interpolates."""
-    codec = db.codec
-    counts = []
-    for b in blocks:
-        col = Shares(db.relation.values[:, b.start:b.end, column],
-                     db.relation.degree)
-        cnt = _match_bits(be, col, p_sh).sum(axis=0)    # (c,) share
-        counts.append(cnt)
-        ledger.cloud(b.size * codec.word_length * codec.alphabet_size)
-    ledger.round()
-    ledger.recv(db.n_shares * len(blocks))
-    out = []
-    for cnt in counts:
-        out.append(int(np.asarray(shamir.interpolate(cnt))))
-        ledger.user(cnt.degree + 1)
-    return out
-
-
-def _address_fetch(be, db: SecretSharedDB, column: int, p_sh: Shares,
-                   block: _Block, ledger: CostLedger) -> int:
-    """Alg 4 line 14: line_number = Σ matchᵢ · (i+1) over the block."""
-    col = Shares(db.relation.values[:, block.start:block.end, column],
-                 db.relation.degree)
-    m_bits = _match_bits(be, col, p_sh)                  # (c, h)
-    idx = jnp.arange(block.start + 1, block.end + 1, dtype=field.DTYPE)
-    line = Shares(field.mul(m_bits.values,
-                            jnp.broadcast_to(idx[None], m_bits.values.shape)),
-                  m_bits.degree).sum(axis=0)
-    ledger.cloud(block.size * db.codec.word_length * db.codec.alphabet_size)
-    ledger.recv(db.n_shares)
-    addr = int(np.asarray(shamir.interpolate(line))) - 1
-    ledger.user(line.degree + 1)
-    return addr
-
 
 def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
                 *, ledger: Optional[CostLedger] = None,
@@ -241,11 +129,11 @@ def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
     """Tree-based multi-round address discovery + oblivious fetch (Alg 4).
 
     Rounds ≤ ⌊log_ℓ n⌋ + ⌊log₂ ℓ⌋ + 1 (Theorem 4). The user interpolates only
-    per-block counts, never the full n-vector. ``known_count`` skips the
-    Phase-0 count when the caller (e.g. the planner) already ran it.
+    per-block counts, never the full n-vector; each Q&A round is one padded
+    block-matrix device dispatch and one interpolation. ``known_count`` skips
+    the Phase-0 count when the caller (e.g. the planner) already ran it.
     """
     ledger = ledger if ledger is not None else CostLedger()
-    codec = db.codec
     be = resolve_backend(backend, impl)
     k_count, k_pat, k_fetch = jax.random.split(key, 3)
 
@@ -257,45 +145,11 @@ def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
         ell = known_count
     if ell == 0:
         return [], [], ledger
-    p_sh = encoding.share_pattern(k_pat, codec, pattern,
-                                  n_shares=db.n_shares, degree=db.base_degree)
-    ledger.send(db.n_shares * codec.word_length * codec.alphabet_size)
-    if ell == 1:
-        # Alg 4 line 2 -> Alg 3; reuse the generic path below with one block.
-        addr = _address_fetch(be, db, column, p_sh,
-                              _Block(0, db.n_tuples), ledger)
-        ledger.round()
-        rows = fetch_by_addresses(k_fetch, db, [addr], ledger=ledger,
-                                  padded_rows=padded_rows, backend=be)
-        return rows, [addr], ledger
 
-    fanout = branching or ell
-    addresses: List[int] = []
-    active = [_Block(0, db.n_tuples)]
-    first_round = True
-    while active:
-        # partition every active block into ≤ fanout equal sub-blocks
-        sub_blocks: List[_Block] = []
-        for b in active:
-            k = min(fanout if first_round else max(2, fanout), b.size)
-            bounds = np.linspace(b.start, b.end, k + 1).astype(int)
-            sub_blocks += [_Block(int(bounds[i]), int(bounds[i + 1]))
-                           for i in range(k) if bounds[i] < bounds[i + 1]]
-        first_round = False
-        counts = _count_blocks(be, db, column, p_sh, sub_blocks, ledger)
-        active = []
-        for b, cnt in zip(sub_blocks, counts):
-            if cnt == 0:                       # Case 1
-                continue
-            if cnt == 1:                       # Case 2: Address_fetch
-                addresses.append(_address_fetch(be, db, column, p_sh, b,
-                                                ledger))
-            elif cnt == b.size:                # Case 3: whole block matches
-                addresses.extend(range(b.start, b.end))
-            else:                              # Case 4: recurse
-                active.append(b)
-
-    addresses.sort()
-    rows = fetch_by_addresses(k_fetch, db, addresses, ledger=ledger,
-                              padded_rows=padded_rows, backend=be)
+    addresses = rounds.tree_rounds(
+        be, db, [rounds.TreeJob(column, pattern, k_pat, ledger,
+                                ell=ell, branching=branching)])[0]
+    rows = rounds.fetch_round(
+        be, db, [rounds.FetchJob(k_fetch, addresses, ledger,
+                                 padded_rows)])[0]
     return rows, addresses, ledger

@@ -46,6 +46,18 @@ def aa_match(col: jax.Array, pat: jax.Array) -> jax.Array:
 
 
 @jax.jit
+def aa_match_batch(col: jax.Array, pat: jax.Array) -> jax.Array:
+    """Stacked-predicate AA match: col (c, B, n, W, A), pat (c, B, W, A)
+    -> (c, B, n). One kernel launch per (c, B) cell via nested vmap — the
+    batched query engine's single dispatch per protocol round."""
+    interp = _interpret()
+    fn = functools.partial(aa_match_pallas, interpret=interp)
+    if col.ndim != 5:
+        raise ValueError(f"unsupported rank: {col.shape}")
+    return jax.vmap(jax.vmap(fn))(col, pat)
+
+
+@jax.jit
 def match_matrix(col_x: jax.Array, col_y: jax.Array) -> jax.Array:
     """All-pairs word match (join §3.3.1 hotspot) via per-position ss_matmul.
 
@@ -68,4 +80,4 @@ def as_backend():
     ``backend="pallas"`` instead of the old ``impl=`` strings."""
     from ..api.backends import Backend  # local import to avoid cycle
     return Backend(name="pallas", aa_match=aa_match, ss_matmul=ss_matmul,
-                   match_matrix=match_matrix)
+                   match_matrix=match_matrix, aa_match_batch=aa_match_batch)

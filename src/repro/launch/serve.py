@@ -5,17 +5,22 @@ but real: fixed-capacity batch slots, greedy sampling, per-slot lengths,
 jitted prefill and decode steps. The decode step is the same function the
 dry-run lowers for the decode_32k / long_500k cells.
 
-``QueryServer`` — the paper-workload analog: drains a queue of logical
-query plans (``repro.api.plans``) through one ``QueryClient`` over a
-secret-shared relation. Per-request keys derive from the client's root key;
-an optional ``MapReduceExecutor`` fans each cloud-side map phase out over
-fault-tolerant worker splits.
+``QueryServer`` — the paper-workload analog rebuilt as a *micro-batching
+scheduler*: logical query plans (``repro.api.plans``) are enqueued with
+``submit``; each ``pump`` drains up to ``max_batch`` waiting requests and
+hands them to ``QueryClient.run_batch``, which groups compatible strategies
+and executes every protocol round once for the whole group. Per-request
+latency (enqueue → result) and batch/throughput counters are kept in
+``ServeStats``. Per-request keys derive from the client's root key; an
+optional ``MapReduceExecutor`` fans each cloud-side map phase (including
+the fused batch dispatch) out over fault-tolerant worker splits.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Deque, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -79,20 +84,122 @@ class BatchServer:
 class QueryRequest:
     plan: Plan
     result: Optional[QueryResult] = None
-    latency_s: float = 0.0
+    error: Optional[Exception] = None
+    latency_s: float = 0.0           # enqueue -> result available
+    enqueued_at: float = 0.0
+
+
+#: latency samples kept for quantile estimates (a sliding window, so a
+#: long-running server stays O(1) memory; counters remain exact).
+LATENCY_WINDOW = 4096
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Aggregate micro-batching telemetry (reset with ``QueryServer.reset``)."""
+    served: int = 0
+    failed: int = 0
+    batches: int = 0
+    busy_s: float = 0.0              # wall time spent inside run_batch
+    latencies_s: "Deque[float]" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.served / self.batches if self.batches else 0.0
+
+    @property
+    def throughput_qps(self) -> float:
+        return self.served / self.busy_s if self.busy_s > 0 else 0.0
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.latencies_s:
+            return 0.0
+        xs = sorted(self.latencies_s)
+        return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+    def as_dict(self) -> dict:
+        return dict(served=self.served, failed=self.failed,
+                    batches=self.batches,
+                    mean_batch_size=self.mean_batch_size,
+                    busy_s=self.busy_s, throughput_qps=self.throughput_qps,
+                    p50_latency_s=self.latency_quantile(0.50),
+                    p95_latency_s=self.latency_quantile(0.95))
 
 
 class QueryServer:
-    """Serves logical query plans against one secret-shared relation."""
+    """Micro-batching scheduler for query plans over one shared relation.
+
+    ``submit`` enqueues; ``pump`` drains one micro-batch (≤ ``max_batch``)
+    through ``QueryClient.run_batch`` — the client groups compatible
+    strategies so each protocol round is issued once per group, not once
+    per request. ``serve`` is the synchronous convenience loop: enqueue
+    everything, pump until the queue is dry.
+    """
 
     def __init__(self, db: SecretSharedDB, key, *, backend="jnp",
-                 executor: Optional[MapReduceExecutor] = None):
+                 executor: Optional[MapReduceExecutor] = None,
+                 max_batch: int = 32):
         self.client = QueryClient(db, key, backend=backend,
                                   executor=executor)
+        self.max_batch = max(1, max_batch)
+        self.stats = ServeStats()
+        self._queue: Deque[QueryRequest] = collections.deque()
 
-    def serve(self, requests: List[QueryRequest]) -> List[QueryRequest]:
+    # -- scheduling ---------------------------------------------------------
+    def submit(self, request: QueryRequest) -> QueryRequest:
+        request.enqueued_at = time.time()
+        self._queue.append(request)
+        return request
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def pump(self) -> List[QueryRequest]:
+        """Drain one micro-batch and execute it; returns finished requests.
+
+        Fault isolation: a plan that raises (bad cardinality hint, invalid
+        padding, …) must not take its batch-mates down, so on a batch
+        failure the micro-batch is re-run per request and only the
+        offending request(s) carry ``error`` (result stays None).
+        """
+        batch: List[QueryRequest] = []
+        while self._queue and len(batch) < self.max_batch:
+            batch.append(self._queue.popleft())
+        if not batch:
+            return []
+        t0 = time.time()
+        try:
+            outcomes = self.client.run_batch([r.plan for r in batch])
+        except Exception:  # noqa: BLE001 — isolate the failing request(s)
+            outcomes = []
+            for r in batch:
+                try:
+                    outcomes.append(self.client.run_batch([r.plan])[0])
+                except Exception as e:  # noqa: BLE001
+                    outcomes.append(e)
+        t1 = time.time()
+        for r, res in zip(batch, outcomes):
+            if isinstance(res, Exception):
+                r.error = res
+                self.stats.failed += 1
+            else:
+                r.result = res
+                self.stats.served += 1
+            r.latency_s = t1 - (r.enqueued_at or t0)
+            self.stats.latencies_s.append(r.latency_s)
+        self.stats.batches += 1
+        self.stats.busy_s += t1 - t0
+        return batch
+
+    def serve(self, requests: Sequence[QueryRequest]) -> List[QueryRequest]:
+        """Enqueue ``requests`` and pump until everything is answered."""
         for r in requests:
-            t0 = time.time()
-            r.result = self.client.run(r.plan)
-            r.latency_s = time.time() - t0
-        return requests
+            self.submit(r)
+        done: List[QueryRequest] = []
+        while self._queue:
+            done += self.pump()
+        return done
+
+    def reset(self) -> None:
+        self.stats = ServeStats()

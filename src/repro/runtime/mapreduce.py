@@ -126,9 +126,17 @@ class MapReduceRunner:
 
         spec_done = False
         while len(results) < n:
-            # drain results
+            # drain ALL queued results this iteration: with many splits,
+            # taking one per poll would add up to poll_s latency per
+            # completed task.
+            ready = []
             try:
-                kind, *payload = out_q.get(timeout=self.poll_s)
+                ready.append(out_q.get(timeout=self.poll_s))
+                while True:
+                    ready.append(out_q.get_nowait())
+            except queue.Empty:
+                pass
+            for kind, *payload in ready:
                 if kind == "ok":
                     res: TaskResult = payload[0]
                     if res.task_id not in results:   # first result wins
@@ -138,8 +146,6 @@ class MapReduceRunner:
                 else:
                     _, task_id, attempt, worker, err = (kind, *payload)
                     raise err
-            except queue.Empty:
-                pass
             now = time.time()
             # lease expiry -> declare worker dead, re-execute
             expired = [a for a in inflight if a.deadline < now

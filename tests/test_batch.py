@@ -1,0 +1,322 @@
+"""Batched oblivious query engine: fusion + equivalence acceptance tests.
+
+Two properties anchor this suite:
+
+  1. *Round fusion*: ``select_tree`` issues exactly one device dispatch and
+     one interpolation per Q&A round (never per block), and a
+     ``run_batch`` group executes each protocol round once for the whole
+     group (never per query).
+  2. *Bit-identical accounting*: every query inside a batch returns the
+     same rows/addresses and the same per-query ``CostLedger`` totals as
+     the same plan run sequentially — batching is free in protocol cost.
+"""
+import jax
+import pytest
+
+from repro.api import (Between, Count, Eq, Padding, QueryClient, RangeCount,
+                       Select, MapReduceExecutor, get_backend)
+from repro.api.backends import Backend, batched_matcher
+from repro.core import outsource, Codec
+from repro.core.queries import CardinalityError, select_tree
+from repro.core import shamir
+from repro.runtime import MapReduceRunner, WorkerPool
+
+CODEC = Codec(word_length=8)
+COLUMNS = ["EmployeeId", "FirstName", "LastName", "Salary", "Department"]
+
+EMPLOYEE = [
+    ["E101", "Adam", "Smith", "1000", "Sale"],
+    ["E102", "John", "Taylor", "2000", "Design"],
+    ["E103", "Eve", "Smith", "500", "Sale"],
+    ["E104", "John", "Williams", "5000", "Sale"],
+]
+
+
+@pytest.fixture(scope="module")
+def employee_db():
+    return outsource(jax.random.PRNGKey(7), EMPLOYEE, column_names=COLUMNS,
+                     codec=CODEC, n_shares=20, degree=1,
+                     numeric_columns={3: 14})
+
+
+def _counting_backend(name="jnp"):
+    """Wrap a registered backend so every hotspot dispatch is counted."""
+    base = get_backend(name)
+    calls = {"aa_match": 0, "aa_match_batch": 0, "ss_matmul": 0,
+             "match_matrix": 0}
+
+    def wrap(op_name, fn):
+        def run(a, b):
+            calls[op_name] += 1
+            return fn(a, b)
+        return run
+
+    be = Backend(
+        name=f"{name}+counting",
+        aa_match=wrap("aa_match", base.aa_match),
+        ss_matmul=wrap("ss_matmul", base.ss_matmul),
+        match_matrix=wrap("match_matrix", base.match_matrix),
+        aa_match_batch=wrap("aa_match_batch", batched_matcher(base)))
+    return be, calls
+
+
+def _count_interpolations(monkeypatch):
+    counter = {"n": 0}
+    real = shamir.interpolate
+
+    def counting(shares, **kw):
+        counter["n"] += 1
+        return real(shares, **kw)
+
+    monkeypatch.setattr(shamir, "interpolate", counting)
+    return counter
+
+
+def _assert_results_equal(a, b):
+    assert a.strategy == b.strategy
+    assert a.rows == b.rows
+    assert a.addresses == b.addresses
+    assert a.count == b.count
+    assert a.ledger == b.ledger       # bit-for-bit: rounds, bits, ops
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one dispatch + one interpolation per Q&A round
+# ---------------------------------------------------------------------------
+
+def _tree_db(n=64):
+    # "John" clustered at 0,1 and 32,33 (ℓ=4). Q&A trace: round 1 splits
+    # into 4 blocks of 16 (counts 2,0,2,0); round 2 splits the two live
+    # blocks into 4×4 (one count-2 block each); round 3 isolates four
+    # singles, all address-fetched in ONE fused round.
+    rows = [[f"id{i}", "John" if i in (0, 1, 32, 33) else f"nm{i}"]
+            for i in range(n)]
+    return rows, outsource(jax.random.PRNGKey(3), rows, codec=CODEC,
+                           n_shares=20)
+
+
+def test_select_tree_one_dispatch_per_round(monkeypatch):
+    _, db = _tree_db()
+    be, calls = _counting_backend()
+    interps = _count_interpolations(monkeypatch)
+    rows, addrs, led = select_tree(jax.random.PRNGKey(5), db, 1, "John",
+                                   backend=be)
+    assert addrs == [0, 1, 32, 33]
+    # phases: count(1) + Q&A count rounds(3) + fused address round(1)
+    # -> 5 match dispatches; the fetch is 1 ss_matmul. 20 blocks were
+    # counted/address-fetched in total, yet no per-block dispatch happened.
+    assert calls["aa_match_batch"] == 5
+    assert calls["aa_match"] == 0
+    assert calls["ss_matmul"] == 1
+    # one interpolation per phase: count, 3 count rounds, address, fetch
+    assert interps["n"] == 6
+    # ledger rounds unchanged by fusion: count + 3 Q&A + fetch
+    assert led.rounds == 5
+
+
+def test_select_tree_rows_and_ledger_unchanged_by_fusion():
+    """The fused tree must agree with a brute-force oracle on rows and with
+    the historical per-block accounting on totals."""
+    rows, db = _tree_db()
+    got, addrs, led = select_tree(jax.random.PRNGKey(5), db, 1, "John")
+    assert got == [rows[i] for i in (0, 1, 32, 33)]
+    # cloud elems (×wa): count 64 + r1 4×16 + r2 8×4 + r3 8×1 + addr 4×1,
+    # then the fetch term 4 rows × n(64) × m(2) × wa.
+    wa = CODEC.word_length * CODEC.alphabet_size
+    assert led.cloud_ops_bits == ((64 + 64 + 32 + 8 + 4) * wa
+                                  + 4 * 64 * 2 * wa) * 31
+
+
+# ---------------------------------------------------------------------------
+# acceptance: B=32 same-strategy batch executes each round once
+# ---------------------------------------------------------------------------
+
+def _wide_db(n=32):
+    pats = ["ann", "bob", "cat", "dan"]
+    rows = [[f"id{i}", pats[i % 4], str(100 + i)] for i in range(n)]
+    return rows, outsource(jax.random.PRNGKey(11), rows,
+                           column_names=["Id", "Name", "Val"],
+                           codec=Codec(word_length=6), n_shares=16)
+
+
+def test_batch32_one_round_selects_execute_rounds_once(monkeypatch):
+    _, db = _wide_db()
+    plans = [Select(Eq("Name", ["ann", "bob", "cat", "dan"][i % 4]),
+                    strategy="one_round") for i in range(32)]
+    seq = [QueryClient(db, key=9).run(p) for p in plans]
+
+    be, calls = _counting_backend()
+    interps = _count_interpolations(monkeypatch)
+    bat = QueryClient(db, key=9, backend=be).run_batch(plans)
+
+    # the whole B=32 group: ONE fused match dispatch + ONE fused fetch
+    assert calls["aa_match_batch"] == 1
+    assert calls["ss_matmul"] == 1
+    assert calls["aa_match"] == 0
+    assert interps["n"] == 2
+    for a, b in zip(seq, bat):
+        _assert_results_equal(a, b)
+
+
+def test_batch32_tree_selects_execute_rounds_once(monkeypatch):
+    _, db = _tree_db()
+    plans = [Select(Eq(1, "John"), strategy="tree") for _ in range(32)]
+    seq = [QueryClient(db, key=13).run(p) for p in plans]
+
+    be, calls = _counting_backend()
+    interps = _count_interpolations(monkeypatch)
+    bat = QueryClient(db, key=13, backend=be).run_batch(plans)
+
+    # same dispatch/interp count as ONE query (see the B=1 acceptance
+    # test): lockstep fusion makes the group free.
+    assert calls["aa_match_batch"] == 5
+    assert calls["ss_matmul"] == 1
+    assert interps["n"] == 6
+    for a, b in zip(seq, bat):
+        _assert_results_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# batch == sequential across mixed strategies / families
+# ---------------------------------------------------------------------------
+
+def test_run_batch_mixed_strategies_equals_sequential(employee_db):
+    plans = [
+        Count(Eq("FirstName", "John")),
+        Select(Eq("Department", "Sale"), strategy="tree"),
+        Select(Eq("FirstName", "John"), strategy="one_round"),
+        Select(Eq("FirstName", "Eve"), strategy="one_tuple"),
+        Select(Eq("FirstName", "John"), strategy="one_round",
+               padding=Padding.to_rows(4)),
+        Select(Eq("FirstName", "Zoe"), strategy="tree"),   # ℓ = 0
+        RangeCount(Between("Salary", 900, 2100), reduce_every=2),
+        Select(Eq("LastName", "Smith")),                   # auto strategy
+    ]
+    seq = [QueryClient(employee_db, key=42).run(p) for p in plans]
+    bat = QueryClient(employee_db, key=42).run_batch(plans)
+    same_client_seq = []
+    cl = QueryClient(employee_db, key=42)
+    for p in plans:
+        same_client_seq.append(cl.run(p))
+    for a, b in zip(same_client_seq, bat):
+        _assert_results_equal(a, b)
+    # fresh-client-per-plan also agrees (keys never leak across queries)
+    for a, b in zip(seq, bat):
+        assert a.rows == b.rows and a.count == b.count
+
+
+def test_run_batch_auto_replans_wrong_hint_like_sequential():
+    big_rows = ([[f"E{i}", f"nm{i}", "X", "1", "D"] for i in range(316)]
+                + EMPLOYEE)
+    db = outsource(jax.random.PRNGKey(1), big_rows, column_names=COLUMNS,
+                   codec=CODEC, n_shares=20)
+    plans = [Select(Eq("FirstName", "John"), expected_matches=1),
+             Select(Eq("FirstName", "Adam"), expected_matches=1)]
+    seq_cl = QueryClient(db, key=7)
+    seq = [seq_cl.run(p) for p in plans]
+    bat = QueryClient(db, key=7).run_batch(plans)
+    for a, b in zip(seq, bat):
+        _assert_results_equal(a, b)
+    assert bat[0].strategy == "one_round"      # replanned: ℓ=2
+    assert bat[0].addresses == [317, 319]
+    assert bat[1].strategy == "one_tuple"      # hint was right
+    assert bat[1].rows == [EMPLOYEE[0]]
+
+
+def test_run_batch_forced_one_tuple_wrong_cardinality_raises(employee_db):
+    plans = [Select(Eq("FirstName", "John"), strategy="one_tuple")]
+    with pytest.raises(CardinalityError):
+        QueryClient(employee_db, key=3).run_batch(plans)
+
+
+def test_run_batch_empty_and_single(employee_db):
+    assert QueryClient(employee_db, key=1).run_batch([]) == []
+    res = QueryClient(employee_db, key=1).run_batch(
+        [Count(Eq("FirstName", "Eve"))])
+    assert len(res) == 1 and res[0].count == 1
+
+
+def test_run_batch_pallas_matches_jnp():
+    _, db = _wide_db(n=8)
+    plans = [Count(Eq("Name", "ann")),
+             Select(Eq("Name", "bob"), strategy="one_round")]
+    rj = QueryClient(db, key=5, backend="jnp").run_batch(plans)
+    rp = QueryClient(db, key=5, backend="pallas").run_batch(plans)
+    for a, b in zip(rj, rp):
+        _assert_results_equal(a, b)
+
+
+def test_run_batch_mapreduce_executor_splits_fused_batch():
+    _, db = _wide_db()
+    pool = WorkerPool(3)
+    runner = MapReduceRunner(pool, lease_s=5.0, max_attempts=30)
+    cl_mr = QueryClient(db, key=21,
+                        executor=MapReduceExecutor(runner, n_splits=3))
+    cl = QueryClient(db, key=21)
+    plans = [Select(Eq("Name", p), strategy="one_round")
+             for p in ("ann", "bob", "cat")]
+    for a, b in zip(cl.run_batch(plans), cl_mr.run_batch(plans)):
+        _assert_results_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# micro-batching QueryServer
+# ---------------------------------------------------------------------------
+
+def test_query_server_micro_batches_and_stats(employee_db):
+    from repro.launch.serve import QueryRequest, QueryServer
+    server = QueryServer(employee_db, key=11, max_batch=4)
+    reqs = [QueryRequest(Count(Eq("FirstName", "John"))),
+            QueryRequest(Select(Eq("Department", "Sale"), strategy="tree")),
+            QueryRequest(Select(Eq("FirstName", "Eve"),
+                                strategy="one_tuple")),
+            QueryRequest(Select(Eq("FirstName", "John"),
+                                strategy="one_round")),
+            QueryRequest(Count(Eq("Department", "Design")))]
+    done = server.serve(reqs)
+    assert [r.result.count for r in done] == [2, 3, 1, 2, 1]
+    assert all(r.latency_s > 0 for r in done)
+    st = server.stats
+    assert st.served == 5
+    assert st.batches == 2                    # max_batch=4 -> 4 + 1
+    assert 2.0 < st.mean_batch_size <= 4.0
+    d = st.as_dict()
+    assert d["p50_latency_s"] >= 0 and d["throughput_qps"] > 0
+    # results identical to an unbatched client with the same root key
+    cl = QueryClient(employee_db, key=11)
+    direct = [cl.run(r.plan) for r in reqs]
+    for r, want in zip(done, direct):
+        assert r.result.rows == want.rows
+        assert r.result.count == want.count
+
+
+def test_query_server_isolates_failing_request(employee_db):
+    """One bad plan in a micro-batch must not take its batch-mates down."""
+    from repro.launch.serve import QueryRequest, QueryServer
+    server = QueryServer(employee_db, key=17, max_batch=8)
+    reqs = [QueryRequest(Count(Eq("FirstName", "Eve"))),
+            # forced one_tuple on a 2-match predicate -> CardinalityError
+            QueryRequest(Select(Eq("FirstName", "John"),
+                                strategy="one_tuple")),
+            QueryRequest(Select(Eq("FirstName", "John"),
+                                strategy="one_round"))]
+    done = server.serve(reqs)
+    assert done[0].result.count == 1 and done[0].error is None
+    assert done[1].result is None
+    assert isinstance(done[1].error, CardinalityError)
+    assert done[2].result.addresses == [1, 3] and done[2].error is None
+    assert server.stats.served == 2 and server.stats.failed == 1
+
+
+def test_query_server_pump_drains_incrementally(employee_db):
+    from repro.launch.serve import QueryRequest, QueryServer
+    server = QueryServer(employee_db, key=2, max_batch=8)
+    assert server.pump() == []                # empty queue is a no-op
+    server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+    server.submit(QueryRequest(Count(Eq("FirstName", "John"))))
+    assert server.pending() == 2
+    out = server.pump()
+    assert server.pending() == 0
+    assert [r.result.count for r in out] == [1, 2]
+    server.reset()
+    assert server.stats.served == 0

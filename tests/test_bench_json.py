@@ -1,0 +1,46 @@
+"""The benchmark harness must emit a well-formed BENCH_queries.json.
+
+Runs a trimmed bench (one table section + a tiny batched sweep) through the
+real ``collect``/``main`` path and validates the schema the CI bench-smoke
+lane (and future perf-trajectory tooling) relies on.
+"""
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+_BENCH = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
+    / "bench_queries.py"
+
+
+@pytest.fixture(scope="module")
+def bq():
+    spec = importlib.util.spec_from_file_location("bench_queries", _BENCH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
+    monkeypatch.setattr(bq, "ALL", [bq.bench_count])
+    monkeypatch.setattr(bq, "SMOKE_SIZES", {"bench_count": (16,)})
+    real_sweep = bq.bench_batched_vs_sequential
+    monkeypatch.setattr(
+        bq, "bench_batched_vs_sequential",
+        lambda **kw: real_sweep(batch_sizes=(2,), n=16))
+    out = tmp_path / "BENCH_queries.json"
+    bq.main(["--smoke", "--out", str(out)])
+
+    doc = json.loads(out.read_text())
+    assert doc["schema"] == "bench_queries/v1"
+    assert doc["smoke"] is True
+    assert doc["results"] and doc["batched"]
+    for row in doc["results"]:
+        assert {"bench", "name", "n", "us_per_call", "comm_bits", "rounds",
+                "cloud_bits", "user_bits", "paper_claim"} <= set(row)
+        assert isinstance(row["rounds"], int) and row["rounds"] >= 0
+    for row in doc["batched"]:
+        assert {"name", "n", "batch", "seq_us", "batch_us", "speedup",
+                "rounds", "comm_bits", "ledger_equal"} <= set(row)
+        assert row["ledger_equal"] is True

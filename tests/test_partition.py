@@ -1,0 +1,52 @@
+"""Unit tests for the shared split helper (core.partition)."""
+import numpy as np
+import pytest
+
+from repro.core.partition import split_bounds, split_sizes
+
+
+def _reference_linspace(lo, hi, k):
+    edges = np.linspace(lo, hi, k + 1).astype(int)
+    return [(int(edges[i]), int(edges[i + 1])) for i in range(k)
+            if edges[i] < edges[i + 1]]
+
+
+@pytest.mark.parametrize("lo,hi,k", [
+    (0, 10, 3), (0, 10, 10), (0, 10, 1), (0, 7, 4), (5, 9, 2),
+    (0, 1, 4), (3, 100, 7), (0, 64, 8),
+])
+def test_covers_range_exactly(lo, hi, k):
+    bounds = split_bounds(lo, hi, k)
+    assert bounds[0][0] == lo and bounds[-1][1] == hi
+    for (a1, b1), (a2, _) in zip(bounds, bounds[1:]):
+        assert b1 == a2            # contiguous, no gaps or overlap
+    assert all(a < b for a, b in bounds)
+
+
+@pytest.mark.parametrize("lo,hi,k", [(0, 10, 3), (2, 9, 5), (0, 100, 16)])
+def test_matches_historic_linspace_behavior(lo, hi, k):
+    """The three deduplicated call sites all used linspace truncation; the
+    shared helper must reproduce it bit-for-bit so splits/blocks are stable
+    across the refactor."""
+    k_eff = max(1, min(k, hi - lo))
+    assert split_bounds(lo, hi, k) == _reference_linspace(lo, hi, k_eff)
+
+
+def test_at_most_k_and_never_empty():
+    assert len(split_bounds(0, 3, 10)) == 3          # clamps to range size
+    assert len(split_bounds(0, 1000, 4)) == 4
+    assert split_bounds(0, 0, 4) == []
+    assert split_bounds(5, 5, 1) == []
+    assert split_bounds(7, 3, 2) == []               # inverted -> empty
+
+
+def test_split_sizes_sum_to_total():
+    for total, k in [(10, 3), (64, 8), (7, 7), (1, 5)]:
+        sizes = split_sizes(total, k)
+        assert sum(sizes) == total
+        assert all(s > 0 for s in sizes)
+
+
+def test_balanced_within_one():
+    sizes = split_sizes(100, 7)
+    assert max(sizes) - min(sizes) <= 1
