@@ -31,8 +31,8 @@ from typing import List, Optional, Sequence
 
 import jax
 
-from repro.api import DBStats, QueryClient, Select, Eq, Padding, \
-    choose_select_strategy
+from repro.api import Between, DBStats, Join, QueryClient, RangeCount, \
+    RangeSelect, Select, Eq, Padding, choose_select_strategy
 from repro.core import outsource, Codec
 from repro.data import synthetic_relation
 
@@ -215,15 +215,40 @@ def bench_scaling_verification(sizes: Optional[Sequence[int]] = None
     return out
 
 
+def _sweep_plans(name: str, db, plans, *, n: int, b: int,
+                 out: List[dict]) -> None:
+    """Run one batched-vs-sequential cell, assert ledger equality, record."""
+    seq_client = QueryClient(db, key=21)
+    t0 = time.time()
+    seq = [seq_client.run(p) for p in plans]
+    seq_us = (time.time() - t0) * 1e6
+    bat_client = QueryClient(db, key=21)
+    t0 = time.time()
+    bat = bat_client.run_batch(plans)
+    bat_us = (time.time() - t0) * 1e6
+    assert all(a.rows == c.rows and a.count == c.count
+               and a.ledger == c.ledger and a.strategy == c.strategy
+               for a, c in zip(seq, bat)), "batch != sequential"
+    out.append(dict(name=name, n=n, batch=b,
+                    seq_us=round(seq_us), batch_us=round(bat_us),
+                    speedup=round(seq_us / max(bat_us, 1e-9), 2),
+                    rounds=bat[0].ledger.rounds,
+                    comm_bits=bat[0].ledger.communication_bits,
+                    ledger_equal=True))
+
+
 def bench_batched_vs_sequential(*, batch_sizes: Sequence[int] = (8, 32),
                                 n: int = 256) -> List[dict]:
-    """The tentpole sweep: B same-relation selects via ``run_batch`` (every
+    """The tentpole sweep: B same-relation queries via ``run_batch`` (every
     protocol round fused over the group) vs the same plans in a sequential
-    loop. Asserts per-query ledger equality — batching must be free in
-    protocol cost — and reports the wall-time speedup.
+    loop — selections, ranges (one fused SS-SUB ripple per bit-round for
+    the whole batch + the cross-group fetch) and PK/FK joins (match
+    matrices riding the same fused fetch). Asserts per-query ledger
+    equality — batching must be free in protocol cost — and reports the
+    wall-time speedup.
     """
     out: List[dict] = []
-    rows, db = _db(n, seed=6, skew=0.25)
+    rows, db = _db(n, seed=6, skew=0.25, numeric=True)
     patterns = sorted({r[1] for r in rows})
     for strategy in ("one_round", "tree", "auto"):
         for b in batch_sizes:
@@ -231,23 +256,23 @@ def bench_batched_vs_sequential(*, batch_sizes: Sequence[int] = (8, 32),
                             strategy=("auto" if strategy == "auto"
                                       else strategy))
                      for i in range(b)]
-            seq_client = QueryClient(db, key=21)
-            t0 = time.time()
-            seq = [seq_client.run(p) for p in plans]
-            seq_us = (time.time() - t0) * 1e6
-            bat_client = QueryClient(db, key=21)
-            t0 = time.time()
-            bat = bat_client.run_batch(plans)
-            bat_us = (time.time() - t0) * 1e6
-            assert all(a.rows == c.rows and a.ledger == c.ledger
-                       and a.strategy == c.strategy
-                       for a, c in zip(seq, bat)), "batch != sequential"
-            out.append(dict(name=f"batched_select_{strategy}", n=n, batch=b,
-                            seq_us=round(seq_us), batch_us=round(bat_us),
-                            speedup=round(seq_us / max(bat_us, 1e-9), 2),
-                            rounds=bat[0].ledger.rounds,
-                            comm_bits=bat[0].ledger.communication_bits,
-                            ledger_equal=True))
+            _sweep_plans(f"batched_select_{strategy}", db, plans,
+                         n=n, b=b, out=out)
+    for b in batch_sizes:
+        plans = [RangeCount(Between("Salary", 500 + 100 * i, 5000),
+                            reduce_every=2) if i % 2 == 0
+                 else RangeSelect(Between("Salary", 600, 900 + 50 * i),
+                                  reduce_every=2)
+                 for i in range(b)]
+        _sweep_plans("batched_range", db, plans, n=n, b=b, out=out)
+    child = [[rows[i % n][0], f"t{i}"] for i in range(min(n, 16))]
+    db_child = outsource(jax.random.PRNGKey(8), child,
+                         column_names=["EmployeeId", "Task"], codec=CODEC,
+                         n_shares=20, degree=1)
+    for b in batch_sizes:
+        plans = [Join(right=db_child, on=("EmployeeId", "EmployeeId"),
+                      kind="pkfk") for _ in range(b)]
+        _sweep_plans("batched_join_pkfk", db, plans, n=n, b=b, out=out)
     return out
 
 

@@ -1,0 +1,120 @@
+"""Protocol-cost regression gate for the BENCH_queries.json trajectory.
+
+Diffs a fresh ``BENCH_queries.json`` against a previous run's artifact (the
+CI bench-smoke lane uploads one per PR). Protocol costs — communication
+rounds and bits per (bench, name, n) configuration — are *deterministic*
+functions of the protocol, so any increase is a real regression, not noise;
+wall-times are reported but never gated (they jitter with the runner).
+
+Exit status: 0 = no protocol-cost regressions, 1 = regression(s) found,
+2 = the artifacts could not be loaded/compared.
+
+Usage::
+
+  PYTHONPATH=src python benchmarks/compare_bench.py NEW.json BASELINE.json
+      [--allow-missing]   # dropped configs are reported but not fatal
+
+New configurations (queries added since the baseline) are informational.
+A configuration present in the baseline but missing from the fresh run is
+treated as a regression unless ``--allow-missing`` is given — silently
+dropping a bench row is how cost regressions hide.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: per-config protocol costs that must never increase (deterministic).
+GATED_KEYS = ("rounds", "comm_bits")
+#: deterministic cloud/user work — drift is surfaced but not fatal (a PR
+#: may legitimately trade cloud work for communication).
+INFO_KEYS = ("cloud_bits", "user_bits")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "bench_queries/v1":
+        raise ValueError(f"{path}: unknown schema {doc.get('schema')!r}")
+    return doc
+
+
+def index_results(doc: dict) -> Dict[Tuple[str, str, int], dict]:
+    return {(r["bench"], r["name"], r["n"]): r for r in doc["results"]}
+
+
+def index_batched(doc: dict) -> Dict[Tuple[str, int, int], dict]:
+    return {(r["name"], r["batch"], r["n"]): r for r in doc["batched"]}
+
+
+def compare(new: dict, old: dict, *, allow_missing: bool = False
+            ) -> Tuple[List[str], List[str]]:
+    """-> (regressions, notes). Empty regressions == gate passes."""
+    regressions: List[str] = []
+    notes: List[str] = []
+
+    def diff_rows(kind, new_idx, old_idx, gated, info=()):
+        for key, old_row in old_idx.items():
+            tag = f"{kind} {'/'.join(str(k) for k in key)}"
+            new_row = new_idx.get(key)
+            if new_row is None:
+                msg = f"{tag}: config vanished from the fresh run"
+                (notes if allow_missing else regressions).append(msg)
+                continue
+            for field in gated:
+                if new_row[field] > old_row[field]:
+                    regressions.append(
+                        f"{tag}: {field} {old_row[field]} -> "
+                        f"{new_row[field]} (+{new_row[field] - old_row[field]})")
+            for field in info:
+                if new_row[field] != old_row[field]:
+                    notes.append(f"{tag}: {field} {old_row[field]} -> "
+                                 f"{new_row[field]}")
+        for key in new_idx.keys() - old_idx.keys():
+            notes.append(f"{kind} {'/'.join(str(k) for k in key)}: "
+                         f"new config (no baseline)")
+
+    diff_rows("table", index_results(new), index_results(old),
+              GATED_KEYS, INFO_KEYS)
+    diff_rows("batched", index_batched(new), index_batched(old),
+              GATED_KEYS)
+    for key, row in index_batched(new).items():
+        if not row.get("ledger_equal", False):
+            regressions.append(
+                f"batched {'/'.join(str(k) for k in key)}: "
+                f"batch != sequential ledger (fusion broke cost identity)")
+    return regressions, notes
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new", help="fresh BENCH_queries.json")
+    ap.add_argument("baseline", help="previous run's BENCH_queries.json")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="dropped configs are notes, not regressions")
+    args = ap.parse_args(argv)
+    try:
+        new, old = _load(args.new), _load(args.baseline)
+        regressions, notes = compare(new, old,
+                                     allow_missing=args.allow_missing)
+    except (OSError, ValueError, KeyError) as e:
+        print(f"compare_bench: cannot compare: {e}", file=sys.stderr)
+        return 2
+    for n in notes:
+        print(f"note: {n}")
+    if regressions:
+        print(f"{len(regressions)} protocol-cost regression(s):",
+              file=sys.stderr)
+        for r in regressions:
+            print(f"  REGRESSION {r}", file=sys.stderr)
+        return 1
+    print(f"no protocol-cost regressions "
+          f"({len(index_results(new))} table rows, "
+          f"{len(index_batched(new))} batched rows checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

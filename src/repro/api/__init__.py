@@ -17,21 +17,22 @@ The legacy free functions in ``repro.core.queries`` remain as thin
 deprecated wrappers; new code should go through this package.
 """
 from .backends import (Backend, available_backends, batched_matcher,
-                       get_backend, register_backend)
+                       get_backend, register_backend, ripple_stepper)
 from .client import QueryClient
 from .executor import MapReduceExecutor
 from .planner import (DEFAULT_ELL, CostEstimate, DBStats,
                       candidate_estimates, choose_select_strategy,
-                      estimate_select_cost)
+                      estimate_batch_group_cost, estimate_select_cost)
 from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
                     QueryResult, RangeCount, RangeSelect, Select,
                     resolve_column)
 
 __all__ = [
     "Backend", "available_backends", "batched_matcher", "get_backend",
-    "register_backend", "QueryClient", "MapReduceExecutor",
+    "register_backend", "ripple_stepper", "QueryClient", "MapReduceExecutor",
     "DEFAULT_ELL", "CostEstimate", "DBStats", "candidate_estimates",
-    "choose_select_strategy", "estimate_select_cost",
+    "choose_select_strategy", "estimate_batch_group_cost",
+    "estimate_select_cost",
     "AUTO", "Between", "ColumnRef", "Count", "Eq", "Join", "Padding", "Plan",
     "QueryResult", "RangeCount", "RangeSelect", "Select", "resolve_column",
 ]

@@ -14,6 +14,13 @@ hotspots every query is built from:
                          per protocol round: B concurrent queries (or B
                          padded blocks of one tree-selection round) become a
                          single device dispatch instead of B.
+  * ``ripple_carry``   — one bit position of the §3.4 SS-SUB ripple
+                         (Algorithm 6) over a *stack* of subtractions:
+                         given the bit-i share planes of A and B and the
+                         incoming carry (``None`` selects the LSB
+                         two's-complement step), returns ``(rb, carry')``.
+                         The batched range engine issues it once per
+                         bit-round for the whole query batch.
 
 All operate on *raw* uint32 share arrays (cloud axis first where batched);
 polynomial-degree bookkeeping stays at the query layer. Queries resolve a
@@ -31,9 +38,11 @@ import dataclasses
 from typing import Callable, Dict, Optional, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
 Array = jax.Array
 _Op = Callable[[Array, Array], Array]
+_RippleOp = Callable[[Array, Array, Optional[Array]], Tuple[Array, Array]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,12 +53,14 @@ class Backend:
     ss_matmul:      ([c,] M, K),  ([c,] K, N)     -> ([c,] M, N)
     match_matrix:   (c, nx, W, A), (c, ny, W, A)  -> (c, nx, ny)
     aa_match_batch: (c, B, n, W, A), (c, B, W, A) -> (c, B, n)
+    ripple_carry:   (c, S, n), (c, S, n), carry|None -> (rb, carry')
     """
     name: str
     aa_match: _Op
     ss_matmul: _Op
     match_matrix: _Op
     aa_match_batch: Optional[_Op] = None
+    ripple_carry: Optional[_RippleOp] = None
 
 
 def batched_matcher(backend: Backend) -> _Op:
@@ -62,6 +73,51 @@ def batched_matcher(backend: Backend) -> _Op:
     if backend.aa_match_batch is not None:
         return backend.aa_match_batch
     return jax.vmap(backend.aa_match, in_axes=1, out_axes=1)
+
+
+def ripple_stepper(backend: Backend) -> _RippleOp:
+    """The backend's SS-SUB bit step, or the reference jnp implementation.
+
+    Unlike the matcher there is no per-backend shape contract to adapt —
+    the step is elementwise share arithmetic — so any backend without its
+    own fused kernel transparently gets the jnp one.
+    """
+    if backend.ripple_carry is not None:
+        return backend.ripple_carry
+    return jnp_ripple_carry
+
+
+def _make_jnp_ripple():
+    """Reference fused ripple step (Algorithm 6 lines 1-4, one bit)."""
+    from ..core import field
+
+    @jax.jit
+    def _init(a, b):
+        # LSB handles the +1 of two's complement: carry = OR(1−a, b)
+        ai = field.sub(jnp.ones_like(a), a)
+        ab = field.mul(ai, b)
+        s = field.add(ai, b)
+        carry = field.sub(s, ab)
+        rb = field.sub(s, field.add(carry, carry))
+        return rb, carry
+
+    @jax.jit
+    def _step(a, b, carry):
+        ai = field.sub(jnp.ones_like(a), a)
+        ab = field.mul(ai, b)
+        x = field.sub(field.add(ai, b), field.add(ab, ab))   # ai ⊕ b
+        cx = field.mul(carry, x)
+        new_carry = field.add(ab, cx)
+        rb = field.sub(field.add(x, carry), field.add(cx, cx))
+        return rb, new_carry
+
+    def ripple_carry(a, b, carry=None):
+        return _init(a, b) if carry is None else _step(a, b, carry)
+
+    return ripple_carry
+
+
+jnp_ripple_carry: _RippleOp = _make_jnp_ripple()
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -116,7 +172,8 @@ def _ensure_builtins() -> None:
         aa_match=aa_match,
         ss_matmul=field.matmul,
         match_matrix=_raw(automata.match_matrix),
-        aa_match_batch=jax.jit(jax.vmap(aa_match, in_axes=1, out_axes=1))))
+        aa_match_batch=jax.jit(jax.vmap(aa_match, in_axes=1, out_axes=1)),
+        ripple_carry=jnp_ripple_carry))
 
 
 def _try_register_pallas() -> bool:

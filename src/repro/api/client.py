@@ -6,12 +6,16 @@ backend choice (``repro.api.backends`` registry), the optional MapReduce
 executor, and the cost-based selection planner (``repro.api.planner``).
 Every query family returns the same :class:`~.plans.QueryResult`.
 
-Count and selection plans execute through the round-structured batch engine
+Every plan family executes through the round-structured batch engine
 (``repro.core.queries.rounds``): :meth:`QueryClient.run_batch` cost-plans
-each query, groups compatible strategies, stacks their shared predicates and
-executes each protocol round *once for the whole group* — one fused device
-dispatch + one interpolation per round instead of one per query (or per
-block). :meth:`QueryClient.run` is the B = 1 case of the same machinery, so
+each query, groups compatible strategies — Count/Select by selection
+algorithm, ranges by (bit-width, ``reduce_every``), joins by kind — stacks
+their shared predicates and executes each protocol round *once for the
+whole group*: one fused device dispatch + one interpolation per match or
+Q&A round, one ``ripple_carry`` dispatch per SS-SUB bit-round, and ONE
+cross-group ``ss_matmul`` for every oblivious fetch (one_round, tree and
+range one-hot matrices *and* PK/FK match matrices stack row-wise).
+:meth:`QueryClient.run` is the B = 1 case of the same machinery, so
 per-query rows and ``CostLedger`` totals are bit-identical between a batch
 and the equivalent sequential calls (asserted by ``tests/test_batch.py``).
 """
@@ -25,8 +29,7 @@ import jax
 
 from ..core.costs import CostLedger
 from ..core.engine import SecretSharedDB
-from ..core.queries import (CardinalityError, equijoin, pkfk_join,
-                            range_count, range_select, rounds)
+from ..core.queries import CardinalityError, rounds
 from . import planner as _planner
 from .backends import BackendLike, get_backend
 from .executor import MapReduceExecutor
@@ -45,6 +48,7 @@ class _Slot:
     strategy: str = ""
     known_count: Optional[int] = None
     column: int = -1
+    fetch_key: Optional[jax.Array] = None
 
 
 class QueryClient:
@@ -100,13 +104,28 @@ class QueryClient:
         """Execute B logical plans, fusing each protocol round per group.
 
         Per-plan keys derive from the root key in list order; every plan is
-        cost-planned exactly as :meth:`run` would, then Count/Select plans
-        with a *compatible strategy* are grouped and executed through the
-        batched round engine — the group's predicates are stacked and each
-        protocol round (count, match, Q&A, address-fetch, oblivious fetch)
-        is one fused device dispatch + one interpolation for the whole
-        group. Families without a batched protocol (range, join) run
-        per-query. Results come back in plan order; each query's rows and
+        cost-planned exactly as :meth:`run` would (AUTO selections see the
+        batch's live group sizes, so with ``round_cost_bits > 0`` a
+        borderline query is steered onto a group whose fused rounds it can
+        ride for free), then compatible plans are grouped and executed
+        through the batched round engine:
+
+        * Count/Select groups stack their shared predicates — each match,
+          Q&A and address round is one fused dispatch + one interpolation.
+        * Range plans group by (bit-width, ``reduce_every``); the whole
+          group's SS-SUB bit-vectors ripple in ONE ``(c, 2B, n, t)`` carry
+          chain — one ``ripple_carry`` dispatch per bit-round, one
+          degree-reduction re-share per boundary for the batch.
+        * Every oblivious fetch in the batch — one_round, tree and range
+          one-hot matrices plus PK/FK join match matrices (a zero-match
+          one_round/range query contributes a 0-row block; a tree query
+          that counted ℓ=0 skips the fetch, as sequentially) — stacks
+          into a single cross-group ``ss_matmul``.
+        * Equijoins fuse per phase: one column-open interpolation, one
+          X-side layer-1 matmul for the group, Y-side per distinct right
+          relation.
+
+        Results come back in plan order; each query's rows and
         ``CostLedger`` are bit-identical to running it sequentially (ledgers
         record the query's own protocol cost, never a groupmate's padding).
 
@@ -119,7 +138,28 @@ class QueryClient:
         count_grp: List[_Slot] = []
         sel_grp: Dict[str, List[_Slot]] = {"one_tuple": [], "one_round": [],
                                            "tree": []}
-        passthrough: List[_Slot] = []
+        range_grps: Dict[Tuple[int, int], List[_Slot]] = {}
+        pkfk_grp: List[_Slot] = []
+        equi_grp: List[_Slot] = []
+        auto_slots: List[_Slot] = []
+        group_sizes: Dict[str, int] = {s: 0 for s in sel_grp}
+        group_rounds: Dict[str, int] = {}
+
+        def join_group(slot: _Slot, strategy: str,
+                       ell: Optional[int]) -> None:
+            """Track a group's size and deepest member's estimated rounds
+            so later AUTO riders are priced at their true marginal depth."""
+            slot.strategy = strategy
+            group_sizes[strategy] += 1
+            est = _planner.estimate_select_cost(
+                strategy, self.stats(),
+                ell=(1 if strategy == "one_tuple" else
+                     _planner.DEFAULT_ELL if ell is None else max(ell, 1)),
+                padded_rows=slot.plan.padding.rows)
+            group_rounds[strategy] = max(group_rounds.get(strategy, 0),
+                                         est.rounds)
+            sel_grp[strategy].append(slot)
+
         for idx, plan in enumerate(plans):
             slot = _Slot(idx, plan, self._next_key())
             if isinstance(plan, Count):
@@ -127,26 +167,44 @@ class QueryClient:
                 count_grp.append(slot)
             elif isinstance(plan, Select):
                 slot.column = resolve_column(self.db, plan.where.column)
-                strategy = plan.strategy
-                if strategy == AUTO:
-                    strategy = _planner.choose_select_strategy(
-                        self.stats(), ell=plan.expected_matches,
-                        padded_rows=plan.padding.rows,
-                        round_cost_bits=self.round_cost_bits).strategy
-                if strategy == "one_tuple" and plan.padding.rows:
+                if plan.strategy == AUTO:
+                    auto_slots.append(slot)   # assigned once groups known
+                    continue
+                if plan.strategy == "one_tuple" and plan.padding.rows:
                     raise ValueError(
                         "one_tuple returns the single tuple directly and "
                         "cannot pad its output size — use one_round/tree "
                         "(or auto, which excludes one_tuple when padding is "
                         "requested)")
-                slot.strategy = strategy
-                sel_grp[strategy].append(slot)
-            elif isinstance(plan, (RangeCount, RangeSelect, Join)):
-                passthrough.append(slot)
+                join_group(slot, plan.strategy, plan.expected_matches)
+            elif isinstance(plan, (RangeCount, RangeSelect)):
+                slot.column = resolve_column(self.db, plan.where.column)
+                gk = (self.db.numeric_bits.get(slot.column, -1),
+                      plan.reduce_every)
+                range_grps.setdefault(gk, []).append(slot)
+            elif isinstance(plan, Join):
+                self._validate_join(plan)
+                (pkfk_grp if plan.kind == "pkfk" else equi_grp).append(slot)
             else:
                 raise TypeError(f"not a logical plan: {plan!r}")
 
+        # AUTO selections plan against the batch's live group sizes and
+        # depths (riding a non-empty group costs only the rounds the rider
+        # adds beyond its deepest member — marginal round pricing; with
+        # round_cost_bits=0 this reduces to sequential planning).
+        for slot in auto_slots:
+            chosen = _planner.choose_select_strategy(
+                self.stats(), ell=slot.plan.expected_matches,
+                padded_rows=slot.plan.padding.rows,
+                round_cost_bits=self.round_cost_bits,
+                group_sizes=group_sizes, group_rounds=group_rounds).strategy
+            join_group(slot, chosen, slot.plan.expected_matches)
+
         be = self.backend
+        # deferred cross-group fetch: (slot, strategy, addresses) per job
+        fetch_jobs: List[rounds.FetchJob] = []
+        fetch_meta: List[Tuple[_Slot, str, List[int]]] = []
+
         if count_grp:
             counts = rounds.count_phase(be, self.db, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, s.key,
@@ -173,11 +231,13 @@ class QueryClient:
                         " — use select_one_round/select_tree", count=ell)
                 # hint was wrong: replan with the learned ℓ on a fresh key;
                 # the slot's ledger keeps the aborted count-phase cost.
-                s.strategy = _planner.choose_select_strategy(
+                chosen = _planner.choose_select_strategy(
                     self.stats(), ell=ell, padded_rows=s.plan.padding.rows,
-                    round_cost_bits=self.round_cost_bits).strategy
+                    round_cost_bits=self.round_cost_bits,
+                    group_sizes=group_sizes,
+                    group_rounds=group_rounds).strategy
                 s.key, s.known_count = self._next_key(), ell
-                sel_grp[s.strategy].append(s)
+                join_group(s, chosen, ell)
             if verified:
                 rows = rounds.one_tuple_round(be, self.db, [
                     rounds.MatchJob(s.column, s.plan.where.pattern, k_sel,
@@ -187,22 +247,19 @@ class QueryClient:
                         plan=s.plan, ledger=s.ledger, strategy="one_tuple",
                         rows=[row])
 
-        # -- one_round: fused Phase 1, then the group-fused fetch -----------
+        # -- one_round: fused Phase 1; fetch joins the cross-group matmul ---
         if sel_grp["one_round"]:
             group = sel_grp["one_round"]
             keys = [jax.random.split(s.key) for s in group]
             addrs = rounds.match_all_round(be, self.db, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, kp, s.ledger)
                 for s, (kp, _) in zip(group, keys)])
-            rows = rounds.fetch_round(be, self.db, [
-                rounds.FetchJob(kf, a, s.ledger, s.plan.padding.rows)
-                for s, (_, kf), a in zip(group, keys, addrs)])
-            for s, a, r in zip(group, addrs, rows):
-                results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
-                                             strategy="one_round", rows=r,
-                                             addresses=a)
+            for s, (_, kf), a in zip(group, keys, addrs):
+                fetch_jobs.append(rounds.FetchJob(kf, a, s.ledger,
+                                                  s.plan.padding.rows))
+                fetch_meta.append((s, "one_round", a))
 
-        # -- tree: batched count phase, lockstep Q&A rounds, fused fetch ----
+        # -- tree: batched count phase, lockstep Q&A rounds -----------------
         if sel_grp["tree"]:
             group = sel_grp["tree"]
             keys = [jax.random.split(s.key, 3) for s in group]
@@ -227,63 +284,83 @@ class QueryClient:
                                    s.ledger, ell=s.known_count,
                                    branching=s.plan.branching)
                     for s, kp, _ in live])
-                rows = rounds.fetch_round(be, self.db, [
-                    rounds.FetchJob(kf, a, s.ledger, s.plan.padding.rows)
-                    for (s, _, kf), a in zip(live, addrs)])
-                for (s, _, _), a, r in zip(live, addrs, rows):
-                    results[s.idx] = QueryResult(
-                        plan=s.plan, ledger=s.ledger, strategy="tree",
-                        rows=r, addresses=a)
+                for (s, _, kf), a in zip(live, addrs):
+                    fetch_jobs.append(rounds.FetchJob(kf, a, s.ledger,
+                                                      s.plan.padding.rows))
+                    fetch_meta.append((s, "tree", a))
 
-        # -- families without a batched protocol run per-query --------------
-        for s in passthrough:
-            if isinstance(s.plan, RangeCount):
-                results[s.idx] = self._run_range_count(s.plan, s.key)
-            elif isinstance(s.plan, RangeSelect):
-                results[s.idx] = self._run_range_select(s.plan, s.key)
-            else:
-                results[s.idx] = self._run_join(s.plan, s.key)
+        # -- ranges: one fused ripple per (bit-width, reduce_every) group ---
+        for (_, reduce_every), group in range_grps.items():
+            jobs = []
+            for s in group:
+                if isinstance(s.plan, RangeSelect):
+                    k_ind, s.fetch_key = jax.random.split(s.key)
+                else:
+                    k_ind = s.key
+                jobs.append(rounds.RangeJob(
+                    s.column, s.plan.where.lo, s.plan.where.hi, k_ind,
+                    s.ledger, reduce_every=reduce_every,
+                    want_addresses=isinstance(s.plan, RangeSelect)))
+            for s, out in zip(group, rounds.range_rounds(be, self.db, jobs)):
+                if isinstance(s.plan, RangeCount):
+                    results[s.idx] = QueryResult(
+                        plan=s.plan, ledger=s.ledger,
+                        strategy="range_count", count=out)
+                else:
+                    fetch_jobs.append(rounds.FetchJob(
+                        s.fetch_key, out, s.ledger, s.plan.padding.rows))
+                    fetch_meta.append((s, "range_select", out))
+
+        # -- pkfk joins: match matrices become rows of the shared fetch -----
+        join_jobs: List[rounds.JoinJob] = []
+        join_entries: List[rounds.FetchEntry] = []
+        if pkfk_grp:
+            join_jobs = [rounds.JoinJob(
+                s.plan.right, resolve_column(self.db, s.plan.on[0]),
+                resolve_column(s.plan.right, s.plan.on[1]), s.key, s.ledger)
+                for s in pkfk_grp]
+            join_entries = rounds.join_match_round(be, self.db, join_jobs)
+
+        # -- the cross-group fetch: ONE ss_matmul for everything ------------
+        if fetch_jobs or join_entries:
+            rows_list, extra_sh = rounds.fetch_fusion(be, self.db,
+                                                      fetch_jobs,
+                                                      join_entries)
+            for (s, strat, a), r in zip(fetch_meta, rows_list):
+                results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
+                                             strategy=strat, rows=r,
+                                             addresses=a)
+            if pkfk_grp:
+                join_rows = rounds.join_emit_round(self.db, join_jobs,
+                                                   extra_sh)
+                for s, r in zip(pkfk_grp, join_rows):
+                    results[s.idx] = QueryResult(plan=s.plan,
+                                                 ledger=s.ledger,
+                                                 strategy="pkfk", rows=r)
+
+        # -- equijoins: phases fused across the group -----------------------
+        if equi_grp:
+            equi_rows = rounds.equijoin_rounds(be, self.db, [
+                rounds.EquiJob(
+                    s.plan.right, resolve_column(self.db, s.plan.on[0]),
+                    resolve_column(s.plan.right, s.plan.on[1]), s.key,
+                    s.ledger, padded_values=s.plan.padding.values)
+                for s in equi_grp])
+            for s, r in zip(equi_grp, equi_rows):
+                results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
+                                             strategy="equi", rows=r)
         return [results[i] for i in range(len(plans))]
 
-    def _run_range_count(self, plan: RangeCount, key) -> QueryResult:
-        # Range counting is pure element-wise share arithmetic (SS-SUB
-        # ripple + sum) — it has no registry hotspot, so the client's
-        # backend/executor choice does not apply to this family.
-        col = resolve_column(self.db, plan.where.column)
-        cnt, led = range_count(key, self.db, col, plan.where.lo,
-                               plan.where.hi, reduce_every=plan.reduce_every)
-        return QueryResult(plan=plan, ledger=led, strategy="range_count",
-                           count=cnt)
-
-    def _run_range_select(self, plan: RangeSelect, key) -> QueryResult:
-        col = resolve_column(self.db, plan.where.column)
-        rows, addrs, led = range_select(
-            key, self.db, col, plan.where.lo, plan.where.hi,
-            reduce_every=plan.reduce_every, padded_rows=plan.padding.rows,
-            backend=self.backend)
-        return QueryResult(plan=plan, ledger=led, strategy="range_select",
-                           rows=rows, addresses=addrs)
-
-    def _run_join(self, plan: Join, key) -> QueryResult:
-        col_l = resolve_column(self.db, plan.on[0])
-        col_r = resolve_column(plan.right, plan.on[1])
+    @staticmethod
+    def _validate_join(plan: Join) -> None:
         if plan.padding.rows:
             raise ValueError("joins take Padding.fake_values (fake join "
                              "jobs), not Padding.rows")
-        if plan.kind == "pkfk":
-            if plan.padding.values:
-                raise ValueError(
-                    "pkfk_join's output size is always n_y (one reducer per "
-                    "child tuple) — nothing to hide; Padding.fake_values "
-                    "applies to kind='equi' only")
-            rows, led = pkfk_join(key, self.db, plan.right, col_l, col_r,
-                                  backend=self.backend)
-        else:
-            rows, led = equijoin(key, self.db, plan.right, col_l, col_r,
-                                 padded_values=plan.padding.values,
-                                 backend=self.backend)
-        return QueryResult(plan=plan, ledger=led, strategy=plan.kind,
-                           rows=rows)
+        if plan.kind == "pkfk" and plan.padding.values:
+            raise ValueError(
+                "pkfk_join's output size is always n_y (one reducer per "
+                "child tuple) — nothing to hide; Padding.fake_values "
+                "applies to kind='equi' only")
 
     # -- conveniences (build the plan, run it) ------------------------------
     def count(self, column: ColumnRef, pattern: str) -> QueryResult:

@@ -74,8 +74,28 @@ class MapReduceExecutor:
                 splits)
             return jnp.concatenate([jnp.asarray(p) for p in parts], axis=1)
 
-        from .backends import batched_matcher
+        from .backends import batched_matcher, ripple_stepper
         base_batch = batched_matcher(base)
+        base_ripple = ripple_stepper(base)
+
+        def ripple_carry(a, b, carry=None):
+            # a: (c, S, n) bit planes — split the tuple axis (last), like
+            # every other map phase; the stacked-query axis stays fused in
+            # each task. Both outputs (result bit, carry) concatenate back.
+            if a.shape[-1] == 0:
+                return base_ripple(a, b, carry)
+            splits = _bounds(a.shape[-1], self.n_splits)
+
+            def one(s):
+                sl = (Ellipsis, slice(s[0], s[1]))
+                rb, co = base_ripple(a[sl], b[sl],
+                                     None if carry is None else carry[sl])
+                return np.asarray(rb), np.asarray(co)
+            parts = self.runner.run(one, splits)
+            return (jnp.concatenate([jnp.asarray(p[0]) for p in parts],
+                                    axis=-1),
+                    jnp.concatenate([jnp.asarray(p[1]) for p in parts],
+                                    axis=-1))
 
         def aa_match_batch(col, pat):
             # col: (c, B, n, W, A) — one fused dispatch per protocol round
@@ -93,4 +113,5 @@ class MapReduceExecutor:
 
         return Backend(name=f"{base.name}+mapreduce", aa_match=aa_match,
                        ss_matmul=ss_matmul, match_matrix=match_matrix,
-                       aa_match_batch=aa_match_batch)
+                       aa_match_batch=aa_match_batch,
+                       ripple_carry=ripple_carry)

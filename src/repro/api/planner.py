@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import List, Mapping, Optional, Sequence
 
 from ..core.costs import WORD_BITS
 from ..core.engine import SecretSharedDB
@@ -125,9 +125,55 @@ def candidate_estimates(stats: DBStats, *, ell: Optional[int] = None,
 
 def choose_select_strategy(stats: DBStats, *, ell: Optional[int] = None,
                            padded_rows: Optional[int] = None,
-                           round_cost_bits: int = 0) -> CostEstimate:
+                           round_cost_bits: int = 0,
+                           group_sizes: Optional[Mapping[str, int]] = None,
+                           group_rounds: Optional[Mapping[str, int]] = None
+                           ) -> CostEstimate:
     """Pick the paper-optimal strategy: min bits, rounds as tie-break
     (price a round via ``round_cost_bits`` to trade bandwidth for latency).
+
+    ``group_sizes`` makes the choice *batching-aware*: it maps strategy name
+    to the number of batch-mates already executing that strategy in the
+    current ``run_batch``. The batched round engine fuses a group's protocol
+    rounds into one dispatch/interpolation each, so a query that joins a
+    non-empty group pays its bits but rides the group's existing rounds for
+    free — its **marginal** round cost is only the depth it adds beyond the
+    group's deepest member (``group_rounds``: strategy -> estimated rounds
+    of that deepest member; without it a non-empty group is assumed at
+    least as deep as the rider). With ``round_cost_bits > 0`` that steers a
+    borderline query onto the strategy of an already-running (typically the
+    larger) group whenever riding its fused rounds is cheaper than opening
+    a new round chain. With the default pricing (``round_cost_bits = 0``)
+    rounds never enter the score, so the choice — and therefore every
+    row/ledger — is identical to sequential planning.
     """
     cands = candidate_estimates(stats, ell=ell, padded_rows=padded_rows)
-    return min(cands, key=lambda e: (e.score(round_cost_bits), e.rounds))
+
+    def key(e: CostEstimate):
+        riding = bool(group_sizes) and group_sizes.get(e.strategy, 0) > 0
+        if riding:
+            depth = (group_rounds or {}).get(e.strategy)
+            marginal_rounds = (0 if depth is None
+                               else max(0, e.rounds - depth))
+        else:
+            marginal_rounds = e.rounds
+        return (e.bits + round_cost_bits * marginal_rounds, e.rounds)
+
+    return min(cands, key=key)
+
+
+def estimate_batch_group_cost(stats: DBStats, strategy: str, *,
+                              ells: Sequence[Optional[int]],
+                              padded_rows: Optional[int] = None
+                              ) -> CostEstimate:
+    """Price a whole ``run_batch`` group: bits add up query by query, but
+    the lockstep engine pays each protocol round once for the group, so the
+    group's round count is its deepest member's (not the sum). This is the
+    per-group ledger shape ``tests/test_batch.py`` asserts, exposed as a
+    planner-side estimate."""
+    ests = [estimate_select_cost(
+        strategy, stats, ell=DEFAULT_ELL if e is None else max(e, 1),
+        padded_rows=padded_rows) for e in ells]
+    return CostEstimate(strategy,
+                        bits=sum(e.bits for e in ests),
+                        rounds=max((e.rounds for e in ests), default=0))

@@ -15,6 +15,15 @@ then per common value the first layer obliviously fetches the matching tuples
 second-layer cloud, which emits the ℓx×ℓy concatenations. Clouds within a
 layer never communicate.
 
+Both are thin B = 1 wrappers over the round-structured batch engine
+(``repro.core.queries.rounds``): a PK/FK join's reducer contraction is a
+row-block of the same fused fetch ``ss_matmul`` the selection/range groups
+ride (``join_match_round`` + ``fetch_fusion`` + ``join_emit_round``), and B
+equijoins fuse their column-open, layer-1 fetches and layer-2 pair
+interpolations per phase (``equijoin_rounds``). A join run here is
+bit-identical (rows *and* ``CostLedger``) to the same join inside a
+``QueryClient.run_batch`` group.
+
 Prefer ``repro.api.QueryClient.join``; the canonical ``pkfk_join`` signature
 is key-first like the rest of the suite (the key re-randomizes the outgoing
 joined shares with owner-provisioned zero-sharings so transmitted shares
@@ -26,26 +35,16 @@ from __future__ import annotations
 from typing import List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from .. import encoding, field, shamir
 from ..costs import CostLedger
 from ..engine import SecretSharedDB
-from ..shamir import Shares
-from ._common import match_matrix_shares, resolve_backend
+from . import rounds
+from ._common import resolve_backend
 
 
 # ---------------------------------------------------------------------------
 # §3.3.1 — PK/FK oblivious join
 # ---------------------------------------------------------------------------
-
-def _rerandomize(key: jax.Array, s: Shares) -> Shares:
-    """Add a fresh sharing of zero: same secret, unlinkable share values."""
-    zero = shamir.share(key, jnp.zeros(s.shape, dtype=s.values.dtype),
-                        n_shares=s.n_shares, degree=s.degree)
-    return s + zero
-
 
 def pkfk_join(*args, **kwargs) -> Tuple[List[List[str]], CostLedger]:
     """X ⋈ Y on X.col_x = Y.col_y, where col_x is a primary key of X.
@@ -66,80 +65,17 @@ def _pkfk_join(key: Optional[jax.Array], dbX: SecretSharedDB,
                backend="jnp", impl: Optional[str] = None
                ) -> Tuple[List[List[str]], CostLedger]:
     ledger = ledger if ledger is not None else CostLedger()
-    codec = dbX.codec
     be = resolve_backend(backend, impl)
-    c = dbX.n_shares
-    nx, ny = dbX.n_tuples, dbY.n_tuples
-    W, A = codec.word_length, codec.alphabet_size
-
-    # --- cloud: match matrix over join columns (the n² string matches) -----
-    bx = dbX.column(col_x)                       # (c, nx, W, A)
-    by = dbY.column(col_y)                       # (c, ny, W, A)
-    M = match_matrix_shares(be, bx, by)          # (c, nx, ny)
-    ledger.cloud(nx * ny * W * A)
-
-    # --- reducer j: Σ_i M[i,j] · X_tuple_i  (share-space select) -----------
-    relX = dbX.relation.values                   # (c, nx, m, W, A)
-    mX = dbX.n_attrs
-    joined_x_flat = be.ss_matmul(
-        jnp.swapaxes(M.values, -1, -2),          # (c, ny, nx)
-        relX.reshape(c, nx, mX * W * A))         # -> (c, ny, m·W·A)
-    joined_x = Shares(joined_x_flat.reshape(c, ny, mX, W, A),
-                      M.degree + dbX.relation.degree)
-    ledger.cloud(nx * ny * mX * W)
-
-    # child's own attributes ride along at base degree
-    y_part = dbY.relation                        # (c, ny, mY, W, A)
-
-    # key-threaded output re-randomization: each cloud adds its slice of an
-    # owner-provisioned zero-sharing before transmitting, so the returned
-    # shares cannot be correlated with the stored relation shares.
-    if key is not None:
-        kx, ky = jax.random.split(key)
-        joined_x = _rerandomize(kx, joined_x)
-        y_part = _rerandomize(ky, y_part)
-        ledger.cloud(ny * (mX + dbY.n_attrs) * W * A)
-
-    # --- cloud -> user: n_y joined tuples per cloud -------------------------
-    ledger.round()
-    ledger.recv(c * ny * (mX + dbY.n_attrs) * W * A)
-
-    # --- user: interpolate both parts, decode, assemble ---------------------
-    xs = np.asarray(shamir.interpolate(joined_x))          # (ny, mX, W, A)
-    ys = np.asarray(shamir.interpolate(y_part))            # (ny, mY, W, A)
-    ledger.user((joined_x.degree + 1) * ny * mX * W
-                + (y_part.degree + 1) * ny * dbY.n_attrs * W)
-    rows = []
-    for j in range(ny):
-        x_row = codec.decode_row(xs[j])
-        if all(v == "" for v in x_row):
-            continue                              # dangling child (no parent)
-        y_row = codec.decode_row(ys[j])
-        rows.append(x_row + [v for k, v in enumerate(y_row) if k != col_y])
+    job = rounds.JoinJob(dbY, col_x, col_y, key, ledger)
+    entries = rounds.join_match_round(be, dbX, [job])
+    _, fetched = rounds.fetch_fusion(be, dbX, [], entries)
+    rows = rounds.join_emit_round(dbX, [job], fetched)[0]
     return rows, ledger
 
 
 # ---------------------------------------------------------------------------
 # §3.3.2 — non-PK/FK oblivious equijoin (two cloud layers)
 # ---------------------------------------------------------------------------
-
-def _fetch_shares(key: jax.Array, db: SecretSharedDB, addresses: List[int],
-                  ledger: CostLedger, be) -> Shares:
-    """Layer-1 oblivious fetch that KEEPS the result in share form."""
-    n = db.n_tuples
-    m_host = np.zeros((len(addresses), n), dtype=np.uint32)
-    for r, a in enumerate(addresses):
-        m_host[r, a] = 1
-    m_sh = encoding.share_encoded(key, m_host, n_shares=db.n_shares,
-                                  degree=db.base_degree)
-    ledger.send(db.n_shares * len(addresses) * n)
-    c, _, m, w, a = db.relation.values.shape
-    fetched = be.ss_matmul(m_sh.values,
-                           db.relation.values.reshape(c, n, m * w * a))
-    ledger.cloud(len(addresses) * n * m * w * a)
-    return Shares(fetched.reshape(c, len(addresses), m, w, a),
-                  m_sh.degree + db.relation.degree)
-
 
 def equijoin(key: jax.Array, dbX: SecretSharedDB, dbY: SecretSharedDB,
              col_x: int, col_y: int, *,
@@ -153,64 +89,8 @@ def equijoin(key: jax.Array, dbX: SecretSharedDB, dbY: SecretSharedDB,
     discussion of §3.3.2).
     """
     ledger = ledger if ledger is not None else CostLedger()
-    codec = dbX.codec
     be = resolve_backend(backend, impl)
-
-    # --- step 1: user interpolates both join columns ------------------------
-    bx, by = dbX.column(col_x), dbY.column(col_y)
-    ledger.round()
-    ledger.recv(dbX.n_shares * dbX.n_tuples * codec.word_length
-                * codec.alphabet_size
-                + dbY.n_shares * dbY.n_tuples * codec.word_length
-                * codec.alphabet_size)
-    x_vals = [codec.decode_word(v)
-              for v in np.asarray(shamir.interpolate(bx))]
-    y_vals = [codec.decode_word(v)
-              for v in np.asarray(shamir.interpolate(by))]
-    ledger.user((bx.degree + 1) * dbX.n_tuples * codec.word_length
-                + (by.degree + 1) * dbY.n_tuples * codec.word_length)
-
-    common = sorted(set(x_vals) & set(y_vals))
-
-    # --- step 2: per common value, layer-1 fetch -> layer-2 concat ----------
-    rows: List[List[str]] = []
-    n_jobs = len(common) + padded_values
-    for idx in range(n_jobs):
-        key, kx, ky = jax.random.split(key, 3)
-        if idx < len(common):
-            b = common[idx]
-            addr_x = [i for i, v in enumerate(x_vals) if v == b]
-            addr_y = [j for j, v in enumerate(y_vals) if v == b]
-        else:  # fake job: fetch nothing (all-zero matrices), same traffic
-            addr_x, addr_y = [0], [0]
-        # layer 1: oblivious fetches (one round per value — Thm 6's 2k rounds)
-        ledger.round(2)
-        Xp = _fetch_shares(kx, dbX, addr_x, ledger, be)  # (c, ℓx, mX, W, A)
-        Yp = _fetch_shares(ky, dbY, addr_y, ledger, be)  # (c, ℓy, mY, W, A)
-
-        # layer-1 -> layer-2 hand-off (cloud i -> cloud i): counted as cloud
-        # traffic, not user traffic; layer 2 concatenates all ℓx×ℓy pairs.
-        lx, ly = Xp.shape[0], Yp.shape[0]
-        pairs_x = Shares(jnp.repeat(Xp.values, ly, axis=1), Xp.degree)
-        pairs_y = Shares(jnp.tile(Yp.values, (1, lx, 1, 1, 1)), Yp.degree)
-        ledger.cloud(lx * ly * (dbX.n_attrs + dbY.n_attrs)
-                     * codec.word_length * codec.alphabet_size)
-
-        if idx >= len(common):
-            continue  # fake job output discarded at user side
-        # --- step 3: user interpolates the ℓx·ℓy concatenations -------------
-        ledger.recv(dbX.n_shares * lx * ly
-                    * (dbX.n_attrs + dbY.n_attrs)
-                    * codec.word_length * codec.alphabet_size)
-        xs = np.asarray(shamir.interpolate(pairs_x))
-        ys = np.asarray(shamir.interpolate(pairs_y))
-        ledger.user((pairs_x.degree + 1) * lx * ly * dbX.n_attrs
-                    * codec.word_length
-                    + (pairs_y.degree + 1) * lx * ly * dbY.n_attrs
-                    * codec.word_length)
-        for r in range(lx * ly):
-            x_row = codec.decode_row(xs[r])
-            y_row = codec.decode_row(ys[r])
-            rows.append(x_row + [v for k2, v in enumerate(y_row)
-                                 if k2 != col_y])
+    rows = rounds.equijoin_rounds(be, dbX, [
+        rounds.EquiJob(dbY, col_x, col_y, key, ledger,
+                       padded_values=padded_values)])[0]
     return rows, ledger

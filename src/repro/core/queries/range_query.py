@@ -10,6 +10,16 @@ required cloud count bounded — each reduction is an explicit protocol round.
 
 ``range_count`` is Algorithm 5; ``range_select`` fetches the satisfying
 tuples by reusing the selection machinery (§3.2) exactly as the paper says.
+
+Both are thin B = 1 wrappers over the round-structured batch engine
+(``repro.core.queries.rounds.range_rounds``): the SS-SUB ripple is
+element-wise per bit, so B concurrent range queries stack their bit-vectors
+into one carry chain — each bit position is ONE backend ``ripple_carry``
+dispatch and each ``reduce_every`` boundary ONE degree-reduction re-share
+for the whole batch. A query run here is bit-identical (result *and*
+``CostLedger``) to the same query inside a ``QueryClient.run_batch`` group.
+``ss_sub`` remains as the reference single-subtraction implementation (and
+the parity oracle for the fused engine).
 """
 from __future__ import annotations
 
@@ -17,13 +27,13 @@ from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .. import encoding, field, shamir
+from .. import shamir
 from ..costs import CostLedger
 from ..engine import SecretSharedDB
 from ..shamir import Shares
-from .select import fetch_by_addresses
+from . import rounds
+from ._common import resolve_backend
 
 
 def _xor(a: Shares, b: Shares) -> Shares:
@@ -69,59 +79,22 @@ def ss_sub(key: jax.Array, A: Shares, B: Shares, *,
     return rb                                              # sign of B − A
 
 
-def _in_range_bits(key: jax.Array, db: SecretSharedDB, column: int,
-                   lo: int, hi: int, *, ledger: CostLedger,
-                   reduce_every: int = 0) -> Shares:
-    """Share of the in-range indicator for every tuple (c, n)."""
-    if column not in db.numeric:
-        raise ValueError(f"column {column} was not outsourced in binary form")
-    bits = db.numeric[column]                      # (c, n, t_bits)
-    t_bits = db.numeric_bits[column]
-    n = db.n_tuples
-
-    # user: share the range endpoints (broadcast over tuples)
-    k_a, k_b, k_s1, k_s2 = jax.random.split(key, 4)
-    a_enc = encoding.encode_number_bits(lo, t_bits)
-    b_enc = encoding.encode_number_bits(hi, t_bits)
-    a_sh = encoding.share_encoded(k_a, a_enc, n_shares=db.n_shares,
-                                  degree=db.base_degree)     # (c, t)
-    b_sh = encoding.share_encoded(k_b, b_enc, n_shares=db.n_shares,
-                                  degree=db.base_degree)
-    ledger.round()
-    ledger.send(db.n_shares * 2 * t_bits)
-
-    def bcast(s: Shares) -> Shares:
-        v = jnp.broadcast_to(s.values[:, None, :],
-                             (s.n_shares, n, t_bits))
-        return Shares(v, s.degree)
-
-    x = bits
-    # sign(x − a) = SS-SUB(A=a, B=x);  sign(b − x) = SS-SUB(A=x, B=b)
-    s_xa = ss_sub(k_s1, bcast(a_sh), x, reduce_every=reduce_every,
-                  ledger=ledger)
-    s_bx = ss_sub(k_s2, x, bcast(b_sh), reduce_every=reduce_every,
-                  ledger=ledger)
-    ledger.cloud(2 * n * t_bits)
-    one = Shares(jnp.ones_like(s_xa.values), 0)
-    return one - s_xa - s_bx                        # Eq. 2 indicator
-
-
 def range_count(key: jax.Array, db: SecretSharedDB, column: int,
                 lo: int, hi: int, *, ledger: Optional[CostLedger] = None,
-                reduce_every: int = 0) -> Tuple[int, CostLedger]:
+                reduce_every: int = 0,
+                backend="jnp", impl: Optional[str] = None
+                ) -> Tuple[int, CostLedger]:
     """COUNT(*) WHERE lo <= col <= hi (Algorithm 5, counting phase).
 
-    Backend-independent by construction: SS-SUB is element-wise share
-    arithmetic with no registry hotspot (no aa_match / ss_matmul).
+    B = 1 wrapper over the batched ripple engine: the backend's
+    ``ripple_carry`` runs the whole carry chain, one dispatch per bit.
     """
     ledger = ledger if ledger is not None else CostLedger()
-    ind = _in_range_bits(key, db, column, lo, hi, ledger=ledger,
-                         reduce_every=reduce_every)
-    total = ind.sum(axis=0)                         # (c,)
-    ledger.recv(db.n_shares)
-    out = int(np.asarray(shamir.interpolate(total)))
-    ledger.user(total.degree + 1)
-    return out, ledger
+    be = resolve_backend(backend, impl)
+    cnt = rounds.range_rounds(be, db, [
+        rounds.RangeJob(column, lo, hi, key, ledger,
+                        reduce_every=reduce_every)])[0]
+    return cnt, ledger
 
 
 def range_select(key: jax.Array, db: SecretSharedDB, column: int,
@@ -130,16 +103,17 @@ def range_select(key: jax.Array, db: SecretSharedDB, column: int,
                  backend="jnp", impl: Optional[str] = None
                  ) -> Tuple[List[List[str]], List[int], CostLedger]:
     """Fetch all tuples with col ∈ [lo, hi] (Alg 5 "simple solution" path:
-    per-tuple indicator bits -> addresses -> oblivious matrix fetch)."""
+    per-tuple indicator bits -> addresses -> oblivious matrix fetch).
+
+    B = 1 wrapper over ``range_rounds`` + the shared ``fetch_round`` — in a
+    batch the fetch rides the cross-group fused ``ss_matmul``.
+    """
     ledger = ledger if ledger is not None else CostLedger()
+    be = resolve_backend(backend, impl)
     k_ind, k_fetch = jax.random.split(key)
-    ind = _in_range_bits(k_ind, db, column, lo, hi, ledger=ledger,
-                         reduce_every=reduce_every)
-    ledger.recv(db.n_shares * db.n_tuples)
-    v = np.asarray(shamir.interpolate(ind))
-    ledger.user((ind.degree + 1) * db.n_tuples)
-    addresses = [int(i) for i in np.nonzero(v)[0]]
-    rows = fetch_by_addresses(k_fetch, db, addresses, ledger=ledger,
-                              padded_rows=padded_rows, backend=backend,
-                              impl=impl)
+    addresses = rounds.range_rounds(be, db, [
+        rounds.RangeJob(column, lo, hi, k_ind, ledger,
+                        reduce_every=reduce_every, want_addresses=True)])[0]
+    rows = rounds.fetch_round(be, db, [
+        rounds.FetchJob(k_fetch, addresses, ledger, padded_rows)])[0]
     return rows, addresses, ledger

@@ -27,6 +27,25 @@ tree engine, which loops):
   * :func:`fetch_round`     — §3.2.2 Phase 2 oblivious fetch: the B padded
     one-hot matrices are stacked row-wise and multiplied against the
     relation in one fused ``ss_matmul``.
+  * :func:`range_phase` / :func:`range_rounds` — §3.4 Alg 5/6 over B range
+    predicates: the B queries' endpoint/column bit-vectors (×2 directions,
+    Eq. 2) stack into ONE ``(c, 2B, n, t)`` SS-SUB carry chain — one
+    backend ``ripple_carry`` dispatch per bit-round, one degree-reduction
+    re-share per ``reduce_every`` boundary *for the whole batch*.
+  * :func:`join_match_round` / :func:`join_emit_round` — §3.3.1 PK/FK joins
+    as rounds: the per-join match matrices become :class:`FetchEntry` rows
+    of the shared fetch matmul (cross-group fusion), the re-randomized
+    outputs interpolate in one fused user step per degree class.
+  * :func:`equijoin_rounds` — §3.3.2 over B equijoin jobs: one fused
+    column-open interpolation, all layer-1 X-side fetch matrices in one
+    ``ss_matmul`` (Y-side fused per distinct right relation), and the
+    layer-2 pair interpolations fused per degree class.
+  * :func:`fetch_fusion`    — the cross-group fetch: every matrix that
+    multiplies the relation this round (one_round / tree / range one-hots
+    *and* join match matrices; a zero-match one_round/range query
+    contributes a 0-row block) stacks into a single ``ss_matmul``
+    dispatch. Tree queries that learned ℓ=0 in the count phase skip the
+    fetch entirely, exactly as a solo run does.
 
 Ledgers record *protocol* cost (each query's own blocks/rows, Table 1
 units), never the padding the fused dispatch adds — padding is an execution
@@ -35,7 +54,7 @@ artifact of batching, invisible to the user↔cloud transcript.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +65,7 @@ from ..costs import CostLedger
 from ..engine import SecretSharedDB
 from ..partition import split_bounds
 from ..shamir import Shares
+from ._common import match_matrix_shares
 
 
 # ---------------------------------------------------------------------------
@@ -77,6 +97,59 @@ class FetchJob:
     padded_rows: Optional[int] = None
 
 
+@dataclasses.dataclass
+class RangeJob:
+    """One query's slot in the batched §3.4 ripple (Algorithms 5/6).
+
+    ``want_addresses`` distinguishes RangeSelect (the user interpolates all
+    n indicator bits and learns addresses) from RangeCount (only the summed
+    count travels back). Jobs fused into one :func:`range_phase` must share
+    the column bit-width and ``reduce_every`` (the carry chains march in
+    lockstep).
+    """
+    column: int
+    lo: int
+    hi: int
+    key: jax.Array
+    ledger: CostLedger
+    reduce_every: int = 0
+    want_addresses: bool = False
+
+
+@dataclasses.dataclass
+class JoinJob:
+    """One PK/FK join's slot in the batched §3.3.1 round structure."""
+    right: SecretSharedDB
+    col_x: int
+    col_y: int
+    key: Optional[jax.Array]
+    ledger: CostLedger
+
+
+@dataclasses.dataclass
+class EquiJob:
+    """One general-equijoin's slot in the batched §3.3.2 round structure."""
+    right: SecretSharedDB
+    col_x: int
+    col_y: int
+    key: jax.Array
+    ledger: CostLedger
+    padded_values: int = 0
+
+
+@dataclasses.dataclass
+class FetchEntry:
+    """One raw row-block of the cross-group fused fetch matmul.
+
+    ``values`` are raw share rows (c, r, n) multiplying the relation;
+    ``degree`` is their sharing degree (one-hot fetch rows are base-degree,
+    join match-matrix rows carry the AA product degree). The fused dispatch
+    is degree-agnostic — degrees matter only when the output is split back.
+    """
+    values: jax.Array
+    degree: int
+
+
 # ---------------------------------------------------------------------------
 # shared user/cloud helpers
 # ---------------------------------------------------------------------------
@@ -86,6 +159,51 @@ def _batched_matcher(be):
     keeps core below ``repro.api`` in the layering)."""
     from ...api import backends as _registry
     return _registry.batched_matcher(be)
+
+
+def _ripple_stepper(be):
+    """Backend's fused SS-SUB bit step (deferred import, as above)."""
+    from ...api import backends as _registry
+    return _registry.ripple_stepper(be)
+
+
+def _share_one_hot(key: jax.Array, db: SecretSharedDB,
+                   addresses: Sequence[int],
+                   n_rows: Optional[int] = None) -> Shares:
+    """User step: an ℓ'×n one-hot fetch matrix shared at base degree.
+
+    ``n_rows`` ≥ ℓ pads with all-zero rows (they fetch nothing) — the
+    §3.2.2 output-size defence. Every fetch matrix in the suite (selection,
+    range, equijoin layer 1) is built here so its sharing stays uniform.
+    """
+    n = db.n_tuples
+    rows = len(addresses) if n_rows is None else max(n_rows, len(addresses))
+    m_host = np.zeros((rows, n), dtype=np.uint32)
+    for r, a in enumerate(addresses):
+        m_host[r, a] = 1
+    return encoding.share_encoded(key, m_host, n_shares=db.n_shares,
+                                  degree=db.base_degree)
+
+
+def _fused_interpolate(parts: Sequence[Shares]) -> List[np.ndarray]:
+    """User step: interpolate many share tensors with ONE Lagrange pass per
+    (degree, cloud-count) class — the fused batch equivalent of calling
+    ``shamir.interpolate`` once per tensor. Returns decoded numpy arrays in
+    input order."""
+    out: List[Optional[np.ndarray]] = [None] * len(parts)
+    by_class: Dict[Tuple[int, int], List[int]] = {}
+    for i, s in enumerate(parts):
+        by_class.setdefault((s.degree, s.n_shares), []).append(i)
+    for (deg, c), idxs in by_class.items():
+        flats = [parts[i].values.reshape(c, -1) for i in idxs]
+        vals = np.asarray(shamir.interpolate(
+            Shares(jnp.concatenate(flats, axis=1), deg)))
+        off = 0
+        for i in idxs:
+            size = int(np.prod(parts[i].shape, dtype=np.int64))
+            out[i] = vals[off:off + size].reshape(parts[i].shape)
+            off += size
+    return out
 
 
 def _share_patterns(db: SecretSharedDB, jobs: Sequence[MatchJob]) -> Shares:
@@ -112,6 +230,19 @@ def _stack_columns(db: SecretSharedDB, columns: Sequence[int]) -> Shares:
     else:
         stacked = jnp.moveaxis(rel[:, :, np.asarray(columns)], 2, 1)
     return Shares(stacked, db.relation.degree)
+
+
+def _stack_numeric(db: SecretSharedDB, columns: Sequence[int]) -> Shares:
+    """Cloud-local view of binary-form columns -> (c, B, n, t_bits)."""
+    first = db.numeric[columns[0]]
+    if len(set(columns)) == 1:
+        one = first.values                          # (c, n, t)
+        stacked = jnp.broadcast_to(one[:, None],
+                                   (one.shape[0], len(columns))
+                                   + one.shape[1:])
+    else:
+        stacked = jnp.stack([db.numeric[c].values for c in columns], axis=1)
+    return Shares(stacked, first.degree)
 
 
 def _match_stack(be, cols: Shares, pats: Shares) -> Shares:
@@ -336,21 +467,142 @@ def tree_rounds(be, db: SecretSharedDB, jobs: Sequence[TreeJob]
 
 
 # ---------------------------------------------------------------------------
-# §3.2.2 Phase 2 — fused oblivious fetch for the whole batch
+# §3.4 — batched range predicates (Algorithms 5 & 6)
 # ---------------------------------------------------------------------------
 
-def fetch_round(be, db: SecretSharedDB, jobs: Sequence[FetchJob]
-                ) -> List[List[List[str]]]:
-    """Fetch every job's tuples with ONE share-space matmul.
+def range_phase(be, db: SecretSharedDB, jobs: Sequence[RangeJob]) -> Shares:
+    """Secret-shared in-range indicator for B range predicates: (c, B, n).
 
-    Each query's ℓ'×n one-hot matrix (``padded_rows`` ≥ ℓ hides the true
-    result size, §3.2.2 leakage discussion) is shared under that query's own
-    key; the B matrices are stacked row-wise so the cloud performs a single
-    (Σℓ'_b × n) @ (n × mWA) fused fetch, then the user interpolates all
-    fetched tuples at once and splits them back per query.
+    The fused SS-SUB ripple (Algorithm 6): each query contributes two
+    subtractions — ``sign(x − a)`` and ``sign(b − x)`` (Eq. 2) — so the B
+    queries' bit-vectors stack into one ``(c, 2B, n, t_bits)`` carry chain.
+    Each bit position is ONE backend ``ripple_carry`` dispatch for the whole
+    batch; each ``reduce_every`` boundary is ONE degree-reduction re-share
+    of the whole stacked carry. Ledgers record every query's own protocol
+    cost exactly as a solo run (a reduction is two logical rounds per query:
+    one per subtraction, as in the sequential transcript).
+    """
+    t_bits_all = []
+    for j in jobs:
+        if j.column not in db.numeric:
+            raise ValueError(
+                f"column {j.column} was not outsourced in binary form")
+        t_bits_all.append(db.numeric_bits[j.column])
+    if len(set(t_bits_all)) != 1 or len({j.reduce_every for j in jobs}) != 1:
+        raise ValueError("a fused range_phase needs uniform t_bits and "
+                         "reduce_every across its jobs (group them)")
+    t_bits = t_bits_all[0]
+    reduce_every = jobs[0].reduce_every
+    b = len(jobs)
+    n = db.n_tuples
+    c = db.n_shares
+
+    # -- user round: share both endpoints of every job --------------------
+    a_vals, b_vals = [], []
+    red_key = None
+    for j in jobs:
+        k_a, k_b, k_s1, _ = jax.random.split(j.key, 4)
+        if red_key is None:
+            red_key = k_s1              # seeds the fused reduction chain
+        a_vals.append(encoding.share_encoded(
+            k_a, encoding.encode_number_bits(j.lo, t_bits),
+            n_shares=c, degree=db.base_degree).values)
+        b_vals.append(encoding.share_encoded(
+            k_b, encoding.encode_number_bits(j.hi, t_bits),
+            n_shares=c, degree=db.base_degree).values)
+        j.ledger.round()
+        j.ledger.send(c * 2 * t_bits)
+
+    x = _stack_numeric(db, [j.column for j in jobs])       # (c, B, n, t)
+    d = db.base_degree
+    assert x.degree == d, "binary-form columns share the base degree"
+    a_all = jnp.stack(a_vals, axis=1)[:, :, None, :]       # (c, B, 1, t)
+    b_all = jnp.stack(b_vals, axis=1)[:, :, None, :]
+    shape = x.values.shape
+    # rows [0, B) ripple sign(x − a): SS-SUB(A=a, B=x); rows [B, 2B) ripple
+    # sign(b − x): SS-SUB(A=x, B=b) — one chain for both directions.
+    lhs = jnp.concatenate([jnp.broadcast_to(a_all, shape), x.values], axis=1)
+    rhs = jnp.concatenate([x.values, jnp.broadcast_to(b_all, shape)], axis=1)
+
+    step = _ripple_stepper(be)
+    rb, carry = step(lhs[..., 0], rhs[..., 0], None)
+    # the result bit leaves each step at the carry's (post-step) degree
+    carry_deg = 2 * d
+    for i in range(1, t_bits):
+        if reduce_every and carry_deg > 1 and i % reduce_every == 0:
+            red_key, sub = jax.random.split(red_key)
+            carry = shamir.reduce_degree(sub, Shares(carry, carry_deg),
+                                         target_degree=1).values
+            carry_deg = 1
+            for j in jobs:
+                j.ledger.round(2)
+                j.ledger.send(2 * c * c)
+        rb, carry = step(lhs[..., i], rhs[..., i], carry)
+        carry_deg = carry_deg + 2 * d
+    for j in jobs:
+        j.ledger.cloud(2 * n * t_bits)
+
+    # Eq. 2: in-range ⟺ 1 − sign(x−a) − sign(b−x) = 1
+    ind = field.sub(field.sub(jnp.ones((c, b, n), field.DTYPE),
+                              rb[:, :b]), rb[:, b:])
+    return Shares(ind, carry_deg)
+
+
+def range_rounds(be, db: SecretSharedDB, jobs: Sequence[RangeJob]
+                 ) -> List[Union[int, List[int]]]:
+    """COUNT / address discovery for B range predicates, rounds fused.
+
+    Returns, aligned with ``jobs``: the count (``want_addresses=False``) or
+    the sorted satisfying addresses (``want_addresses=True``, ready for the
+    shared :func:`fetch_fusion` matmul). One interpolation serves all count
+    jobs and one serves all address jobs.
     """
     if not jobs:
         return []
+    ind = range_phase(be, db, jobs)
+    c, n = db.n_shares, db.n_tuples
+    out: List[Union[int, List[int], None]] = [None] * len(jobs)
+    cnt_idx = [i for i, j in enumerate(jobs) if not j.want_addresses]
+    sel_idx = [i for i, j in enumerate(jobs) if j.want_addresses]
+    if cnt_idx:
+        totals = Shares(field.sum_(ind.values[:, cnt_idx], axis=2),
+                        ind.degree)                         # (c, Bc)
+        vals = np.asarray(shamir.interpolate(totals))
+        for i, v in zip(cnt_idx, vals):
+            jobs[i].ledger.recv(c)
+            jobs[i].ledger.user(ind.degree + 1)
+            out[i] = int(v)
+    if sel_idx:
+        bits = Shares(ind.values[:, sel_idx], ind.degree)   # (c, Bs, n)
+        vals = np.asarray(shamir.interpolate(bits))
+        for k, i in enumerate(sel_idx):
+            jobs[i].ledger.recv(c * n)
+            jobs[i].ledger.user((ind.degree + 1) * n)
+            out[i] = [int(t) for t in np.nonzero(vals[k])[0]]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# §3.2.2 Phase 2 — fused oblivious fetch for the whole batch
+# ---------------------------------------------------------------------------
+
+def fetch_fusion(be, db: SecretSharedDB, jobs: Sequence[FetchJob],
+                 extras: Sequence[FetchEntry] = ()
+                 ) -> Tuple[List[List[List[str]]], List[Shares]]:
+    """The cross-group fetch: ONE share-space matmul for everything.
+
+    Each one-hot job's ℓ'×n matrix (``padded_rows`` ≥ ℓ hides the true
+    result size, §3.2.2 leakage discussion) is shared under that query's own
+    key; all job matrices — a zero-match, unpadded job contributes a 0-row
+    block — AND every extra row-block (e.g. a PK/FK join's transposed
+    match matrix) are stacked
+    row-wise so the cloud performs a single (ΣR × n) @ (n × mWA) fused
+    fetch. The user then interpolates all job tuples in one pass and splits
+    them back per query; extras come back *still in share form* — their
+    protocol (re-randomization, layer-2 hand-off, …) continues outside.
+    """
+    if not jobs and not extras:
+        return [], []
     codec = db.codec
     n = db.n_tuples
     ellps = []
@@ -359,31 +611,251 @@ def fetch_round(be, db: SecretSharedDB, jobs: Sequence[FetchJob]
         ell = len(j.addresses)
         ellp = max(j.padded_rows or ell, ell)
         ellps.append(ellp)
-        m_host = np.zeros((ellp, n), dtype=np.uint32)
-        for r, a in enumerate(j.addresses):
-            m_host[r, a] = 1
-        m_sh = encoding.share_encoded(j.key, m_host, n_shares=db.n_shares,
-                                      degree=db.base_degree)   # (c, ℓ', n)
+        m_sh = _share_one_hot(j.key, db, j.addresses, ellp)     # (c, ℓ', n)
         mats.append(m_sh.values)
-    stacked = jnp.concatenate(mats, axis=1)                    # (c, R, n)
+    stacked = jnp.concatenate(mats + [e.values for e in extras], axis=1)
     rel = db.relation.values                                   # (c,n,m,W,A)
     c, _, m, w, a = rel.shape
     rel_flat = rel.reshape(c, n, m * w * a)
     fetched_flat = be.ss_matmul(stacked, rel_flat)             # ONE dispatch
-    total = stacked.shape[1]
-    fetched = Shares(fetched_flat.reshape(c, total, m, w, a),
-                     db.base_degree + db.relation.degree)
-    out = np.asarray(shamir.interpolate(fetched))              # (R, m, W, A)
 
     results: List[List[List[str]]] = []
-    off = 0
-    for j, ellp in zip(jobs, ellps):
-        ell = len(j.addresses)
+    job_rows = sum(ellps)
+    if jobs:
+        fetched = Shares(
+            fetched_flat[:, :job_rows].reshape(c, job_rows, m, w, a),
+            db.base_degree + db.relation.degree)
+        out = np.asarray(shamir.interpolate(fetched))          # (R, m, W, A)
+        off = 0
+        for j, ellp in zip(jobs, ellps):
+            ell = len(j.addresses)
+            j.ledger.round()
+            j.ledger.send(db.n_shares * ellp * n)
+            j.ledger.cloud(ellp * n * m * w * a)
+            j.ledger.recv(db.n_shares * ellp * m * w * a)
+            j.ledger.user((fetched.degree + 1) * ellp * m * w)
+            results.append([codec.decode_row(out[off + r])
+                            for r in range(ell)])
+            off += ellp
+
+    extra_out: List[Shares] = []
+    off = job_rows
+    for e in extras:
+        r = e.values.shape[1]
+        extra_out.append(Shares(
+            fetched_flat[:, off:off + r].reshape(c, r, m, w, a),
+            e.degree + db.relation.degree))
+        off += r
+    return results, extra_out
+
+
+def fetch_round(be, db: SecretSharedDB, jobs: Sequence[FetchJob]
+                ) -> List[List[List[str]]]:
+    """Fetch every job's tuples with ONE share-space matmul (the one-hot
+    jobs-only view of :func:`fetch_fusion`)."""
+    return fetch_fusion(be, db, jobs)[0]
+
+
+# ---------------------------------------------------------------------------
+# §3.3.1 — PK/FK joins as rounds (match matrix -> shared fetch -> emit)
+# ---------------------------------------------------------------------------
+
+def rerandomize(key: jax.Array, s: Shares) -> Shares:
+    """Add a fresh sharing of zero: same secret, unlinkable share values."""
+    zero = shamir.share(key, jnp.zeros(s.shape, dtype=s.values.dtype),
+                        n_shares=s.n_shares, degree=s.degree)
+    return s + zero
+
+
+def join_match_round(be, db: SecretSharedDB, jobs: Sequence[JoinJob]
+                     ) -> List[FetchEntry]:
+    """Cloud step 1 of B PK/FK joins: per-join match matrices, transposed
+    into :class:`FetchEntry` rows for the shared :func:`fetch_fusion`
+    matmul (reducer j's Σ_i M[i,j]·X_i is a row-block of the same fused
+    fetch the selection groups ride)."""
+    entries: List[FetchEntry] = []
+    codec = db.codec
+    w_len, a_len = codec.word_length, codec.alphabet_size
+    for j in jobs:
+        bx = db.column(j.col_x)                      # (c, nx, W, A)
+        by = j.right.column(j.col_y)                 # (c, ny, W, A)
+        M = match_matrix_shares(be, bx, by)          # (c, nx, ny)
+        j.ledger.cloud(db.n_tuples * j.right.n_tuples * w_len * a_len)
+        entries.append(FetchEntry(jnp.swapaxes(M.values, -1, -2), M.degree))
+    return entries
+
+
+def join_emit_round(db: SecretSharedDB, jobs: Sequence[JoinJob],
+                    fetched: Sequence[Shares]) -> List[List[List[str]]]:
+    """User/cloud step 2 of B PK/FK joins: re-randomize the fetched parent
+    halves, ship both halves, interpolate ALL jobs' tuples in one fused user
+    step per degree class, decode and drop dangling children."""
+    codec = db.codec
+    w_len, a_len = codec.word_length, codec.alphabet_size
+    c, nx, mx = db.n_shares, db.n_tuples, db.n_attrs
+    xs_parts: List[Shares] = []
+    ys_parts: List[Shares] = []
+    for j, fx in zip(jobs, fetched):
+        ny, my = j.right.n_tuples, j.right.n_attrs
+        j.ledger.cloud(nx * ny * mx * w_len)
+        y_part = j.right.relation                    # (c, ny, mY, W, A)
+        if j.key is not None:
+            kx, ky = jax.random.split(j.key)
+            fx = rerandomize(kx, fx)
+            y_part = rerandomize(ky, y_part)
+            j.ledger.cloud(ny * (mx + my) * w_len * a_len)
         j.ledger.round()
-        j.ledger.send(db.n_shares * ellp * n)
-        j.ledger.cloud(ellp * n * m * w * a)
-        j.ledger.recv(db.n_shares * ellp * m * w * a)
-        j.ledger.user((fetched.degree + 1) * ellp * m * w)
-        results.append([codec.decode_row(out[off + r]) for r in range(ell)])
-        off += ellp
+        j.ledger.recv(c * ny * (mx + my) * w_len * a_len)
+        xs_parts.append(fx)
+        ys_parts.append(y_part)
+    xs_all = _fused_interpolate(xs_parts)
+    ys_all = _fused_interpolate(ys_parts)
+
+    results: List[List[List[str]]] = []
+    for j, fx, yp, xs, ys in zip(jobs, xs_parts, ys_parts, xs_all, ys_all):
+        ny, my = j.right.n_tuples, j.right.n_attrs
+        j.ledger.user((fx.degree + 1) * ny * mx * w_len
+                      + (yp.degree + 1) * ny * my * w_len)
+        rows = []
+        for r in range(ny):
+            x_row = codec.decode_row(xs[r])
+            if all(v == "" for v in x_row):
+                continue                  # dangling child (no parent)
+            y_row = codec.decode_row(ys[r])
+            rows.append(x_row + [v for k, v in enumerate(y_row)
+                                 if k != j.col_y])
+        results.append(rows)
     return results
+
+
+# ---------------------------------------------------------------------------
+# §3.3.2 — general equijoins as rounds (two cloud layers, fused per phase)
+# ---------------------------------------------------------------------------
+
+def _one_hot_fetch_shares(key: jax.Array, db: SecretSharedDB,
+                          addresses: Sequence[int], ledger: CostLedger
+                          ) -> Shares:
+    """Layer-1 fetch matrix (kept in share form); ledger records the send
+    and the cloud work exactly as a solo oblivious fetch."""
+    n = db.n_tuples
+    m_sh = _share_one_hot(key, db, addresses)
+    ledger.send(db.n_shares * len(addresses) * n)
+    _, _, m, w, a = db.relation.values.shape
+    ledger.cloud(len(addresses) * n * m * w * a)
+    return m_sh
+
+
+def equijoin_rounds(be, db: SecretSharedDB, jobs: Sequence[EquiJob]
+                    ) -> List[List[List[str]]]:
+    """§3.3.2 equijoins over a batch, every phase fused.
+
+    Phase 1 (one round): both join columns of every job travel to the user;
+    ONE interpolation pass per degree class opens them all. Phase 2: every
+    (job, common-value) pair — including the ``padded_values`` fake jobs
+    that hide k — builds its two layer-1 one-hot matrices; all X-side
+    matrices multiply the client relation in ONE ``ss_matmul``, Y-side
+    matrices fuse per distinct right relation. Phase 3: layer 2 emits the
+    ℓx×ℓy concatenations; the user interpolates all real pairs in one fused
+    pass per degree class. Ledgers stay bit-identical to the sequential
+    per-value transcript (Thm 6's 2k rounds each)."""
+    if not jobs:
+        return []
+    codec = db.codec
+    w_len, a_len = codec.word_length, codec.alphabet_size
+    c, nx, mx = db.n_shares, db.n_tuples, db.n_attrs
+
+    # -- phase 1: fused column open ------------------------------------
+    col_parts: List[Shares] = []
+    for j in jobs:
+        bx = db.column(j.col_x)
+        by = j.right.column(j.col_y)
+        j.ledger.round()
+        j.ledger.recv(c * nx * w_len * a_len
+                      + j.right.n_shares * j.right.n_tuples * w_len * a_len)
+        col_parts += [bx, by]
+    opened = _fused_interpolate(col_parts)
+    val_lists: List[Tuple[List[str], List[str]]] = []
+    for i, j in enumerate(jobs):
+        bx, by = col_parts[2 * i], col_parts[2 * i + 1]
+        x_vals = [codec.decode_word(v) for v in opened[2 * i]]
+        y_vals = [codec.decode_word(v) for v in opened[2 * i + 1]]
+        j.ledger.user((bx.degree + 1) * nx * w_len
+                      + (by.degree + 1) * j.right.n_tuples * w_len)
+        val_lists.append((x_vals, y_vals))
+
+    # -- phase 2: all layer-1 fetch matrices, X side in ONE matmul -------
+    specs = []          # (job, addr_x, addr_y, real, x_mat, y_mat)
+    for j, (x_vals, y_vals) in zip(jobs, val_lists):
+        common = sorted(set(x_vals) & set(y_vals))
+        key = j.key
+        for idx in range(len(common) + j.padded_values):
+            key, kx, ky = jax.random.split(key, 3)
+            real = idx < len(common)
+            if real:
+                v = common[idx]
+                addr_x = [i for i, t in enumerate(x_vals) if t == v]
+                addr_y = [i for i, t in enumerate(y_vals) if t == v]
+            else:   # fake job: all-zero matrices, same traffic (hides k)
+                addr_x, addr_y = [0], [0]
+            j.ledger.round(2)       # Thm 6: two rounds per (fake) value
+            xm = _one_hot_fetch_shares(kx, db, addr_x, j.ledger)
+            ym = _one_hot_fetch_shares(ky, j.right, addr_y, j.ledger)
+            specs.append((j, addr_x, addr_y, real, xm, ym))
+
+    if not specs:       # every job had zero common values and no padding
+        return [[] for _ in jobs]
+    rel_x_flat = db.relation.values.reshape(c, nx, -1)
+    x_stack = jnp.concatenate([s[4].values for s in specs], axis=1)
+    x_fetched = be.ss_matmul(x_stack, rel_x_flat)    # ONE X-side dispatch
+    y_by_right: Dict[int, List[int]] = {}
+    for i, s in enumerate(specs):
+        y_by_right.setdefault(id(s[0].right), []).append(i)
+    y_fetched: Dict[int, jax.Array] = {}
+    for _, idxs in y_by_right.items():
+        right = specs[idxs[0]][0].right
+        ny = right.n_tuples
+        y_stack = jnp.concatenate([specs[i][5].values for i in idxs], axis=1)
+        out = be.ss_matmul(y_stack, right.relation.values.reshape(
+            right.n_shares, ny, -1))                 # one per right relation
+        off = 0
+        for i in idxs:
+            rows_i = specs[i][5].values.shape[1]
+            y_fetched[i] = out[:, off:off + rows_i]
+            off += rows_i
+
+    # -- phase 3: layer-2 pairing; fused final interpolation -------------
+    xs_parts, ys_parts, metas = [], [], []
+    x_off = 0
+    for i, (j, addr_x, addr_y, real, xm, ym) in enumerate(specs):
+        lx, ly = len(addr_x), len(addr_y)
+        my = j.right.n_attrs
+        _, _, mw, ww, aw = db.relation.values.shape
+        xp = Shares(x_fetched[:, x_off:x_off + lx].reshape(c, lx, mw, ww, aw),
+                    xm.degree + db.relation.degree)
+        x_off += lx
+        ry = j.right.relation
+        _, _, mwy, wwy, awy = ry.values.shape
+        yp = Shares(y_fetched[i].reshape(j.right.n_shares, ly, mwy, wwy,
+                                         awy), ym.degree + ry.degree)
+        pairs_x = Shares(jnp.repeat(xp.values, ly, axis=1), xp.degree)
+        pairs_y = Shares(jnp.tile(yp.values, (1, lx, 1, 1, 1)), yp.degree)
+        j.ledger.cloud(lx * ly * (mx + my) * w_len * a_len)
+        if not real:
+            continue                # fake-job output discarded at user side
+        j.ledger.recv(c * lx * ly * (mx + my) * w_len * a_len)
+        j.ledger.user((pairs_x.degree + 1) * lx * ly * mx * w_len
+                      + (pairs_y.degree + 1) * lx * ly * my * w_len)
+        xs_parts.append(pairs_x)
+        ys_parts.append(pairs_y)
+        metas.append((j, lx * ly))
+    xs_all = _fused_interpolate(xs_parts)
+    ys_all = _fused_interpolate(ys_parts)
+
+    by_job: Dict[int, List[List[str]]] = {id(j): [] for j in jobs}
+    for (j, n_pairs), xs, ys in zip(metas, xs_all, ys_all):
+        for r in range(n_pairs):
+            x_row = codec.decode_row(xs[r])
+            y_row = codec.decode_row(ys[r])
+            by_job[id(j)].append(
+                x_row + [v for k, v in enumerate(y_row) if k != j.col_y])
+    return [by_job[id(j)] for j in jobs]

@@ -28,13 +28,12 @@ from jax.experimental import pallas as pl
 from .ss_matmul import _addmod, _mulmod
 
 
-def _aa_kernel(col_ref, pat_ref, o_ref):
-    col = col_ref[...]                       # (bn, W, A) uint32
-    pat = pat_ref[...]                       # (1, W, A)
+def _aa_body(col, pat):
+    """The fused automaton: col (bn, W, A), pat (W, A) -> (bn,) shares."""
     w = col.shape[1]
 
     def inner(j, _):
-        prod = _mulmod(col[:, j, :], pat[0, j, :][None, :])   # (bn, A)
+        prod = _mulmod(col[:, j, :], pat[j, :][None, :])      # (bn, A)
         # modular tree-reduce over the alphabet axis
         def red(k, acc):
             return _addmod(acc, prod[:, k])
@@ -43,7 +42,16 @@ def _aa_kernel(col_ref, pat_ref, o_ref):
     acc = inner(0, None)                      # v_0
     def chain(j, acc):
         return _mulmod(acc, inner(j, None))   # N_{j+1} = N_j · v_j
-    o_ref[...] = jax.lax.fori_loop(1, w, chain, acc)
+    return jax.lax.fori_loop(1, w, chain, acc)
+
+
+def _aa_kernel(col_ref, pat_ref, o_ref):
+    o_ref[...] = _aa_body(col_ref[...], pat_ref[0])
+
+
+def _aa_batch_kernel(col_ref, pat_ref, o_ref):
+    # one (b, i) grid cell: batch row b's pattern against its i-th n-tile
+    o_ref[0, :] = _aa_body(col_ref[0], pat_ref[0])
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
@@ -67,6 +75,39 @@ def aa_match_pallas(col: jax.Array, pat: jax.Array, *, bn: int = 512,
         interpret=interpret,
     )(col_p, pat[None])
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def aa_match_batch_pallas(col: jax.Array, pat: jax.Array, *, bn: int = 512,
+                          interpret: bool = True) -> jax.Array:
+    """Stacked-predicate AA match as a true 2-D grid kernel.
+
+    col: (B, n, W, A) uint32 shares; pat: (B, W, A). Returns (B, n).
+
+    Grid is (B, n-tiles) with the tile axis innermost, so while row b's
+    tiles stream through, its (W, A) pattern block keeps the same index —
+    Pallas leaves it resident in VMEM instead of re-fetching it per tile
+    (the win over ``vmap(vmap(aa_match_pallas))``, which launches one
+    kernel per (cloud, batch-row) cell and re-stages the pattern each
+    time).
+    """
+    b, n, w, a = col.shape
+    assert pat.shape == (b, w, a), (pat.shape, (b, w, a))
+    bn = min(bn, _round_up(n, 8))
+    n_pad = _round_up(n, bn)
+    col_p = jnp.pad(col, ((0, 0), (0, n_pad - n), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _aa_batch_kernel,
+        grid=(b, n_pad // bn),
+        in_specs=[
+            pl.BlockSpec((1, bn, w, a), lambda bi, i: (bi, i, 0, 0)),
+            pl.BlockSpec((1, w, a), lambda bi, i: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda bi, i: (bi, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad), jnp.uint32),
+        interpret=interpret,
+    )(col_p, pat)
+    return out[:, :n]
 
 
 def _round_up(x: int, mult: int) -> int:

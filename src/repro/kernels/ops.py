@@ -7,11 +7,13 @@ everywhere except a real TPU backend), and the join-oriented composite
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 
-from .aa_match import aa_match_pallas
+from .aa_match import aa_match_batch_pallas, aa_match_pallas
+from .ripple import ripple_carry_pallas
 from .ss_matmul import ss_matmul_pallas
 
 
@@ -46,15 +48,72 @@ def aa_match(col: jax.Array, pat: jax.Array) -> jax.Array:
 
 
 @jax.jit
-def aa_match_batch(col: jax.Array, pat: jax.Array) -> jax.Array:
-    """Stacked-predicate AA match: col (c, B, n, W, A), pat (c, B, W, A)
-    -> (c, B, n). One kernel launch per (c, B) cell via nested vmap — the
-    batched query engine's single dispatch per protocol round."""
+def aa_match_batch_vmap(col: jax.Array, pat: jax.Array) -> jax.Array:
+    """Nested-vmap fallback for the stacked-predicate AA match: one kernel
+    launch per (c, B) cell. Kept as the safety net (and the parity oracle)
+    for the 2-D grid kernel below."""
     interp = _interpret()
     fn = functools.partial(aa_match_pallas, interpret=interp)
     if col.ndim != 5:
         raise ValueError(f"unsupported rank: {col.shape}")
     return jax.vmap(jax.vmap(fn))(col, pat)
+
+
+@jax.jit
+def _aa_match_batch_grid(col: jax.Array, pat: jax.Array) -> jax.Array:
+    c, b, n, w, a = col.shape
+    out = aa_match_batch_pallas(col.reshape(c * b, n, w, a),
+                                pat.reshape(c * b, w, a),
+                                interpret=_interpret())
+    return out.reshape(c, b, n)
+
+
+_GRID_KERNEL_BROKEN = False
+
+
+def aa_match_batch(col: jax.Array, pat: jax.Array) -> jax.Array:
+    """Stacked-predicate AA match: col (c, B, n, W, A), pat (c, B, W, A)
+    -> (c, B, n). The cloud and batch axes fold into ONE 2-D grid
+    ``pallas_call`` — a (c·B, n-tile) grid whose pattern tile stays
+    resident in VMEM across a row's n-tiles — so the batched query engine
+    really issues a single device dispatch per protocol round. If the grid
+    kernel fails to lower on this backend, the failure is logged once and
+    all later calls take the nested-vmap path directly (a failed jit trace
+    is not cached, so retrying every round would re-pay the trace)."""
+    global _GRID_KERNEL_BROKEN
+    if col.ndim != 5:
+        raise ValueError(f"unsupported rank: {col.shape}")
+    c, b, _, w, a = col.shape
+    if pat.shape != (c, b, w, a):   # caller bugs must propagate, not latch
+        raise ValueError(f"pattern shape {pat.shape} does not match "
+                         f"column stack {col.shape}")
+    if not _GRID_KERNEL_BROKEN:
+        try:
+            return _aa_match_batch_grid(col, pat)
+        except Exception as e:   # pragma: no cover — exotic backends only
+            _GRID_KERNEL_BROKEN = True
+            warnings.warn(f"aa_match_batch 2-D grid kernel failed to build "
+                          f"({e!r}); using the nested-vmap fallback for "
+                          f"the rest of this process", RuntimeWarning)
+    return aa_match_batch_vmap(col, pat)
+
+
+def ripple_carry(a: jax.Array, b: jax.Array, carry=None):
+    """One fused SS-SUB bit step (Alg 6) over any share-plane shape.
+
+    a, b: (...,) uint32 bit planes; carry: same shape or ``None`` for the
+    LSB step. Returns ``(rb, carry')``. Flattens to one 1-D elementwise
+    pallas dispatch regardless of how many queries are stacked."""
+    interp = _interpret()
+    shape = a.shape
+    flat_a = a.reshape(-1)
+    flat_b = b.reshape(-1)
+    init = carry is None
+    flat_c = (jnp.zeros_like(flat_a) if init
+              else carry.reshape(-1))
+    rb, co = ripple_carry_pallas(flat_a, flat_b, flat_c, init=init,
+                                 interpret=interp)
+    return rb.reshape(shape), co.reshape(shape)
 
 
 @jax.jit
@@ -80,4 +139,5 @@ def as_backend():
     ``backend="pallas"`` instead of the old ``impl=`` strings."""
     from ..api.backends import Backend  # local import to avoid cycle
     return Backend(name="pallas", aa_match=aa_match, ss_matmul=ss_matmul,
-                   match_matrix=match_matrix, aa_match_batch=aa_match_batch)
+                   match_matrix=match_matrix, aa_match_batch=aa_match_batch,
+                   ripple_carry=ripple_carry)

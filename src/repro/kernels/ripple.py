@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused SS-SUB ripple bit step (paper §3.4, Alg 6).
+
+One bit position of the two's-complement ripple subtract over secret-shared
+bit planes. For every lane (one share of one query-direction of one tuple):
+
+    aᵢ = 1 − Aᵢ                      (invert the subtrahend bit)
+    x  = aᵢ ⊕ bᵢ = aᵢ + bᵢ − 2aᵢbᵢ
+    c' = aᵢbᵢ + c·x                  (carry propagate/generate)
+    rb = x + c − 2cx                 (result bit = x ⊕ c)
+
+all mod p. The LSB step (``init=True``) instead computes the +1-absorbing
+carry ``c = OR(1 − A₀, B₀)`` and ``rb = (1 − A₀) + B₀ − 2c`` (the
+subtrahend bit is inverted there too).
+
+Six fused elementwise mod-p ops per lane — unbatched, B queries would pay B
+tiny dispatches per bit; the batched range engine stacks the whole query
+batch (both subtraction directions of Eq. 2) into one (c·2B·n) plane and
+issues this kernel ONCE per bit-round. Purely a VPU workload: same
+16-bit-limb Mersenne-31 arithmetic as ss_matmul, 1-D grid over flattened
+lanes, both outputs written in the same pass (the carry never round-trips
+to HBM between the xor/propagate sub-steps).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ss_matmul import P32, _addmod, _mulmod, _round_up
+
+
+def _submod(x: jax.Array, y: jax.Array) -> jax.Array:
+    """(x − y) mod p for x, y < p, in 32-bit lanes."""
+    return _addmod(x, jnp.where(y == 0, y, P32 - y))
+
+
+def _ripple_kernel(a_ref, b_ref, c_ref, rb_ref, co_ref, *, init: bool):
+    a = a_ref[...]
+    b = b_ref[...]
+    ai = _submod(jnp.ones_like(a), a)
+    ab = _mulmod(ai, b)
+    s = _addmod(ai, b)
+    if init:
+        carry = _submod(s, ab)
+        rb = _submod(s, _addmod(carry, carry))
+    else:
+        carry_in = c_ref[...]
+        x = _submod(s, _addmod(ab, ab))
+        cx = _mulmod(carry_in, x)
+        carry = _addmod(ab, cx)
+        rb = _submod(_addmod(x, carry_in), _addmod(cx, cx))
+    rb_ref[...] = rb
+    co_ref[...] = carry
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "init", "interpret"))
+def ripple_carry_pallas(a: jax.Array, b: jax.Array, carry: jax.Array, *,
+                        bn: int = 4096, init: bool = False,
+                        interpret: bool = True):
+    """a, b, carry: flat (N,) uint32 share planes -> (rb, carry') each (N,).
+
+    ``init=True`` runs the LSB step (``carry`` is ignored but must be
+    passed — zeros are fine — so both variants share one call signature).
+    """
+    n = a.shape[0]
+    bn = min(bn, _round_up(max(n, 1), 8))
+    n_pad = _round_up(max(n, 1), bn)
+    pad = ((0, n_pad - n),)
+    out = pl.pallas_call(
+        functools.partial(_ripple_kernel, init=init),
+        grid=(n_pad // bn,),
+        in_specs=[pl.BlockSpec((bn,), lambda i: (i,))] * 3,
+        out_specs=[pl.BlockSpec((bn,), lambda i: (i,))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((n_pad,), jnp.uint32)] * 2,
+        interpret=interpret,
+    )(jnp.pad(a, pad), jnp.pad(b, pad), jnp.pad(carry, pad))
+    return out[0][:n], out[1][:n]

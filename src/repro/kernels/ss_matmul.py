@@ -90,9 +90,11 @@ def ss_matmul_pallas(a: jax.Array, b: jax.Array, *, bm: int = 128,
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
-    bm = min(bm, _round_up(m, 8))
-    bn = min(bn, _round_up(n, 128))
-    bk = min(bk, _round_up(k, 128))
+    if m == 0 or n == 0:        # empty fetch stack / empty relation slice
+        return jnp.zeros((m, n), jnp.uint32)
+    bm = min(bm, _round_up(max(m, 1), 8))
+    bn = min(bn, _round_up(max(n, 1), 128))
+    bk = min(bk, _round_up(max(k, 1), 128))
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
     b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))

@@ -9,18 +9,23 @@ dry-run lowers for the decode_32k / long_500k cells.
 scheduler*: logical query plans (``repro.api.plans``) are enqueued with
 ``submit``; each ``pump`` drains up to ``max_batch`` waiting requests and
 hands them to ``QueryClient.run_batch``, which groups compatible strategies
-and executes every protocol round once for the whole group. Per-request
-latency (enqueue → result) and batch/throughput counters are kept in
-``ServeStats``. Per-request keys derive from the client's root key; an
-optional ``MapReduceExecutor`` fans each cloud-side map phase (including
-the fused batch dispatch) out over fault-tolerant worker splits.
+and executes every protocol round once for the whole group — including
+range traffic (one fused SS-SUB ripple per (bit-width, reduce_every)
+group) and join traffic (PK/FK match matrices ride the batch's single
+cross-group fetch ``ss_matmul``; equijoins fuse per phase), so a mixed
+live queue pays one dispatch per round, not one per request. Per-request
+latency (enqueue → result), batch/throughput counters and a per-family
+served breakdown are kept in ``ServeStats``. Per-request keys derive from
+the client's root key; an optional ``MapReduceExecutor`` fans each
+cloud-side map phase (including the fused batch dispatch) out over
+fault-tolerant worker splits.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Deque, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -94,6 +99,14 @@ class QueryRequest:
 LATENCY_WINDOW = 4096
 
 
+def plan_family(plan: Plan) -> str:
+    """Telemetry bucket for a logical plan (count/select/range_*/join)."""
+    name = type(plan).__name__
+    return {"Count": "count", "Select": "select",
+            "RangeCount": "range_count", "RangeSelect": "range_select",
+            "Join": "join"}.get(name, name.lower())
+
+
 @dataclasses.dataclass
 class ServeStats:
     """Aggregate micro-batching telemetry (reset with ``QueryServer.reset``)."""
@@ -103,6 +116,8 @@ class ServeStats:
     busy_s: float = 0.0              # wall time spent inside run_batch
     latencies_s: "Deque[float]" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+    served_by_family: Dict[str, int] = dataclasses.field(
+        default_factory=dict)       # which protocol groups the traffic hits
 
     @property
     def mean_batch_size(self) -> float:
@@ -124,7 +139,8 @@ class ServeStats:
                     mean_batch_size=self.mean_batch_size,
                     busy_s=self.busy_s, throughput_qps=self.throughput_qps,
                     p50_latency_s=self.latency_quantile(0.50),
-                    p95_latency_s=self.latency_quantile(0.95))
+                    p95_latency_s=self.latency_quantile(0.95),
+                    served_by_family=dict(self.served_by_family))
 
 
 class QueryServer:
@@ -186,6 +202,9 @@ class QueryServer:
             else:
                 r.result = res
                 self.stats.served += 1
+                fam = plan_family(r.plan)
+                self.stats.served_by_family[fam] = \
+                    self.stats.served_by_family.get(fam, 0) + 1
             r.latency_s = t1 - (r.enqueued_at or t0)
             self.stats.latencies_s.append(r.latency_s)
         self.stats.batches += 1

@@ -1,8 +1,10 @@
-"""The benchmark harness must emit a well-formed BENCH_queries.json.
+"""The benchmark harness must emit a well-formed BENCH_queries.json, and
+the protocol-cost comparator must gate on it.
 
 Runs a trimmed bench (one table section + a tiny batched sweep) through the
 real ``collect``/``main`` path and validates the schema the CI bench-smoke
-lane (and future perf-trajectory tooling) relies on.
+lane (and the cross-PR ``benchmarks/compare_bench.py`` gate) relies on,
+then exercises the comparator's regression verdicts on synthetic artifacts.
 """
 import importlib.util
 import json
@@ -10,16 +12,26 @@ import pathlib
 
 import pytest
 
-_BENCH = pathlib.Path(__file__).resolve().parent.parent / "benchmarks" \
-    / "bench_queries.py"
+_BENCHDIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
+_BENCH = _BENCHDIR / "bench_queries.py"
+_COMPARE = _BENCHDIR / "compare_bench.py"
+
+
+def _load_module(path):
+    spec = importlib.util.spec_from_file_location(path.stem, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 @pytest.fixture(scope="module")
 def bq():
-    spec = importlib.util.spec_from_file_location("bench_queries", _BENCH)
-    mod = importlib.util.module_from_spec(spec)
-    spec.loader.exec_module(mod)
-    return mod
+    return _load_module(_BENCH)
+
+
+@pytest.fixture(scope="module")
+def cb():
+    return _load_module(_COMPARE)
 
 
 def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
@@ -44,3 +56,86 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
         assert {"name", "n", "batch", "seq_us", "batch_us", "speedup",
                 "rounds", "comm_bits", "ledger_equal"} <= set(row)
         assert row["ledger_equal"] is True
+    # the tiny sweep covers all three batched families
+    names = {row["name"] for row in doc["batched"]}
+    assert {"batched_range", "batched_join_pkfk"} <= names
+
+
+# ---------------------------------------------------------------------------
+# compare_bench.py: the protocol-cost regression gate
+# ---------------------------------------------------------------------------
+
+def _doc():
+    return {
+        "schema": "bench_queries/v1", "smoke": True,
+        "results": [
+            {"bench": "bench_count", "name": "count_3.1", "n": 16,
+             "us_per_call": 10, "comm_bits": 1000, "rounds": 1,
+             "cloud_bits": 50, "user_bits": 5, "paper_claim": ""},
+            {"bench": "bench_range", "name": "range_count_3.4", "n": 16,
+             "us_per_call": 90, "comm_bits": 9000, "rounds": 13,
+             "cloud_bits": 70, "user_bits": 6, "paper_claim": ""},
+        ],
+        "batched": [
+            {"name": "batched_range", "n": 16, "batch": 4, "seq_us": 40,
+             "batch_us": 10, "speedup": 4.0, "rounds": 13,
+             "comm_bits": 9000, "ledger_equal": True},
+        ],
+    }
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_compare_bench_passes_on_identical_docs(cb, tmp_path, capsys):
+    new = _write(tmp_path, "new.json", _doc())
+    old = _write(tmp_path, "old.json", _doc())
+    assert cb.main([new, old]) == 0
+    assert "no protocol-cost regressions" in capsys.readouterr().out
+
+
+def test_compare_bench_fails_on_round_or_bit_increase(cb, tmp_path):
+    for field, delta in (("rounds", 1), ("comm_bits", 31)):
+        doc = _doc()
+        doc["results"][1][field] += delta
+        new = _write(tmp_path, f"new_{field}.json", doc)
+        old = _write(tmp_path, f"old_{field}.json", _doc())
+        assert cb.main([new, old]) == 1
+    # improvements (and wall-time noise) pass
+    doc = _doc()
+    doc["results"][1]["rounds"] -= 1
+    doc["results"][1]["us_per_call"] *= 100
+    assert cb.main([_write(tmp_path, "imp.json", doc),
+                    _write(tmp_path, "base.json", _doc())]) == 0
+
+
+def test_compare_bench_missing_and_new_configs(cb, tmp_path, capsys):
+    # dropped config: fatal unless --allow-missing
+    doc = _doc()
+    del doc["results"][1]
+    new = _write(tmp_path, "dropped.json", doc)
+    old = _write(tmp_path, "full.json", _doc())
+    assert cb.main([new, old]) == 1
+    assert cb.main([new, old, "--allow-missing"]) == 0
+    # added config: informational only
+    doc = _doc()
+    doc["results"].append(dict(doc["results"][0], name="new_query"))
+    assert cb.main([_write(tmp_path, "added.json", doc), old]) == 0
+    assert "new config" in capsys.readouterr().out
+
+
+def test_compare_bench_fails_on_broken_ledger_identity(cb, tmp_path):
+    doc = _doc()
+    doc["batched"][0]["ledger_equal"] = False
+    assert cb.main([_write(tmp_path, "bad.json", doc),
+                    _write(tmp_path, "ok.json", _doc())]) == 1
+
+
+def test_compare_bench_rejects_unknown_schema(cb, tmp_path):
+    doc = _doc()
+    doc["schema"] = "bench_queries/v0"
+    assert cb.main([_write(tmp_path, "bad.json", doc),
+                    _write(tmp_path, "ok.json", _doc())]) == 2

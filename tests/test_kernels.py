@@ -111,6 +111,74 @@ def test_aa_match_batched_clouds():
 
 
 # ---------------------------------------------------------------------------
+# stacked-predicate batch kernel: 2-D grid == nested-vmap fallback
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c,b,n,w,a", [
+    (1, 1, 1, 1, 1), (2, 3, 20, 5, 11), (3, 4, 45, 6, 17),
+    (2, 2, 513, 4, 26), (4, 1, 37, 8, 26),
+])
+def test_aa_match_batch_grid_equals_vmap(c, b, n, w, a):
+    col, pat = rand_f((c, b, n, w, a)), rand_f((c, b, w, a))
+    got = np.asarray(ops.aa_match_batch(jnp.asarray(col), jnp.asarray(pat)))
+    want = np.asarray(ops.aa_match_batch_vmap(jnp.asarray(col),
+                                              jnp.asarray(pat)))
+    assert got.shape == (c, b, n)
+    assert np.array_equal(got, want)
+
+
+def test_aa_match_batch_grid_vs_ref_oracle():
+    c, b = 2, 3
+    col, pat = rand_f((c, b, 45, 5, 11)), rand_f((c, b, 5, 11))
+    got = np.asarray(ops.aa_match_batch(jnp.asarray(col), jnp.asarray(pat)))
+    for i in range(c):
+        for j in range(b):
+            want = np.asarray(ref.aa_match(jnp.asarray(col[i, j]),
+                                           jnp.asarray(pat[i, j])))
+            assert np.array_equal(got[i, j], want)
+
+
+# ---------------------------------------------------------------------------
+# SS-SUB ripple bit step: pallas kernel == jnp reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(1,), (7,), (3, 5, 40), (2, 6, 64)])
+def test_ripple_carry_pallas_equals_jnp(shape):
+    from repro.api.backends import jnp_ripple_carry
+    a, b, carry = rand_f(shape), rand_f(shape), rand_f(shape)
+    ja, jb, jc = jnp.asarray(a), jnp.asarray(b), jnp.asarray(carry)
+    # LSB (init) step
+    rb_p, co_p = ops.ripple_carry(ja, jb, None)
+    rb_j, co_j = jnp_ripple_carry(ja, jb, None)
+    assert np.array_equal(np.asarray(rb_p), np.asarray(rb_j))
+    assert np.array_equal(np.asarray(co_p), np.asarray(co_j))
+    # propagate step
+    rb_p, co_p = ops.ripple_carry(ja, jb, jc)
+    rb_j, co_j = jnp_ripple_carry(ja, jb, jc)
+    assert np.array_equal(np.asarray(rb_p), np.asarray(rb_j))
+    assert np.array_equal(np.asarray(co_p), np.asarray(co_j))
+
+
+def test_ripple_carry_bigint_oracle():
+    """One full ripple over both kernels must equal a python-int subtract
+    sign on shares of real bit patterns (degree-0 'sharing' of the bits so
+    the share-space math IS the plaintext math)."""
+    t = 9
+    for (x, bound) in [(12, 100), (255, 13), (5, 5), (-7, 3)]:
+        xb = [(x >> i) & 1 if x >= 0 else ((x + (1 << t)) >> i) & 1
+              for i in range(t)]
+        bb = [(bound >> i) & 1 for i in range(t)]
+        a_bits = jnp.asarray(np.asarray(xb, np.uint32)[None])   # A = x
+        b_bits = jnp.asarray(np.asarray(bb, np.uint32)[None])   # B = bound
+        rb, carry = ops.ripple_carry(a_bits[..., 0], b_bits[..., 0], None)
+        for i in range(1, t):
+            rb, carry = ops.ripple_carry(a_bits[..., i], b_bits[..., i],
+                                         carry)
+        want = 1 if (bound - x) < 0 else 0      # sign bit of B − A
+        assert int(np.asarray(rb)[0]) == want, (x, bound)
+
+
+# ---------------------------------------------------------------------------
 # kernels wired into the query suite ≡ jnp implementation
 # ---------------------------------------------------------------------------
 
