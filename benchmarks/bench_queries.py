@@ -8,7 +8,11 @@ to the legacy free functions — asserted by tests/test_api.py). Strategies
 are forced where a bench targets one paper row; ``bench_planner_auto``
 reports what the cost-based planner picks; ``bench_batched_vs_sequential``
 sweeps ``QueryClient.run_batch`` against the per-query loop and asserts
-ledger equality while measuring the fusion speedup.
+ledger equality while measuring the fusion speedup;
+``bench_sharded_dataplane`` runs a mixed batch over ``ShardedRelation``
+(S ∈ {1,2,4}) and asserts the dataplane acceptance shape: bit-identical
+rows/ledgers, dispatch fan-out = steps × S over ceil(n/S)-tuple blocks,
+zero added rounds.
 
 Each table function returns rows of
   (name, n, us_per_call, comm_bits, rounds, cloud_bits, user_bits, claim)
@@ -276,6 +280,67 @@ def bench_batched_vs_sequential(*, batch_sizes: Sequence[int] = (8, 32),
     return out
 
 
+def bench_sharded_dataplane(*, n: int = 128, batch: int = 8,
+                            shard_counts: Sequence[int] = (1, 2, 4)
+                            ) -> List[dict]:
+    """The dataplane acceptance sweep: a mixed batch over ``ShardedRelation
+    (S)`` must return bit-identical rows AND equal per-query ledgers to the
+    S=1 path (sharding is execution policy, not protocol), while the
+    per-shard dispatch count scales as S blocks of ceil(n/S) tuples — and
+    the user↔cloud round count never moves.
+    """
+    import math
+
+    from repro.api import ThreadedDispatcher
+
+    rows, db = _db(n, seed=6, skew=0.25, numeric=True)
+    patterns = sorted({r[1] for r in rows})
+    child = [[rows[i % n][0], f"t{i}"] for i in range(8)]
+    db_child = outsource(jax.random.PRNGKey(8), child,
+                         column_names=["EmployeeId", "Task"], codec=CODEC,
+                         n_shares=20, degree=1)
+    plans = ([Select(Eq("FirstName", patterns[i % len(patterns)]),
+                     strategy="one_round") for i in range(batch - 3)]
+             + [RangeCount(Between("Salary", 500, 4000), reduce_every=2),
+                RangeSelect(Between("Salary", 600, 1500), reduce_every=2),
+                Join(right=db_child, on=("EmployeeId", "EmployeeId"),
+                     kind="pkfk")])
+
+    out: List[dict] = []
+    base = None
+    for s in shard_counts:
+        client = QueryClient(db, key=33)
+        pool = ThreadedDispatcher(max_workers=s) if s > 1 else None
+        plane = client.attach(shards=s, dispatcher=pool)
+        t0 = time.time()
+        res = client.run_batch(plans)
+        wall_us = (time.time() - t0) * 1e6
+        if pool is not None:
+            pool.close()
+        if base is None:
+            base = res
+        ledger_equal = all(
+            a.rows == b.rows and a.count == b.count
+            and a.addresses == b.addresses and a.ledger == b.ledger
+            for a, b in zip(base, res))
+        assert ledger_equal, f"sharded S={s} != S=1 (rows or ledgers)"
+        # every sharded cloud step fans out exactly n_shards dispatches of
+        # ceil(n/S)-tuple blocks; rounds never move with S.
+        assert plane.stats.dispatches == plane.stats.steps * plane.n_shards
+        assert plane.max_shard_rows == math.ceil(n / plane.n_shards)
+        assert res[0].ledger.rounds == base[0].ledger.rounds
+        out.append(dict(name="sharded_batch", n=n, batch=len(plans),
+                        shards=plane.n_shards,
+                        dispatches=plane.stats.dispatches,
+                        steps=plane.stats.steps,
+                        shard_rows=plane.max_shard_rows,
+                        wall_us=round(wall_us),
+                        rounds=res[0].ledger.rounds,
+                        comm_bits=res[0].ledger.communication_bits,
+                        ledger_equal=ledger_equal))
+    return out
+
+
 ALL = [bench_count, bench_select_single, bench_select_one_round,
        bench_select_tree, bench_planner_auto, bench_join, bench_range,
        bench_scaling_verification]
@@ -307,8 +372,10 @@ def collect(*, smoke: bool = False) -> dict:
     batched = bench_batched_vs_sequential(
         batch_sizes=(4, 16) if smoke else (8, 32),
         n=64 if smoke else 256)
+    sharded = bench_sharded_dataplane(n=64 if smoke else 128,
+                                      batch=6 if smoke else 8)
     return dict(schema="bench_queries/v1", smoke=smoke,
-                results=results, batched=batched)
+                results=results, batched=batched, sharded=sharded)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -328,6 +395,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         print(f"  {b['name']} B={b['batch']} n={b['n']}: "
               f"{b['seq_us']}us -> {b['batch_us']}us "
               f"({b['speedup']}x)", file=sys.stderr)
+    for s in doc["sharded"]:
+        print(f"  {s['name']} S={s['shards']} n={s['n']}: "
+              f"{s['dispatches']} dispatches over {s['steps']} steps, "
+              f"ceil(n/S)={s['shard_rows']} rows/shard, "
+              f"rounds={s['rounds']} (ledger_equal={s['ledger_equal']})",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

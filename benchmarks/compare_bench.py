@@ -1,4 +1,4 @@
-"""Protocol-cost regression gate for the BENCH_queries.json trajectory.
+"""Protocol-cost regression gate + trajectory history for BENCH_queries.json.
 
 Diffs a fresh ``BENCH_queries.json`` against a previous run's artifact (the
 CI bench-smoke lane uploads one per PR). Protocol costs — communication
@@ -13,16 +13,24 @@ Usage::
 
   PYTHONPATH=src python benchmarks/compare_bench.py NEW.json BASELINE.json
       [--allow-missing]   # dropped configs are reported but not fatal
+      [--append-history BENCH_history.json [--history-label LABEL]]
 
 New configurations (queries added since the baseline) are informational.
 A configuration present in the baseline but missing from the fresh run is
 treated as a regression unless ``--allow-missing`` is given — silently
 dropping a bench row is how cost regressions hide.
+
+``--append-history`` chains the fresh run's per-config protocol costs
+(rounds, comm_bits — the gated keys) onto a schema-versioned time series
+(``bench_history/v1``), one entry per run, so the cost trajectory across
+PRs is plottable instead of only pairwise-gated. With it, ``BASELINE.json``
+may be omitted (first run: nothing to gate, still worth recording).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -47,6 +55,13 @@ def index_results(doc: dict) -> Dict[Tuple[str, str, int], dict]:
 
 def index_batched(doc: dict) -> Dict[Tuple[str, int, int], dict]:
     return {(r["name"], r["batch"], r["n"]): r for r in doc["batched"]}
+
+
+def index_sharded(doc: dict) -> Dict[Tuple[str, int, int], dict]:
+    # "sharded" arrived after v1 baselines were already uploaded — absent
+    # means an old artifact, not a dropped section.
+    return {(r["name"], r["shards"], r["n"]): r
+            for r in doc.get("sharded", [])}
 
 
 def compare(new: dict, old: dict, *, allow_missing: bool = False
@@ -80,25 +95,118 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
               GATED_KEYS, INFO_KEYS)
     diff_rows("batched", index_batched(new), index_batched(old),
               GATED_KEYS)
+    diff_rows("sharded", index_sharded(new), index_sharded(old),
+              GATED_KEYS)
     for key, row in index_batched(new).items():
         if not row.get("ledger_equal", False):
             regressions.append(
                 f"batched {'/'.join(str(k) for k in key)}: "
                 f"batch != sequential ledger (fusion broke cost identity)")
+    for key, row in index_sharded(new).items():
+        if not row.get("ledger_equal", False):
+            regressions.append(
+                f"sharded {'/'.join(str(k) for k in key)}: "
+                f"sharded != unsharded ledger (dataplane broke the "
+                f"transcript identity)")
     return regressions, notes
+
+
+# ---------------------------------------------------------------------------
+# trajectory history (bench_history/v1)
+# ---------------------------------------------------------------------------
+
+HISTORY_SCHEMA = "bench_history/v1"
+
+
+def history_entry(doc: dict, label: str) -> dict:
+    """One run's gated protocol costs, keyed like the comparator."""
+
+    def costs(idx):
+        return {"/".join(str(k) for k in key):
+                {f: row[f] for f in GATED_KEYS}
+                for key, row in sorted(idx.items(), key=str)}
+
+    return dict(label=label, smoke=bool(doc.get("smoke")),
+                table=costs(index_results(doc)),
+                batched=costs(index_batched(doc)),
+                sharded=costs(index_sharded(doc)))
+
+
+def append_history(doc: dict, history: Optional[dict], label: str) -> dict:
+    """Chain ``doc``'s protocol costs onto the (possibly new) history."""
+    if history is None:
+        history = dict(schema=HISTORY_SCHEMA, runs=[])
+    validate_history(history)
+    history["runs"].append(history_entry(doc, label))
+    return history
+
+
+def validate_history(history: dict) -> None:
+    """Raise ValueError on a malformed history document."""
+    if history.get("schema") != HISTORY_SCHEMA:
+        raise ValueError(f"unknown history schema "
+                         f"{history.get('schema')!r}")
+    runs = history.get("runs")
+    if not isinstance(runs, list):
+        raise ValueError("history.runs must be a list")
+    for run in runs:
+        if "label" not in run:
+            raise ValueError("history run without a label")
+        for section in ("table", "batched", "sharded"):
+            for cfg, costs in run.get(section, {}).items():
+                missing = [f for f in GATED_KEYS if f not in costs]
+                if missing:
+                    raise ValueError(
+                        f"history run {run['label']!r} {section}/{cfg} "
+                        f"missing {missing}")
+
+
+def load_history(path: str) -> Optional[dict]:
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("new", help="fresh BENCH_queries.json")
-    ap.add_argument("baseline", help="previous run's BENCH_queries.json")
+    ap.add_argument("baseline", nargs="?", default=None,
+                    help="previous run's BENCH_queries.json (optional when "
+                         "only appending history)")
     ap.add_argument("--allow-missing", action="store_true",
                     help="dropped configs are notes, not regressions")
+    ap.add_argument("--append-history", metavar="PATH", default=None,
+                    help="append this run's gated costs to the "
+                         "bench_history/v1 time series at PATH "
+                         "(created if absent)")
+    ap.add_argument("--history-label", default=None,
+                    help="label for the history entry (default: "
+                         "$GITHUB_SHA or run-<N>)")
     args = ap.parse_args(argv)
+    if args.baseline is None and args.append_history is None:
+        ap.error("a BASELINE to compare against is required unless "
+                 "--append-history is given")
     try:
-        new, old = _load(args.new), _load(args.baseline)
-        regressions, notes = compare(new, old,
-                                     allow_missing=args.allow_missing)
+        new = _load(args.new)
+        regressions: List[str] = []
+        notes: List[str] = []
+        if args.baseline is not None:
+            old = _load(args.baseline)
+            regressions, notes = compare(new, old,
+                                         allow_missing=args.allow_missing)
+        if args.append_history:
+            history = load_history(args.append_history)
+            n_prev = len(history["runs"]) if history else 0
+            label = (args.history_label
+                     or os.environ.get("GITHUB_SHA", "")[:12]
+                     or f"run-{n_prev + 1}")
+            history = append_history(new, history, label)
+            validate_history(history)
+            with open(args.append_history, "w") as f:
+                json.dump(history, f, indent=2)
+            print(f"history: appended {label!r} to {args.append_history} "
+                  f"({len(history['runs'])} runs)")
     except (OSError, ValueError, KeyError) as e:
         print(f"compare_bench: cannot compare: {e}", file=sys.stderr)
         return 2
@@ -110,9 +218,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         for r in regressions:
             print(f"  REGRESSION {r}", file=sys.stderr)
         return 1
-    print(f"no protocol-cost regressions "
-          f"({len(index_results(new))} table rows, "
-          f"{len(index_batched(new))} batched rows checked)")
+    if args.baseline is not None:
+        print(f"no protocol-cost regressions "
+              f"({len(index_results(new))} table rows, "
+              f"{len(index_batched(new))} batched rows, "
+              f"{len(index_sharded(new))} sharded rows checked)")
     return 0
 
 

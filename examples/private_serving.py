@@ -74,16 +74,24 @@ def main():
     db = outsource(jax.random.PRNGKey(5), profiles,
                    column_names=["UserId", "Tier", "Requests"],
                    codec=Codec(word_length=6), n_shares=16)
-    qserver = QueryServer(db, key=11, max_batch=8)
-    queries = [QueryRequest(Count(Eq("Tier", "gold"))),
-               QueryRequest(Select(Eq("Tier", "gold")))]
-    for q in qserver.serve(queries):
+    # async mode: the scheduler thread parks submissions up to max_wait_ms
+    # to fill max_batch, and the relation is sharded along the tuple axis
+    # (bit-identical results; shard dispatches run concurrently).
+    with QueryServer(db, key=11, max_batch=8, max_wait_ms=10,
+                     shards=2) as qserver:
+        queries = [qserver.submit(QueryRequest(Count(Eq("Tier", "gold")))),
+                   qserver.submit(QueryRequest(Select(Eq("Tier", "gold"))))]
+        for q in queries:
+            q.wait()
+    for q in queries:
         print(f"plan {type(q.plan).__name__}: strategy={q.result.strategy} "
               f"count={q.result.count} ({q.latency_s:.2f}s, "
               f"{q.result.ledger.rounds} rounds)")
     st = qserver.stats
-    print(f"server: {st.served} queries in {st.batches} micro-batch(es), "
+    print(f"server: {st.served} queries in {st.batches} batch(es) "
+          f"(closed by {dict(st.closes)}), "
           f"mean batch {st.mean_batch_size:.1f}, "
+          f"p50 queue wait {st.queue_wait_quantile(0.5) * 1e3:.1f}ms, "
           f"p50 latency {st.latency_quantile(0.5):.2f}s")
 
 

@@ -16,23 +16,34 @@ paper-optimal selection strategy; backends are looked up in a registry
 The legacy free functions in ``repro.core.queries`` remain as thin
 deprecated wrappers; new code should go through this package.
 """
-from .backends import (Backend, available_backends, batched_matcher,
-                       get_backend, register_backend, ripple_stepper)
+from ..core.dataplane import (Dispatcher, ShardedRelation,
+                              ThreadedDispatcher)
+from .backends import (Backend, available_backends, batched_match_matrix,
+                       batched_matcher, get_backend, register_backend,
+                       ripple_segmenter, ripple_stepper)
 from .client import QueryClient
-from .executor import MapReduceExecutor
-from .planner import (DEFAULT_ELL, CostEstimate, DBStats,
-                      candidate_estimates, choose_select_strategy,
-                      estimate_batch_group_cost, estimate_select_cost)
+from .executor import MapReduceDispatcher, MapReduceExecutor
+from .planner import (DEFAULT_ELL, BatchExplanation, CostEstimate, DBStats,
+                      GroupEstimate, candidate_estimates,
+                      choose_select_strategy, estimate_batch_group_cost,
+                      estimate_count_cost, estimate_equijoin_cost,
+                      estimate_pkfk_cost, estimate_range_cost,
+                      estimate_select_cost, explain_batch_groups)
 from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
                     QueryResult, RangeCount, RangeSelect, Select,
                     resolve_column)
 
 __all__ = [
-    "Backend", "available_backends", "batched_matcher", "get_backend",
-    "register_backend", "ripple_stepper", "QueryClient", "MapReduceExecutor",
-    "DEFAULT_ELL", "CostEstimate", "DBStats", "candidate_estimates",
-    "choose_select_strategy", "estimate_batch_group_cost",
-    "estimate_select_cost",
+    "Backend", "available_backends", "batched_matcher",
+    "batched_match_matrix", "get_backend", "register_backend",
+    "ripple_segmenter", "ripple_stepper", "QueryClient",
+    "MapReduceDispatcher", "MapReduceExecutor",
+    "Dispatcher", "ShardedRelation", "ThreadedDispatcher",
+    "DEFAULT_ELL", "BatchExplanation", "CostEstimate", "DBStats",
+    "GroupEstimate", "candidate_estimates", "choose_select_strategy",
+    "estimate_batch_group_cost", "estimate_count_cost",
+    "estimate_equijoin_cost", "estimate_pkfk_cost", "estimate_range_cost",
+    "estimate_select_cost", "explain_batch_groups",
     "AUTO", "Between", "ColumnRef", "Count", "Eq", "Join", "Padding", "Plan",
     "QueryResult", "RangeCount", "RangeSelect", "Select", "resolve_column",
 ]

@@ -21,6 +21,19 @@ hotspots every query is built from:
                          two's-complement step), returns ``(rb, carry')``.
                          The batched range engine issues it once per
                          bit-round for the whole query batch.
+  * ``ripple_segment`` — k consecutive SS-SUB bit positions fused into one
+                         dispatch: given ``(…, n, k)`` bit planes of A and
+                         B and the incoming carry (``None`` = the chain
+                         starts at the LSB step), returns the *final*
+                         ``(rb, carry')`` after k steps. The range engine
+                         issues one segment per degree-reduction boundary
+                         (≈ t_bits/reduce_every dispatches) instead of one
+                         ``ripple_carry`` per bit.
+  * ``match_matrix_batch`` — all-pairs match over a stack of B column
+                         pairs, ``(c, B, nx, W, A) × (c, B, ny, W, A) ->
+                         (c, B, nx, ny)``: a join group's equal-size right
+                         relations become ONE dispatch, mirroring what
+                         ``aa_match_batch`` does for predicates.
 
 All operate on *raw* uint32 share arrays (cloud axis first where batched);
 polynomial-degree bookkeeping stays at the query layer. Queries resolve a
@@ -54,6 +67,8 @@ class Backend:
     match_matrix:   (c, nx, W, A), (c, ny, W, A)  -> (c, nx, ny)
     aa_match_batch: (c, B, n, W, A), (c, B, W, A) -> (c, B, n)
     ripple_carry:   (c, S, n), (c, S, n), carry|None -> (rb, carry')
+    ripple_segment: (c, S, n, k), (c, S, n, k), carry|None -> (rb, carry')
+    match_matrix_batch: (c, B, nx, W, A), (c, B, ny, W, A) -> (c, B, nx, ny)
     """
     name: str
     aa_match: _Op
@@ -61,6 +76,8 @@ class Backend:
     match_matrix: _Op
     aa_match_batch: Optional[_Op] = None
     ripple_carry: Optional[_RippleOp] = None
+    ripple_segment: Optional[_RippleOp] = None
+    match_matrix_batch: Optional[_Op] = None
 
 
 def batched_matcher(backend: Backend) -> _Op:
@@ -85,6 +102,40 @@ def ripple_stepper(backend: Backend) -> _RippleOp:
     if backend.ripple_carry is not None:
         return backend.ripple_carry
     return jnp_ripple_carry
+
+
+def ripple_segmenter(backend: Backend) -> _RippleOp:
+    """The backend's fused k-bit SS-SUB segment, or a per-bit fallback.
+
+    The fallback steps the backend's own ``ripple_carry`` once per bit
+    position — bit-identical output (the fused kernel runs the same six
+    mod-p ops per lane), just k dispatches instead of one — so third-party
+    backends keep working and counting/test backends still observe the
+    per-bit op stream.
+    """
+    if backend.ripple_segment is not None:
+        return backend.ripple_segment
+    step = ripple_stepper(backend)
+
+    def segment(a: Array, b: Array, carry: Optional[Array] = None):
+        rb = None
+        for i in range(a.shape[-1]):
+            rb, carry = step(a[..., i], b[..., i], carry)
+        return rb, carry
+
+    return segment
+
+
+def batched_match_matrix(backend: Backend) -> _Op:
+    """The backend's stacked all-pairs matcher, or a vmap fallback.
+
+    As with :func:`batched_matcher`, backends built from host-side
+    callables (the MapReduce executor wrapper) must provide the batched op
+    themselves; any traceable ``match_matrix`` gets the vmap for free.
+    """
+    if backend.match_matrix_batch is not None:
+        return backend.match_matrix_batch
+    return jax.vmap(backend.match_matrix, in_axes=1, out_axes=1)
 
 
 def _make_jnp_ripple():
@@ -118,6 +169,33 @@ def _make_jnp_ripple():
 
 
 jnp_ripple_carry: _RippleOp = _make_jnp_ripple()
+
+
+def _make_jnp_ripple_segment():
+    """Reference fused k-bit segment: the per-bit chain under ONE jit, so a
+    whole degree-reduction-free run of bits is a single device dispatch.
+    The loop body is exactly :data:`jnp_ripple_carry`'s math, hence
+    bit-identical to stepping."""
+    import functools
+
+    @functools.partial(jax.jit, static_argnames=("init",))
+    def _seg(a, b, carry, init):
+        rb = None
+        for i in range(a.shape[-1]):
+            rb, carry = jnp_ripple_carry(a[..., i], b[..., i],
+                                         None if (init and i == 0)
+                                         else carry)
+        return rb, carry
+
+    def ripple_segment(a, b, carry=None):
+        init = carry is None
+        c0 = jnp.zeros_like(a[..., 0]) if init else carry
+        return _seg(a, b, c0, init)
+
+    return ripple_segment
+
+
+jnp_ripple_segment: _RippleOp = _make_jnp_ripple_segment()
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -167,13 +245,18 @@ def _ensure_builtins() -> None:
 
     aa_match = _raw(automata.match_words)
 
+    match_matrix = _raw(automata.match_matrix)
+
     register_backend(Backend(
         "jnp",
         aa_match=aa_match,
         ss_matmul=field.matmul,
-        match_matrix=_raw(automata.match_matrix),
+        match_matrix=match_matrix,
         aa_match_batch=jax.jit(jax.vmap(aa_match, in_axes=1, out_axes=1)),
-        ripple_carry=jnp_ripple_carry))
+        ripple_carry=jnp_ripple_carry,
+        ripple_segment=jnp_ripple_segment,
+        match_matrix_batch=jax.jit(jax.vmap(match_matrix, in_axes=1,
+                                            out_axes=1))))
 
 
 def _try_register_pallas() -> bool:

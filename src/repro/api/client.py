@@ -28,6 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import jax
 
 from ..core.costs import CostLedger
+from ..core.dataplane import Dispatcher, ShardedRelation
 from ..core.engine import SecretSharedDB
 from ..core.queries import CardinalityError, rounds
 from . import planner as _planner
@@ -64,10 +65,14 @@ class QueryClient:
                      one extra protocol round is worth to this user.
     """
 
-    def __init__(self, db: SecretSharedDB, key, *,
+    def __init__(self, db: Union[SecretSharedDB, ShardedRelation], key, *,
                  backend: BackendLike = "jnp",
                  executor: Optional[MapReduceExecutor] = None,
                  round_cost_bits: int = 0):
+        self.dataplane: Optional[ShardedRelation] = None
+        if isinstance(db, ShardedRelation):
+            self.dataplane = db
+            db = db.db
         self.db = db
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
@@ -83,17 +88,175 @@ class QueryClient:
     def _next_key(self) -> jax.Array:
         return jax.random.fold_in(self._root_key, next(self._query_counter))
 
+    # -- dataplane ----------------------------------------------------------
+    def attach(self, relation: Union[SecretSharedDB, ShardedRelation,
+                                     None] = None, *,
+               shards: int = 1,
+               dispatcher: Optional[Dispatcher] = None) -> ShardedRelation:
+        """Attach (or re-shard) the serving relation as a sharded dataplane.
+
+        Every cloud step of every subsequent query fans out as one dispatch
+        per tuple-axis shard, executed by ``dispatcher`` (serial by
+        default; pass a ``ThreadedDispatcher`` for concurrent shards or
+        ``MapReduceExecutor.dispatcher()`` for fault-tolerant placement).
+        Sharding is pure execution policy: rows, opened values and ledgers
+        stay bit-identical to the unsharded relation, and the planner
+        prices the per-shard dispatch counts through ``stats().shards``.
+        """
+        rel = relation if relation is not None \
+            else (self.dataplane if self.dataplane is not None else self.db)
+        if isinstance(rel, ShardedRelation):
+            if shards <= 1 and dispatcher is None:
+                plane = rel                      # adopt as-is
+            else:
+                # re-shard only on an explicit shards>1; a new dispatcher
+                # alone must not collapse the existing partitioning
+                plane = ShardedRelation(
+                    rel.db, shards=(shards if shards > 1 else rel.n_shards),
+                    dispatcher=dispatcher or rel.dispatcher)
+        else:
+            plane = ShardedRelation(rel, shards=shards,
+                                    dispatcher=dispatcher)
+        self.dataplane = plane
+        self.db = plane.db
+        return plane
+
+    @property
+    def _rel(self) -> Union[SecretSharedDB, ShardedRelation]:
+        """What the round engine executes against (plane if attached)."""
+        return self.dataplane if self.dataplane is not None else self.db
+
     # -- planning -----------------------------------------------------------
     def stats(self) -> _planner.DBStats:
-        return _planner.DBStats.of(self.db)
+        return _planner.DBStats.of(
+            self.db, shards=(self.dataplane.n_shards
+                             if self.dataplane is not None else 1))
 
-    def explain(self, plan: Select):
-        """Planner's eligible strategies for ``plan``, cheapest first."""
-        cands = _planner.candidate_estimates(
-            self.stats(), ell=plan.expected_matches,
-            padded_rows=plan.padding.rows)
-        return sorted(cands,
-                      key=lambda e: (e.score(self.round_cost_bits), e.rounds))
+    def explain(self, plan: Union[Select, Sequence[Plan]]):
+        """Planner predictions without touching shares.
+
+        One ``Select`` -> its eligible strategy estimates, cheapest first
+        (each carries bits, rounds and per-shard dispatches).
+
+        A *sequence of plans* -> a :class:`~.planner.BatchExplanation`: the
+        plans are grouped exactly as :meth:`run_batch` would group them and
+        each group is priced with ``estimate_batch_group_cost`` (bits sum,
+        rounds/dispatches fuse to the deepest member, the cross-group fetch
+        counted once) — a predicted ``run_batch`` ledger.
+        """
+        if isinstance(plan, Plan):
+            cands = _planner.candidate_estimates(
+                self.stats(), ell=plan.expected_matches,
+                padded_rows=plan.padding.rows)
+            return sorted(cands,
+                          key=lambda e: (e.score(self.round_cost_bits),
+                                         e.rounds))
+        return self._explain_batch(list(plan))
+
+    def _explain_batch(self, plans: List[Plan]) -> _planner.BatchExplanation:
+        """Group ``plans`` exactly as :meth:`run_batch` would (AUTO plans
+        see the same live group sizes/depths) and price each group."""
+        stats = self.stats()
+        sel_ells: Dict[str, List[Optional[int]]] = {"one_tuple": [],
+                                                    "one_round": [],
+                                                    "tree": []}
+        sel_pad: Dict[str, Optional[int]] = {s: None for s in sel_ells}
+        group_sizes: Dict[str, int] = {s: 0 for s in sel_ells}
+        group_rounds: Dict[str, int] = {}
+        counts = 0
+        range_grps: Dict[Tuple[int, int], List[Tuple[bool, Optional[int],
+                                                     Optional[int]]]] = {}
+        joins: Dict[str, List[Plan]] = {"pkfk": [], "equi": []}
+        auto_plans: List[Select] = []
+
+        def add_select(plan: Select, strategy: str) -> None:
+            ell = 1 if strategy == "one_tuple" else plan.expected_matches
+            sel_ells[strategy].append(ell)
+            sel_pad[strategy] = sel_pad[strategy] or plan.padding.rows
+            group_sizes[strategy] += 1
+            est = _planner.estimate_select_cost(
+                strategy, stats,
+                ell=(1 if strategy == "one_tuple" else
+                     _planner.DEFAULT_ELL if ell is None else max(ell, 1)),
+                padded_rows=plan.padding.rows)
+            group_rounds[strategy] = max(group_rounds.get(strategy, 0),
+                                         est.rounds)
+
+        for plan in plans:
+            if isinstance(plan, Count):
+                counts += 1
+            elif isinstance(plan, Select):
+                if plan.strategy == AUTO:
+                    auto_plans.append(plan)
+                else:
+                    add_select(plan, plan.strategy)
+            elif isinstance(plan, (RangeCount, RangeSelect)):
+                col = resolve_column(self.db, plan.where.column)
+                if col not in self.db.numeric_bits:   # as range_phase would
+                    raise ValueError(f"column {col} was not outsourced in "
+                                     f"binary form")
+                gk = (self.db.numeric_bits[col], plan.reduce_every)
+                want = isinstance(plan, RangeSelect)
+                range_grps.setdefault(gk, []).append(
+                    (want, None, plan.padding.rows if want else None))
+            elif isinstance(plan, Join):
+                self._validate_join(plan)
+                joins[plan.kind].append(plan)
+            else:
+                raise TypeError(f"not a logical plan: {plan!r}")
+        for plan in auto_plans:
+            chosen = _planner.choose_select_strategy(
+                stats, ell=plan.expected_matches,
+                padded_rows=plan.padding.rows,
+                round_cost_bits=self.round_cost_bits,
+                group_sizes=group_sizes, group_rounds=group_rounds).strategy
+            add_select(plan, chosen)
+
+        groups: List[_planner.GroupEstimate] = []
+        if counts:
+            est = _planner.estimate_count_cost(stats)
+            groups.append(_planner.GroupEstimate(
+                "count", counts, dataclasses.replace(
+                    est, bits=est.bits * counts)))
+        for strategy, ells in sel_ells.items():
+            if ells:
+                groups.append(_planner.GroupEstimate(
+                    strategy, len(ells),
+                    _planner.estimate_batch_group_cost(
+                        stats, strategy, ells=ells,
+                        padded_rows=sel_pad[strategy])))
+        for (t_bits, reduce_every), members in range_grps.items():
+            ests = [_planner.estimate_range_cost(
+                stats, t_bits=t_bits, reduce_every=reduce_every,
+                want_addresses=want,
+                ell=_planner.DEFAULT_ELL if ell is None else max(ell, 1),
+                padded_rows=pad) for (want, ell, pad) in members]
+            family = ("range_select" if any(m[0] for m in members)
+                      else "range_count")
+            groups.append(_planner.GroupEstimate(
+                family, len(members), _planner.CostEstimate(
+                    family, bits=sum(e.bits for e in ests),
+                    rounds=max(e.rounds for e in ests),
+                    dispatches=max(e.dispatches for e in ests))))
+        if joins["pkfk"]:       # one fused group: batched match matrices
+            ests = [_planner.estimate_pkfk_cost(
+                stats, _planner.DBStats.of(p.right))
+                for p in joins["pkfk"]]
+            groups.append(_planner.GroupEstimate(
+                "pkfk", len(ests), _planner.CostEstimate(
+                    "pkfk", bits=sum(e.bits for e in ests),
+                    rounds=max(e.rounds for e in ests),
+                    dispatches=max(e.dispatches for e in ests))))
+        if joins["equi"]:       # phases fuse; per-value rounds stay per job
+            ests = [_planner.estimate_equijoin_cost(
+                stats, _planner.DBStats.of(p.right),
+                fake_values=p.padding.values) for p in joins["equi"]]
+            groups.append(_planner.GroupEstimate(
+                "equi", len(ests), _planner.CostEstimate(
+                    "equi", bits=sum(e.bits for e in ests),
+                    rounds=max(e.rounds for e in ests),
+                    dispatches=max(e.dispatches for e in ests))))
+        return _planner.explain_batch_groups(stats, groups)
 
     # -- execution ----------------------------------------------------------
     def run(self, plan: Plan) -> QueryResult:
@@ -206,7 +369,7 @@ class QueryClient:
         fetch_meta: List[Tuple[_Slot, str, List[int]]] = []
 
         if count_grp:
-            counts = rounds.count_phase(be, self.db, [
+            counts = rounds.count_phase(be, self._rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, s.key,
                                 s.ledger) for s in count_grp])
             for s, cnt in zip(count_grp, counts):
@@ -217,7 +380,7 @@ class QueryClient:
         if sel_grp["one_tuple"]:
             group = sel_grp["one_tuple"]
             keys = [jax.random.split(s.key) for s in group]
-            ells = rounds.count_phase(be, self.db, [
+            ells = rounds.count_phase(be, self._rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, kc, s.ledger)
                 for s, (kc, _) in zip(group, keys)])
             verified: List[Tuple[_Slot, jax.Array]] = []
@@ -239,7 +402,7 @@ class QueryClient:
                 s.key, s.known_count = self._next_key(), ell
                 join_group(s, chosen, ell)
             if verified:
-                rows = rounds.one_tuple_round(be, self.db, [
+                rows = rounds.one_tuple_round(be, self._rel, [
                     rounds.MatchJob(s.column, s.plan.where.pattern, k_sel,
                                     s.ledger) for s, k_sel in verified])
                 for (s, _), row in zip(verified, rows):
@@ -251,7 +414,7 @@ class QueryClient:
         if sel_grp["one_round"]:
             group = sel_grp["one_round"]
             keys = [jax.random.split(s.key) for s in group]
-            addrs = rounds.match_all_round(be, self.db, [
+            addrs = rounds.match_all_round(be, self._rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, kp, s.ledger)
                 for s, (kp, _) in zip(group, keys)])
             for s, (_, kf), a in zip(group, keys, addrs):
@@ -265,7 +428,7 @@ class QueryClient:
             keys = [jax.random.split(s.key, 3) for s in group]
             need = [(s, kc) for s, (kc, _, _) in zip(group, keys)
                     if s.known_count is None]
-            ells = rounds.count_phase(be, self.db, [
+            ells = rounds.count_phase(be, self._rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, kc, s.ledger)
                 for s, kc in need])
             for (s, _), ell in zip(need, ells):
@@ -279,7 +442,7 @@ class QueryClient:
                 else:
                     live.append((s, kp, kf))
             if live:
-                addrs = rounds.tree_rounds(be, self.db, [
+                addrs = rounds.tree_rounds(be, self._rel, [
                     rounds.TreeJob(s.column, s.plan.where.pattern, kp,
                                    s.ledger, ell=s.known_count,
                                    branching=s.plan.branching)
@@ -301,7 +464,7 @@ class QueryClient:
                     s.column, s.plan.where.lo, s.plan.where.hi, k_ind,
                     s.ledger, reduce_every=reduce_every,
                     want_addresses=isinstance(s.plan, RangeSelect)))
-            for s, out in zip(group, rounds.range_rounds(be, self.db, jobs)):
+            for s, out in zip(group, rounds.range_rounds(be, self._rel, jobs)):
                 if isinstance(s.plan, RangeCount):
                     results[s.idx] = QueryResult(
                         plan=s.plan, ledger=s.ledger,
@@ -319,11 +482,11 @@ class QueryClient:
                 s.plan.right, resolve_column(self.db, s.plan.on[0]),
                 resolve_column(s.plan.right, s.plan.on[1]), s.key, s.ledger)
                 for s in pkfk_grp]
-            join_entries = rounds.join_match_round(be, self.db, join_jobs)
+            join_entries = rounds.join_match_round(be, self._rel, join_jobs)
 
         # -- the cross-group fetch: ONE ss_matmul for everything ------------
         if fetch_jobs or join_entries:
-            rows_list, extra_sh = rounds.fetch_fusion(be, self.db,
+            rows_list, extra_sh = rounds.fetch_fusion(be, self._rel,
                                                       fetch_jobs,
                                                       join_entries)
             for (s, strat, a), r in zip(fetch_meta, rows_list):
@@ -340,7 +503,7 @@ class QueryClient:
 
         # -- equijoins: phases fused across the group -----------------------
         if equi_grp:
-            equi_rows = rounds.equijoin_rounds(be, self.db, [
+            equi_rows = rounds.equijoin_rounds(be, self._rel, [
                 rounds.EquiJob(
                     s.plan.right, resolve_column(self.db, s.plan.on[0]),
                     resolve_column(s.plan.right, s.plan.on[1]), s.key,

@@ -11,18 +11,44 @@ The split axis is always a *data* axis (tuples / fetch rows), never the
 cloud axis, so the non-communication property is preserved: a worker only
 ever sees whole share-columns of its slice. Results are bit-identical to the
 unsplit backend because every op is elementwise or a row-block of a matmul.
+
+Two composable roles:
+
+  * :meth:`MapReduceExecutor.wrap` — the historical *backend* wrapper:
+    every hot op splits its own data axis into ``n_splits`` runner tasks.
+  * :class:`MapReduceDispatcher` — the executor as a *placement policy* of
+    the sharded dataplane (``repro.core.dataplane``): the round engine
+    already emitted one dispatch per tuple-axis shard; the dispatcher
+    places each shard dispatch as one fault-tolerant MapReduce task
+    instead of running it inline. ``MapReduceExecutor.dispatcher()``
+    builds one over the executor's runner.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import Any, Callable, List, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.dataplane import Dispatcher
 from ..core.partition import split_bounds
 from ..runtime.mapreduce import MapReduceRunner
 from .backends import Backend
+
+
+class MapReduceDispatcher(Dispatcher):
+    """Run each shard dispatch as one MapReduce task (re-execution and
+    speculative straggler backups included — shard dispatches are pure
+    share-space programs, so duplicate execution is safe)."""
+
+    def __init__(self, runner: MapReduceRunner):
+        self.runner = runner
+
+    def run_all(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
+        if len(thunks) <= 1:
+            return [t() for t in thunks]
+        return self.runner.run(lambda t: t(), list(thunks))
 
 
 def _bounds(total: int, n_splits: int) -> List[Tuple[int, int]]:
@@ -35,6 +61,11 @@ class MapReduceExecutor:
     """Fan a backend's map phase out over ``runner`` with ``n_splits``."""
     runner: MapReduceRunner
     n_splits: int = 4
+
+    def dispatcher(self) -> MapReduceDispatcher:
+        """This executor as a dataplane placement policy: one shard
+        dispatch = one fault-tolerant MapReduce task."""
+        return MapReduceDispatcher(self.runner)
 
     def wrap(self, base: Backend) -> Backend:
         def aa_match(col, pat):
@@ -74,9 +105,12 @@ class MapReduceExecutor:
                 splits)
             return jnp.concatenate([jnp.asarray(p) for p in parts], axis=1)
 
-        from .backends import batched_matcher, ripple_stepper
+        from .backends import (batched_match_matrix, batched_matcher,
+                               ripple_segmenter, ripple_stepper)
         base_batch = batched_matcher(base)
         base_ripple = ripple_stepper(base)
+        base_mm_batch = batched_match_matrix(base)
+        base_segment = ripple_segmenter(base)
 
         def ripple_carry(a, b, carry=None):
             # a: (c, S, n) bit planes — split the tuple axis (last), like
@@ -111,7 +145,40 @@ class MapReduceExecutor:
                 splits)
             return jnp.concatenate([jnp.asarray(p) for p in parts], axis=2)
 
+        def ripple_segment(a, b, carry=None):
+            # a: (..., n, k) bit planes — the tuple axis is second-to-last
+            # (the last axis is the fused bit-position run). Split tuples;
+            # the whole segment chains inside each map task.
+            if a.shape[-2] == 0:
+                return base_segment(a, b, carry)
+            splits = _bounds(a.shape[-2], self.n_splits)
+
+            def one(s):
+                sl = (Ellipsis, slice(s[0], s[1]), slice(None))
+                cl = (Ellipsis, slice(s[0], s[1]))
+                rb, co = base_segment(a[sl], b[sl],
+                                      None if carry is None else carry[cl])
+                return np.asarray(rb), np.asarray(co)
+            parts = self.runner.run(one, splits)
+            return (jnp.concatenate([jnp.asarray(p[0]) for p in parts],
+                                    axis=-1),
+                    jnp.concatenate([jnp.asarray(p[1]) for p in parts],
+                                    axis=-1))
+
+        def match_matrix_batch(bx, by):
+            # bx: (c, B, nx, W, A) — split the left-tuple axis; the join
+            # group's B column pairs stay fused inside each task.
+            if bx.shape[2] == 0 or bx.shape[1] == 0:
+                return base_mm_batch(bx, by)
+            splits = _bounds(bx.shape[2], self.n_splits)
+            parts = self.runner.run(
+                lambda s: np.asarray(
+                    base_mm_batch(bx[:, :, s[0]:s[1]], by)), splits)
+            return jnp.concatenate([jnp.asarray(p) for p in parts], axis=2)
+
         return Backend(name=f"{base.name}+mapreduce", aa_match=aa_match,
                        ss_matmul=ss_matmul, match_matrix=match_matrix,
                        aa_match_batch=aa_match_batch,
-                       ripple_carry=ripple_carry)
+                       ripple_carry=ripple_carry,
+                       ripple_segment=ripple_segment,
+                       match_matrix_batch=match_matrix_batch)

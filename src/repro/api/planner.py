@@ -18,14 +18,29 @@ pain for large n — while ``tree`` replaces that n-vector with O(ℓ·log n)
 block counts at the price of extra rounds. Estimates are pure functions of
 the public relation statistics (n, m, w, A, c′) plus the cardinality hint ℓ,
 so the planner runs without touching shares.
+
+Estimates also price the *execution* axis: ``DBStats.shards`` carries the
+attached dataplane's shard count and every :class:`CostEstimate` reports
+``dispatches`` — the number of per-shard device dispatches the sharded
+round engine will emit (each sharded cloud step fans out S ways; tree Q&A
+rounds gather blocks from the full relation and stay at one dispatch).
+Dispatches are an execution cost, never a protocol cost: bits and rounds
+are independent of S by construction.
+
+:func:`explain_batch_groups` assembles per-group estimates into the
+:class:`BatchExplanation` that ``QueryClient.explain(plans)`` returns — a
+predicted ``run_batch`` ledger (bits sum per query, rounds fuse to the
+deepest member, the cross-group fetch is priced ONCE) without running
+anything.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Mapping, Optional, Sequence
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 from ..core.costs import WORD_BITS
+from ..core.dataplane import ShardedRelation
 from ..core.engine import SecretSharedDB
 
 #: ℓ assumed when the plan carries no ``expected_matches`` hint. Two is the
@@ -36,10 +51,11 @@ DEFAULT_ELL = 2
 
 @dataclasses.dataclass(frozen=True)
 class CostEstimate:
-    """Planner-side (bits, rounds) prediction for one strategy."""
+    """Planner-side (bits, rounds, per-shard dispatches) prediction."""
     strategy: str
     bits: int
     rounds: int
+    dispatches: int = 0
 
     def score(self, round_cost_bits: int = 0) -> int:
         """Total cost with rounds priced at ``round_cost_bits`` each."""
@@ -49,17 +65,24 @@ class CostEstimate:
 @dataclasses.dataclass(frozen=True)
 class DBStats:
     """The public statistics the planner works from (§2.3: the adversary —
-    and hence the planner — may know n, m and the schema)."""
+    and hence the planner — may know n, m and the schema). ``shards`` is
+    the attached dataplane's tuple-axis shard count (execution, not
+    protocol: it scales dispatch estimates, never bits or rounds)."""
     n: int          # tuples
     m: int          # attributes
     c: int          # clouds / shares
     w: int          # word length
     a: int          # alphabet size
+    shards: int = 1
 
     @classmethod
-    def of(cls, db: SecretSharedDB) -> "DBStats":
+    def of(cls, db, shards: Optional[int] = None) -> "DBStats":
+        if isinstance(db, ShardedRelation):
+            shards = db.n_shards if shards is None else shards
+            db = db.db
         return cls(n=db.n_tuples, m=db.n_attrs, c=db.n_shares,
-                   w=db.codec.word_length, a=db.codec.alphabet_size)
+                   w=db.codec.word_length, a=db.codec.alphabet_size,
+                   shards=shards or 1)
 
 
 def _pattern_elems(s: DBStats) -> int:
@@ -80,23 +103,33 @@ def _fetch_elems(s: DBStats, ell: int, padded_rows: Optional[int]) -> int:
 def estimate_select_cost(strategy: str, stats: DBStats, *,
                          ell: int = DEFAULT_ELL,
                          padded_rows: Optional[int] = None) -> CostEstimate:
-    """(bits, rounds) for one §3.2 strategy at cardinality ℓ."""
+    """(bits, rounds, dispatches) for one §3.2 strategy at cardinality ℓ.
+
+    Dispatches count the sharded round engine's per-shard device fan-out:
+    count / match / fetch steps slice the tuple axis (S dispatches each);
+    tree Q&A and address rounds gather *blocks* from the full relation
+    (one dispatch per round regardless of S).
+    """
     s = stats
+    S = max(1, min(s.shards, max(s.n, 1)))
     if strategy == "one_tuple":
         if ell != 1:
             raise ValueError("one_tuple requires ℓ = 1")
         elems = _count_elems(s) + _pattern_elems(s) + s.c * s.m * s.w * s.a
-        return CostEstimate("one_tuple", elems * WORD_BITS, rounds=2)
+        return CostEstimate("one_tuple", elems * WORD_BITS, rounds=2,
+                            dispatches=2 * S)    # count step + map step
     if strategy == "one_round":
         elems = _pattern_elems(s) + s.c * s.n + _fetch_elems(s, ell,
                                                              padded_rows)
-        return CostEstimate("one_round", elems * WORD_BITS, rounds=2)
+        return CostEstimate("one_round", elems * WORD_BITS, rounds=2,
+                            dispatches=2 * S)    # match step + fetch step
     if strategy == "tree":
         if ell <= 1:
             # Alg 4 line 2: count, one whole-table Address_fetch, fetch.
             elems = (_count_elems(s) + _pattern_elems(s) + s.c
                      + _fetch_elems(s, max(ell, 1), padded_rows))
-            return CostEstimate("tree", elems * WORD_BITS, rounds=3)
+            return CostEstimate("tree", elems * WORD_BITS, rounds=3,
+                                dispatches=2 * S + 1)
         qa_rounds = (math.floor(math.log(max(s.n, 2), ell))
                      + math.floor(math.log2(ell)) + 1)       # Theorem 4
         elems = (_count_elems(s) + _pattern_elems(s)
@@ -104,8 +137,76 @@ def estimate_select_cost(strategy: str, stats: DBStats, *,
                  + ell * s.c                                 # address fetches
                  + _fetch_elems(s, ell, padded_rows))
         return CostEstimate("tree", elems * WORD_BITS,
-                            rounds=1 + qa_rounds + 1)
+                            rounds=1 + qa_rounds + 1,
+                            dispatches=2 * S + qa_rounds + 1)
     raise ValueError(f"unknown selection strategy {strategy!r}")
+
+
+def estimate_count_cost(stats: DBStats) -> CostEstimate:
+    """§3.1 Algorithm 2: one round, O(1) comm, one count step per shard."""
+    S = max(1, min(stats.shards, max(stats.n, 1)))
+    return CostEstimate("count", _count_elems(stats) * WORD_BITS, rounds=1,
+                        dispatches=S)
+
+
+def estimate_range_cost(stats: DBStats, *, t_bits: int,
+                        reduce_every: int = 0, want_addresses: bool = False,
+                        ell: int = DEFAULT_ELL,
+                        padded_rows: Optional[int] = None) -> CostEstimate:
+    """§3.4 Algorithms 5/6: the SS-SUB ripple over a t-bit column.
+
+    Bits mirror the measured ledger: both endpoints up (2·c·t elements),
+    one 2c² re-share per degree-reduction boundary (each boundary is two
+    logical rounds, one per subtraction direction), the count (c) or the n
+    indicator bits plus the oblivious fetch down. Dispatches: one fused
+    ripple *segment* per boundary interval per shard, plus the fetch step.
+    """
+    s = stats
+    S = max(1, min(s.shards, max(s.n, 1)))
+    n_red = (t_bits - 1) // reduce_every if reduce_every > 0 else 0
+    segments = n_red + 1
+    elems = s.c * 2 * t_bits + n_red * 2 * s.c * s.c
+    rounds = 1 + 2 * n_red
+    dispatches = segments * S
+    if want_addresses:
+        elems += s.c * s.n + _fetch_elems(s, ell, padded_rows)
+        rounds += 1
+        dispatches += S                              # the oblivious fetch
+        name = "range_select"
+    else:
+        elems += s.c
+        name = "range_count"
+    return CostEstimate(name, elems * WORD_BITS, rounds=rounds,
+                        dispatches=dispatches)
+
+
+def estimate_pkfk_cost(stats: DBStats, right: DBStats) -> CostEstimate:
+    """§3.3.1: match-matrix step (per shard) + the shared fetch + one round
+    shipping every reducer's (parent ⊕ child) concatenation."""
+    s = stats
+    S = max(1, min(s.shards, max(s.n, 1)))
+    elems = s.c * right.n * (s.m + right.m) * s.w * s.a
+    return CostEstimate("pkfk", elems * WORD_BITS, rounds=1,
+                        dispatches=2 * S)            # match + fetch steps
+
+
+def estimate_equijoin_cost(stats: DBStats, right: DBStats, *,
+                           values: int = 1,
+                           fake_values: int = 0) -> CostEstimate:
+    """§3.3.2 (Thm 6): column-open round + 2 rounds per (fake) common
+    value. ``values`` is the caller's guess at k (the true count is data
+    the planner cannot see); value groups are assumed singletons, the
+    asymptotically common PK-ish case. Dispatches: the X-side layer-1
+    matmul fans per shard, the Y-side runs against the (unsharded) right."""
+    s = stats
+    S = max(1, min(s.shards, max(s.n, 1)))
+    k = max(0, values) + max(0, fake_values)
+    elems = (s.c * s.n * s.w * s.a + right.c * right.n * s.w * s.a  # open
+             + k * (s.c * s.n + right.c * right.n)       # layer-1 one-hots
+             + k * s.c * (s.m + right.m) * s.w * s.a)    # layer-2 pairs
+    return CostEstimate("equi", elems * WORD_BITS, rounds=1 + 2 * k,
+                        dispatches=S + 1)
+
 
 
 def candidate_estimates(stats: DBStats, *, ell: Optional[int] = None,
@@ -167,13 +268,66 @@ def estimate_batch_group_cost(stats: DBStats, strategy: str, *,
                               padded_rows: Optional[int] = None
                               ) -> CostEstimate:
     """Price a whole ``run_batch`` group: bits add up query by query, but
-    the lockstep engine pays each protocol round once for the group, so the
-    group's round count is its deepest member's (not the sum). This is the
-    per-group ledger shape ``tests/test_batch.py`` asserts, exposed as a
-    planner-side estimate."""
+    the lockstep engine pays each protocol round — and each per-shard
+    dispatch — once for the group, so the group's round and dispatch counts
+    are its deepest member's (not the sum). This is the per-group ledger
+    shape ``tests/test_batch.py`` asserts, exposed as a planner-side
+    estimate."""
     ests = [estimate_select_cost(
         strategy, stats, ell=DEFAULT_ELL if e is None else max(e, 1),
         padded_rows=padded_rows) for e in ells]
     return CostEstimate(strategy,
                         bits=sum(e.bits for e in ests),
-                        rounds=max((e.rounds for e in ests), default=0))
+                        rounds=max((e.rounds for e in ests), default=0),
+                        dispatches=max((e.dispatches for e in ests),
+                                       default=0))
+
+
+#: group families whose oblivious fetch rides the single cross-group
+#: ``ss_matmul`` of ``run_batch`` (their solo estimates each include one
+#: fetch step; the batch pays it once).
+FETCH_RIDERS = ("one_round", "tree", "range_select", "pkfk")
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupEstimate:
+    """One ``run_batch`` group's predicted ledger."""
+    family: str                 # count/one_tuple/one_round/tree/range_*/…
+    size: int                   # member queries
+    estimate: CostEstimate      # bits summed, rounds/dispatches fused
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchExplanation:
+    """Predicted ``run_batch`` ledger for a prospective batch.
+
+    bits sum over every member query (protocol bits are per query, fusion
+    never changes them); rounds are the deepest group's (groups share the
+    batch's fused round structure); dispatches total the per-shard device
+    fan-out with the cross-group fetch counted ONCE (each rider group's
+    solo estimate prices its own fetch step — the assembly removes the
+    duplicates).
+    """
+    groups: Tuple[GroupEstimate, ...]
+    bits: int
+    rounds: int
+    dispatches: int
+    shards: int
+
+
+def explain_batch_groups(stats: DBStats,
+                         groups: Sequence[GroupEstimate]
+                         ) -> BatchExplanation:
+    """Assemble per-group estimates into the batch-level prediction."""
+    S = max(1, min(stats.shards, max(stats.n, 1)))
+    riders = sum(1 for g in groups
+                 if g.family in FETCH_RIDERS and g.size > 0)
+    dispatches = sum(g.estimate.dispatches for g in groups)
+    if riders > 1:
+        dispatches -= (riders - 1) * S      # ONE shared fetch dispatch set
+    return BatchExplanation(
+        groups=tuple(groups),
+        bits=sum(g.estimate.bits for g in groups),
+        rounds=max((g.estimate.rounds for g in groups), default=0),
+        dispatches=dispatches,
+        shards=S)

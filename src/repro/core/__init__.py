@@ -1,14 +1,17 @@
 # The paper's primary contribution: Shamir secret-sharing over F_p,
 # accumulating-automata string matching, and the oblivious query suite
 # (count / selection / join / range) executed MapReduce-style.
-from . import field, shamir, encoding, automata, costs, engine
+from . import field, shamir, encoding, automata, costs, dataplane, engine
 from .engine import SecretSharedDB, outsource
+from .dataplane import (Dispatcher, ShardedRelation, ThreadedDispatcher,
+                        as_dataplane)
 from .shamir import Shares, share, interpolate, reduce_degree
 from .encoding import Codec
 from .costs import CostLedger
 
 __all__ = [
-    "field", "shamir", "encoding", "automata", "costs", "engine",
-    "SecretSharedDB", "outsource", "Shares", "share", "interpolate",
-    "reduce_degree", "Codec", "CostLedger",
+    "field", "shamir", "encoding", "automata", "costs", "dataplane",
+    "engine", "SecretSharedDB", "outsource", "Dispatcher",
+    "ShardedRelation", "ThreadedDispatcher", "as_dataplane", "Shares",
+    "share", "interpolate", "reduce_degree", "Codec", "CostLedger",
 ]

@@ -1,0 +1,278 @@
+"""Sharded dataplane: tuple-axis partitioning of a secret-shared relation.
+
+The paper states its efficiency claims per *query stream* (rounds and bits
+between the user and c non-communicating clouds); how the cloud-side work is
+*executed* is free as long as the transcript is unchanged. This module makes
+that execution axis explicit: a :class:`ShardedRelation` partitions the share
+arrays of a :class:`~repro.core.engine.SecretSharedDB` into S contiguous
+tuple-axis shards (the same split MapReduce mappers use in the paper — every
+shard holds whole share-columns of a tuple slice, so the non-communication
+property is untouched), and the round engine emits one
+:class:`ShardDispatch` per shard per cloud step instead of one monolithic
+device call.
+
+A :class:`DispatchSet` bundles the per-shard dispatches of one cloud step
+together with the reduction that reassembles them:
+
+  * ``"concat"`` — per-tuple outputs (match bits, match-matrix rows, ripple
+    planes) concatenate along the tuple axis;
+  * ``"sum"``    — partial mod-p sums (counts, one-hot fetch / matmul
+    contractions over the tuple axis) combine additively. F_p addition is
+    exact and associative, so the combined residues are **bit-identical** to
+    the unsharded computation — user-side rounds, opened values and
+    ``CostLedger`` totals never see the shard count.
+  * ``"list"``   — raw per-shard results for callers that thread shard-local
+    state themselves (the ripple carry chain).
+
+Execution is a *placement policy*, not part of the protocol:
+:class:`SerialDispatcher` runs shards inline (the S = 1 path is exactly the
+pre-shard engine), :class:`ThreadedDispatcher` fans them out over a thread
+pool (the async serving runtime), and
+``repro.api.executor.MapReduceDispatcher`` places each shard dispatch as a
+fault-tolerant MapReduce task.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+from . import field
+from .engine import SecretSharedDB
+from .partition import split_bounds
+from .shamir import Shares
+
+
+# ---------------------------------------------------------------------------
+# placement policies
+# ---------------------------------------------------------------------------
+
+class Dispatcher:
+    """Placement policy for one round's shard dispatches (serial default)."""
+
+    def run_all(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
+        return [t() for t in thunks]
+
+
+SERIAL = Dispatcher()
+
+
+class ThreadedDispatcher(Dispatcher):
+    """Run shard dispatches concurrently on a shared thread pool.
+
+    Share-space cloud steps are pure, so concurrent execution is safe; the
+    combine step (concat / mod-p sum) happens on the caller's thread in
+    shard order, keeping results bit-identical to serial execution.
+    """
+
+    def __init__(self, max_workers: Optional[int] = None):
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="shard")
+        self._closed = False
+
+    def run_all(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
+        if self._closed or len(thunks) <= 1:
+            return [t() for t in thunks]
+        return list(self._pool.map(lambda t: t(), thunks))
+
+    def close(self) -> None:
+        """Release the pool; later dispatches degrade to serial (correct,
+        just unparallel) instead of raising on the shut-down executor."""
+        self._closed = True
+        self._pool.shutdown(wait=False)
+
+
+# ---------------------------------------------------------------------------
+# shards and dispatch descriptors
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Shard:
+    """One contiguous tuple-axis slice [lo, hi) of the relation."""
+    index: int
+    lo: int
+    hi: int
+
+    @property
+    def n_tuples(self) -> int:
+        return self.hi - self.lo
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardDispatch:
+    """One shard's slice of a cloud step: a zero-argument device thunk."""
+    shard: Shard
+    run: Callable[[], Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchSet:
+    """All shards' dispatches for one cloud step + the reduction rule."""
+    dispatches: Tuple[ShardDispatch, ...]
+    reduce: str = "concat"          # "concat" | "sum" | "list"
+    axis: int = -1                  # concat axis
+
+    def combine(self, parts: List[Any]):
+        if self.reduce == "list":
+            return parts
+        if len(parts) == 1:
+            return parts[0]
+        if self.reduce == "concat":
+            return jnp.concatenate(parts, axis=self.axis)
+        if self.reduce == "sum":
+            acc = parts[0]
+            for p in parts[1:]:
+                acc = field.add(acc, p)
+            return acc
+        raise ValueError(f"unknown reduce mode {self.reduce!r}")
+
+
+@dataclasses.dataclass
+class DispatchStats:
+    """Execution-side telemetry (never part of the protocol transcript)."""
+    dispatches: int = 0             # shard dispatches executed
+    steps: int = 0                  # cloud steps (DispatchSets) executed
+
+    def record(self, n_dispatches: int) -> None:
+        self.dispatches += n_dispatches
+        self.steps += 1
+
+
+# ---------------------------------------------------------------------------
+# the sharded relation
+# ---------------------------------------------------------------------------
+
+class ShardedRelation:
+    """Tuple-axis partitioned view of one outsourced relation.
+
+    ``shards=S`` splits [0, n) with the shared :func:`split_bounds` rule
+    (the same rounding MapReduce input splits and tree blocks use), so every
+    shard is a contiguous ``ceil(n/S)``-ish block. ``view(i)`` materializes
+    shard i as a regular :class:`SecretSharedDB` slice (relation + binary
+    columns), cheap jnp views over the parent arrays. The attached
+    ``dispatcher`` decides *where* shard dispatches run; swapping it never
+    changes results.
+    """
+
+    def __init__(self, db: SecretSharedDB, shards: int = 1,
+                 dispatcher: Optional[Dispatcher] = None):
+        if isinstance(db, ShardedRelation):        # re-shard an existing plane
+            db = db.db
+        self.db = db
+        bounds = split_bounds(0, db.n_tuples, max(1, shards))
+        self.shards: List[Shard] = [Shard(i, lo, hi)
+                                    for i, (lo, hi) in enumerate(bounds)]
+        self.dispatcher = dispatcher or SERIAL
+        self.stats = DispatchStats()
+        self._views: dict = {}
+
+    # -- SecretSharedDB delegation (user-side code reads relation metadata
+    # off the plane without caring about the shard count) -------------------
+    @property
+    def relation(self):
+        return self.db.relation
+
+    @property
+    def codec(self):
+        return self.db.codec
+
+    @property
+    def column_names(self):
+        return self.db.column_names
+
+    @property
+    def numeric(self):
+        return self.db.numeric
+
+    @property
+    def numeric_bits(self):
+        return self.db.numeric_bits
+
+    @property
+    def base_degree(self) -> int:
+        return self.db.base_degree
+
+    @property
+    def n_shares(self) -> int:
+        return self.db.n_shares
+
+    @property
+    def n_tuples(self) -> int:
+        return self.db.n_tuples
+
+    @property
+    def n_attrs(self) -> int:
+        return self.db.n_attrs
+
+    def column(self, col: int):
+        return self.db.column(col)
+
+    def col_index(self, name: str) -> int:
+        return self.db.col_index(name)
+
+    # -- structure ----------------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def max_shard_rows(self) -> int:
+        return max(s.n_tuples for s in self.shards)
+
+    def view(self, index: int) -> SecretSharedDB:
+        """Shard ``index`` as a sliced SecretSharedDB (cached)."""
+        sh = self.shards[index]
+        if sh.lo == 0 and sh.hi == self.db.n_tuples:
+            return self.db
+        if index not in self._views:
+            db = self.db
+            self._views[index] = SecretSharedDB(
+                relation=Shares(db.relation.values[:, sh.lo:sh.hi],
+                                db.relation.degree),
+                codec=db.codec,
+                column_names=db.column_names,
+                numeric={c: Shares(s.values[:, sh.lo:sh.hi], s.degree)
+                         for c, s in db.numeric.items()},
+                numeric_bits=dict(db.numeric_bits),
+                base_degree=db.base_degree)
+        return self._views[index]
+
+    # -- dispatch -----------------------------------------------------------
+    def dispatch_set(self, build: Callable[[SecretSharedDB, Shard], Any],
+                     *, reduce: str = "concat", axis: int = -1
+                     ) -> DispatchSet:
+        """One cloud step: a per-shard dispatch descriptor per shard."""
+        return DispatchSet(tuple(
+            ShardDispatch(sh, functools.partial(build, self.view(sh.index),
+                                                sh))
+            for sh in self.shards), reduce=reduce, axis=axis)
+
+    def execute(self, ds: DispatchSet):
+        """Run one step through the placement policy and reduce it."""
+        self.stats.record(len(ds.dispatches))
+        parts = self.dispatcher.run_all([d.run for d in ds.dispatches])
+        return ds.combine(parts)
+
+    def run_concat(self, build, *, axis: int = -1):
+        return self.execute(self.dispatch_set(build, reduce="concat",
+                                              axis=axis))
+
+    def run_sum(self, build):
+        return self.execute(self.dispatch_set(build, reduce="sum"))
+
+    def run_list(self, build) -> List[Any]:
+        return self.execute(self.dispatch_set(build, reduce="list"))
+
+
+RelationLike = Union[SecretSharedDB, ShardedRelation]
+
+
+def as_dataplane(rel: RelationLike) -> ShardedRelation:
+    """Normalize: a plain db becomes its own single-shard dataplane (the
+    S = 1 slice is the whole relation, so the sharded path is *the* path)."""
+    if isinstance(rel, ShardedRelation):
+        return rel
+    return ShardedRelation(rel, shards=1)

@@ -50,6 +50,15 @@ tree engine, which loops):
 Ledgers record *protocol* cost (each query's own blocks/rows, Table 1
 units), never the padding the fused dispatch adds — padding is an execution
 artifact of batching, invisible to the user↔cloud transcript.
+
+Every function here accepts either a plain :class:`SecretSharedDB` or a
+:class:`~repro.core.dataplane.ShardedRelation`. Cloud steps route through
+the dataplane: the engine emits one dispatch descriptor per tuple-axis
+shard and the relation's placement policy executes and reduces them
+(match bits and ripple planes concatenate; count / fetch-matmul partial
+sums combine additively in F_p). Reduction is exact modular arithmetic, so
+the user↔cloud transcript — rounds, opened values, ledgers — is
+bit-identical for every shard count; S is purely an execution knob.
 """
 from __future__ import annotations
 
@@ -60,12 +69,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import encoding, field, shamir
+from .. import dataplane, encoding, field, shamir
 from ..costs import CostLedger
+from ..dataplane import RelationLike
 from ..engine import SecretSharedDB
 from ..partition import split_bounds
 from ..shamir import Shares
-from ._common import match_matrix_shares
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +174,18 @@ def _ripple_stepper(be):
     """Backend's fused SS-SUB bit step (deferred import, as above)."""
     from ...api import backends as _registry
     return _registry.ripple_stepper(be)
+
+
+def _ripple_segmenter(be):
+    """Backend's fused SS-SUB segment (k bit steps, one dispatch)."""
+    from ...api import backends as _registry
+    return _registry.ripple_segmenter(be)
+
+
+def _batched_match_matrix(be):
+    """Backend's stacked all-pairs matcher (deferred import, as above)."""
+    from ...api import backends as _registry
+    return _registry.batched_match_matrix(be)
 
 
 def _share_one_hot(key: jax.Array, db: SecretSharedDB,
@@ -282,16 +303,23 @@ def _block_match(be, db: SecretSharedDB, p_all: Shares,
 # §3.1 — batched count phase (Algorithm 2)
 # ---------------------------------------------------------------------------
 
-def count_phase(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
+def count_phase(be, db: RelationLike, jobs: Sequence[MatchJob]
                 ) -> List[int]:
-    """COUNT for B predicates: one cloud dispatch, one interpolation."""
+    """COUNT for B predicates: one cloud dispatch *per shard*, partial
+    count sums combining additively, one interpolation."""
     if not jobs:
         return []
+    plane = dataplane.as_dataplane(db)
+    db = plane.db
     codec = db.codec
+    columns = [j.column for j in jobs]
     p_all = _share_patterns(db, jobs)
-    cols = _stack_columns(db, [j.column for j in jobs])
-    bits = _match_stack(be, cols, p_all)                       # (c, B, n)
-    counts = bits.sum(axis=1)                                  # (c, B)
+    w = db.relation.values.shape[-2]
+    deg = (db.relation.degree + p_all.degree) * w
+    counts = Shares(plane.run_sum(
+        lambda v, sh: field.sum_(_batched_matcher(be)(
+            _stack_columns(v, columns).values, p_all.values), axis=2)),
+        deg)                                                   # (c, B)
     out = np.asarray(shamir.interpolate(counts))
     per_q = codec.word_length * codec.alphabet_size
     for j in jobs:
@@ -307,24 +335,32 @@ def count_phase(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
 # §3.2.1 — batched single-tuple map round (Algorithm 3 lines 3-12)
 # ---------------------------------------------------------------------------
 
-def one_tuple_round(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
+def one_tuple_round(be, db: RelationLike, jobs: Sequence[MatchJob]
                     ) -> List[List[str]]:
     """Fetch the single satisfying tuple for B (ℓ=1-verified) predicates."""
     if not jobs:
         return []
+    plane = dataplane.as_dataplane(db)
+    db = plane.db
     codec = db.codec
     b = len(jobs)
+    columns = [j.column for j in jobs]
     p_all = _share_patterns(db, jobs)
-    cols = _stack_columns(db, [j.column for j in jobs])
-    bits = _match_stack(be, cols, p_all)                       # (c, B, n)
-    rel = db.relation.values                                   # (c,n,m,W,A)
-    c, n, m, w, a = rel.shape
+    c, _, m, w, a = db.relation.values.shape
+    match_deg = (db.relation.degree + p_all.degree) * w
+
     # Σ_n bit·tuple is a share-space matmul of the match bits against the
     # flattened relation — same mod-p result as the elementwise broadcast
     # product, without materializing a B-fold (c,B,n,m,W,A) intermediate.
-    sums_flat = be.ss_matmul(bits.values, rel.reshape(c, n, m * w * a))
-    sums = Shares(sums_flat.reshape(c, b, m, w, a),
-                  bits.degree + db.relation.degree)            # (c,B,m,W,A)
+    # Per shard: match + partial contraction; partials sum additively.
+    def one(v: SecretSharedDB, sh):
+        bits = _batched_matcher(be)(_stack_columns(v, columns).values,
+                                    p_all.values)              # (c,B,n_s)
+        return be.ss_matmul(bits, v.relation.values.reshape(
+            c, sh.n_tuples, m * w * a))
+
+    sums = Shares(plane.run_sum(one).reshape(c, b, m, w, a),
+                  match_deg + db.relation.degree)              # (c,B,m,W,A)
     tup = np.asarray(shamir.interpolate(sums))                 # (B, m, W, A)
     per_q = codec.word_length * codec.alphabet_size
     for j in jobs:
@@ -340,15 +376,21 @@ def one_tuple_round(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
 # §3.2.2 one-round — batched Phase 1 (all n match bits per query)
 # ---------------------------------------------------------------------------
 
-def match_all_round(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
+def match_all_round(be, db: RelationLike, jobs: Sequence[MatchJob]
                     ) -> List[List[int]]:
     """Per-query satisfying addresses via one fused match-bit round."""
     if not jobs:
         return []
+    plane = dataplane.as_dataplane(db)
+    db = plane.db
     codec = db.codec
+    columns = [j.column for j in jobs]
     p_all = _share_patterns(db, jobs)
-    cols = _stack_columns(db, [j.column for j in jobs])
-    bits = _match_stack(be, cols, p_all)                       # (c, B, n)
+    w = db.relation.values.shape[-2]
+    bits = Shares(plane.run_concat(
+        lambda v, sh: _batched_matcher(be)(
+            _stack_columns(v, columns).values, p_all.values), axis=2),
+        (db.relation.degree + p_all.degree) * w)               # (c, B, n)
     v = np.asarray(shamir.interpolate(bits))                   # (B, n)
     per_q = codec.word_length * codec.alphabet_size
     for j in jobs:
@@ -364,7 +406,7 @@ def match_all_round(be, db: SecretSharedDB, jobs: Sequence[MatchJob]
 # §3.2.2 tree — lockstep Q&A rounds over the batch (Algorithm 4)
 # ---------------------------------------------------------------------------
 
-def tree_rounds(be, db: SecretSharedDB, jobs: Sequence[TreeJob]
+def tree_rounds(be, db: RelationLike, jobs: Sequence[TreeJob]
                 ) -> List[List[int]]:
     """Address discovery for B tree selections, every round fused.
 
@@ -374,9 +416,15 @@ def tree_rounds(be, db: SecretSharedDB, jobs: Sequence[TreeJob]
     count came back 1, same fusion). A query stops participating once it has
     no active blocks; its ledger only ever records its own rounds, blocks
     and bits — identical to running it alone.
+
+    Q&A rounds gather *blocks*, which are themselves a tuple-axis partition
+    refinement, so they run against the full relation regardless of the
+    dataplane's shard count (the fetch that follows rides the sharded
+    :func:`fetch_fusion`).
     """
     if not jobs:
         return []
+    db = dataplane.as_dataplane(db).db
     codec = db.codec
     per_q = codec.word_length * codec.alphabet_size
     n = db.n_tuples
@@ -470,18 +518,33 @@ def tree_rounds(be, db: SecretSharedDB, jobs: Sequence[TreeJob]
 # §3.4 — batched range predicates (Algorithms 5 & 6)
 # ---------------------------------------------------------------------------
 
-def range_phase(be, db: SecretSharedDB, jobs: Sequence[RangeJob]) -> Shares:
+def _segment_edges(t_bits: int, reduce_every: int) -> List[Tuple[int, int]]:
+    """[start, end) bit segments between degree-reduction boundaries."""
+    if not reduce_every:
+        return [(0, t_bits)]
+    edges = list(range(0, t_bits, reduce_every)) + [t_bits]
+    return list(zip(edges[:-1], edges[1:]))
+
+
+def range_phase(be, db: RelationLike, jobs: Sequence[RangeJob]) -> Shares:
     """Secret-shared in-range indicator for B range predicates: (c, B, n).
 
     The fused SS-SUB ripple (Algorithm 6): each query contributes two
     subtractions — ``sign(x − a)`` and ``sign(b − x)`` (Eq. 2) — so the B
     queries' bit-vectors stack into one ``(c, 2B, n, t_bits)`` carry chain.
-    Each bit position is ONE backend ``ripple_carry`` dispatch for the whole
-    batch; each ``reduce_every`` boundary is ONE degree-reduction re-share
-    of the whole stacked carry. Ledgers record every query's own protocol
-    cost exactly as a solo run (a reduction is two logical rounds per query:
-    one per subtraction, as in the sequential transcript).
+    The bits between two degree-reduction boundaries fuse into ONE backend
+    ``ripple_segment`` dispatch per shard (≈ t_bits/reduce_every segment
+    dispatches, one chain for the whole batch; a backend without the fused
+    segment op transparently steps per bit); each ``reduce_every`` boundary
+    is ONE degree-reduction re-share of the whole stacked carry —
+    re-sharing is the protocol's explicit communication round, so the carry
+    is reassembled across shards, reduced once, and re-sliced. Ledgers
+    record every query's own protocol cost exactly as a solo run (a
+    reduction is two logical rounds per query: one per subtraction, as in
+    the sequential transcript).
     """
+    plane = dataplane.as_dataplane(db)
+    db = plane.db
     t_bits_all = []
     for j in jobs:
         if j.column not in db.numeric:
@@ -524,31 +587,48 @@ def range_phase(be, db: SecretSharedDB, jobs: Sequence[RangeJob]) -> Shares:
     lhs = jnp.concatenate([jnp.broadcast_to(a_all, shape), x.values], axis=1)
     rhs = jnp.concatenate([x.values, jnp.broadcast_to(b_all, shape)], axis=1)
 
-    step = _ripple_stepper(be)
-    rb, carry = step(lhs[..., 0], rhs[..., 0], None)
-    # the result bit leaves each step at the carry's (post-step) degree
-    carry_deg = 2 * d
-    for i in range(1, t_bits):
-        if reduce_every and carry_deg > 1 and i % reduce_every == 0:
+    segment = _ripple_segmenter(be)
+    shards = plane.shards
+    lhs_parts = [lhs[:, :, sh.lo:sh.hi] for sh in shards]
+    rhs_parts = [rhs[:, :, sh.lo:sh.hi] for sh in shards]
+    carries: List[Optional[jax.Array]] = [None] * len(shards)
+    rb_parts: List[jax.Array] = []
+    carry_deg = 0
+    for seg_i, (s0, s1) in enumerate(_segment_edges(t_bits, reduce_every)):
+        if seg_i > 0 and carry_deg > 1:
+            # degree reduction = the explicit re-sharing round: reassemble
+            # the carry across shards, reduce ONCE, re-slice per shard.
+            carry_full = (carries[0] if len(shards) == 1
+                          else jnp.concatenate(carries, axis=2))
             red_key, sub = jax.random.split(red_key)
-            carry = shamir.reduce_degree(sub, Shares(carry, carry_deg),
-                                         target_degree=1).values
+            carry_full = shamir.reduce_degree(
+                sub, Shares(carry_full, carry_deg), target_degree=1).values
             carry_deg = 1
+            carries = [carry_full[:, :, sh.lo:sh.hi] for sh in shards]
             for j in jobs:
                 j.ledger.round(2)
                 j.ledger.send(2 * c * c)
-        rb, carry = step(lhs[..., i], rhs[..., i], carry)
-        carry_deg = carry_deg + 2 * d
+        # per-shard segment dispatch; the result bit leaves each step at
+        # the carry's (post-step) degree, +2d per bit position.
+        outs = plane.run_list(
+            lambda v, sh, s0=s0, s1=s1: segment(
+                lhs_parts[sh.index][..., s0:s1],
+                rhs_parts[sh.index][..., s0:s1], carries[sh.index]))
+        rb_parts = [o[0] for o in outs]
+        carries = [o[1] for o in outs]
+        carry_deg = carry_deg + 2 * d * (s1 - s0)
     for j in jobs:
         j.ledger.cloud(2 * n * t_bits)
 
+    rb = (rb_parts[0] if len(shards) == 1
+          else jnp.concatenate(rb_parts, axis=2))
     # Eq. 2: in-range ⟺ 1 − sign(x−a) − sign(b−x) = 1
     ind = field.sub(field.sub(jnp.ones((c, b, n), field.DTYPE),
                               rb[:, :b]), rb[:, b:])
     return Shares(ind, carry_deg)
 
 
-def range_rounds(be, db: SecretSharedDB, jobs: Sequence[RangeJob]
+def range_rounds(be, db: RelationLike, jobs: Sequence[RangeJob]
                  ) -> List[Union[int, List[int]]]:
     """COUNT / address discovery for B range predicates, rounds fused.
 
@@ -586,7 +666,7 @@ def range_rounds(be, db: SecretSharedDB, jobs: Sequence[RangeJob]
 # §3.2.2 Phase 2 — fused oblivious fetch for the whole batch
 # ---------------------------------------------------------------------------
 
-def fetch_fusion(be, db: SecretSharedDB, jobs: Sequence[FetchJob],
+def fetch_fusion(be, db: RelationLike, jobs: Sequence[FetchJob],
                  extras: Sequence[FetchEntry] = ()
                  ) -> Tuple[List[List[List[str]]], List[Shares]]:
     """The cross-group fetch: ONE share-space matmul for everything.
@@ -597,12 +677,17 @@ def fetch_fusion(be, db: SecretSharedDB, jobs: Sequence[FetchJob],
     block — AND every extra row-block (e.g. a PK/FK join's transposed
     match matrix) are stacked
     row-wise so the cloud performs a single (ΣR × n) @ (n × mWA) fused
-    fetch. The user then interpolates all job tuples in one pass and splits
-    them back per query; extras come back *still in share form* — their
-    protocol (re-randomization, layer-2 hand-off, …) continues outside.
+    fetch. On a sharded dataplane the contraction axis n splits per shard —
+    one (ΣR × n_s) @ (n_s × mWA) dispatch each, partial products summing
+    additively in F_p. The user then interpolates all job tuples in one
+    pass and splits them back per query; extras come back *still in share
+    form* — their protocol (re-randomization, layer-2 hand-off, …)
+    continues outside.
     """
     if not jobs and not extras:
         return [], []
+    plane = dataplane.as_dataplane(db)
+    db = plane.db
     codec = db.codec
     n = db.n_tuples
     ellps = []
@@ -614,10 +699,11 @@ def fetch_fusion(be, db: SecretSharedDB, jobs: Sequence[FetchJob],
         m_sh = _share_one_hot(j.key, db, j.addresses, ellp)     # (c, ℓ', n)
         mats.append(m_sh.values)
     stacked = jnp.concatenate(mats + [e.values for e in extras], axis=1)
-    rel = db.relation.values                                   # (c,n,m,W,A)
-    c, _, m, w, a = rel.shape
-    rel_flat = rel.reshape(c, n, m * w * a)
-    fetched_flat = be.ss_matmul(stacked, rel_flat)             # ONE dispatch
+    c, _, m, w, a = db.relation.values.shape
+    fetched_flat = plane.run_sum(                   # ONE dispatch per shard
+        lambda v, sh: be.ss_matmul(
+            stacked[:, :, sh.lo:sh.hi],
+            v.relation.values.reshape(c, sh.n_tuples, m * w * a)))
 
     results: List[List[List[str]]] = []
     job_rows = sum(ellps)
@@ -667,29 +753,54 @@ def rerandomize(key: jax.Array, s: Shares) -> Shares:
     return s + zero
 
 
-def join_match_round(be, db: SecretSharedDB, jobs: Sequence[JoinJob]
+def join_match_round(be, db: RelationLike, jobs: Sequence[JoinJob]
                      ) -> List[FetchEntry]:
-    """Cloud step 1 of B PK/FK joins: per-join match matrices, transposed
-    into :class:`FetchEntry` rows for the shared :func:`fetch_fusion`
-    matmul (reducer j's Σ_i M[i,j]·X_i is a row-block of the same fused
-    fetch the selection groups ride)."""
-    entries: List[FetchEntry] = []
+    """Cloud step 1 of B PK/FK joins: match matrices, transposed into
+    :class:`FetchEntry` rows for the shared :func:`fetch_fusion` matmul
+    (reducer j's Σ_i M[i,j]·X_i is a row-block of the same fused fetch the
+    selection groups ride).
+
+    Jobs whose right relations have equal size (and sharing degree) stack
+    into ONE ``(c, B, nx, ny)`` ``match_matrix_batch`` dispatch per shard —
+    mirroring ``aa_match_batch`` for predicates — instead of one
+    ``match_matrix`` dispatch per job. Left columns slice per tuple-axis
+    shard and the match rows concatenate back along nx.
+    """
+    if not jobs:
+        return []
+    plane = dataplane.as_dataplane(db)
+    db = plane.db
     codec = db.codec
     w_len, a_len = codec.word_length, codec.alphabet_size
-    for j in jobs:
-        bx = db.column(j.col_x)                      # (c, nx, W, A)
-        by = j.right.column(j.col_y)                 # (c, ny, W, A)
-        M = match_matrix_shares(be, bx, by)          # (c, nx, ny)
-        j.ledger.cloud(db.n_tuples * j.right.n_tuples * w_len * a_len)
-        entries.append(FetchEntry(jnp.swapaxes(M.values, -1, -2), M.degree))
+    matcher = _batched_match_matrix(be)
+    entries: List[Optional[FetchEntry]] = [None] * len(jobs)
+    groups: Dict[tuple, List[Tuple[int, Shares]]] = {}
+    for i, j in enumerate(jobs):
+        by = j.right.column(j.col_y)
+        groups.setdefault((by.values.shape, by.degree), []).append((i, by))
+    for (_, by_deg), members in groups.items():
+        idxs = [i for i, _ in members]
+        by_stack = jnp.stack([by.values for _, by in members],
+                             axis=1)                    # (c, B, ny, W, A)
+        cols_x = [jobs[i].col_x for i in idxs]
+        m_vals = plane.run_concat(
+            lambda v, sh: matcher(
+                jnp.stack([v.column(cx).values for cx in cols_x], axis=1),
+                by_stack), axis=2)                      # (c, B, nx, ny)
+        deg = (db.relation.degree + by_deg) * w_len
+        for k, i in enumerate(idxs):
+            j = jobs[i]
+            j.ledger.cloud(db.n_tuples * j.right.n_tuples * w_len * a_len)
+            entries[i] = FetchEntry(jnp.swapaxes(m_vals[:, k], -1, -2), deg)
     return entries
 
 
-def join_emit_round(db: SecretSharedDB, jobs: Sequence[JoinJob],
+def join_emit_round(db: RelationLike, jobs: Sequence[JoinJob],
                     fetched: Sequence[Shares]) -> List[List[List[str]]]:
     """User/cloud step 2 of B PK/FK joins: re-randomize the fetched parent
     halves, ship both halves, interpolate ALL jobs' tuples in one fused user
     step per degree class, decode and drop dangling children."""
+    db = dataplane.as_dataplane(db).db
     codec = db.codec
     w_len, a_len = codec.word_length, codec.alphabet_size
     c, nx, mx = db.n_shares, db.n_tuples, db.n_attrs
@@ -745,7 +856,7 @@ def _one_hot_fetch_shares(key: jax.Array, db: SecretSharedDB,
     return m_sh
 
 
-def equijoin_rounds(be, db: SecretSharedDB, jobs: Sequence[EquiJob]
+def equijoin_rounds(be, db: RelationLike, jobs: Sequence[EquiJob]
                     ) -> List[List[List[str]]]:
     """§3.3.2 equijoins over a batch, every phase fused.
 
@@ -753,13 +864,16 @@ def equijoin_rounds(be, db: SecretSharedDB, jobs: Sequence[EquiJob]
     ONE interpolation pass per degree class opens them all. Phase 2: every
     (job, common-value) pair — including the ``padded_values`` fake jobs
     that hide k — builds its two layer-1 one-hot matrices; all X-side
-    matrices multiply the client relation in ONE ``ss_matmul``, Y-side
+    matrices multiply the client relation in ONE ``ss_matmul`` per
+    tuple-axis shard (partial contractions summing additively), Y-side
     matrices fuse per distinct right relation. Phase 3: layer 2 emits the
     ℓx×ℓy concatenations; the user interpolates all real pairs in one fused
     pass per degree class. Ledgers stay bit-identical to the sequential
     per-value transcript (Thm 6's 2k rounds each)."""
     if not jobs:
         return []
+    plane = dataplane.as_dataplane(db)
+    db = plane.db
     codec = db.codec
     w_len, a_len = codec.word_length, codec.alphabet_size
     c, nx, mx = db.n_shares, db.n_tuples, db.n_attrs
@@ -804,9 +918,11 @@ def equijoin_rounds(be, db: SecretSharedDB, jobs: Sequence[EquiJob]
 
     if not specs:       # every job had zero common values and no padding
         return [[] for _ in jobs]
-    rel_x_flat = db.relation.values.reshape(c, nx, -1)
     x_stack = jnp.concatenate([s[4].values for s in specs], axis=1)
-    x_fetched = be.ss_matmul(x_stack, rel_x_flat)    # ONE X-side dispatch
+    x_fetched = plane.run_sum(          # ONE X-side dispatch per shard
+        lambda v, sh: be.ss_matmul(
+            x_stack[:, :, sh.lo:sh.hi],
+            v.relation.values.reshape(c, sh.n_tuples, -1)))
     y_by_right: Dict[int, List[int]] = {}
     for i, s in enumerate(specs):
         y_by_right.setdefault(id(s[0].right), []).append(i)

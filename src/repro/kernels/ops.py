@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from .aa_match import aa_match_batch_pallas, aa_match_pallas
-from .ripple import ripple_carry_pallas
+from .ripple import ripple_carry_pallas, ripple_segment_pallas
 from .ss_matmul import ss_matmul_pallas
 
 
@@ -116,6 +116,27 @@ def ripple_carry(a: jax.Array, b: jax.Array, carry=None):
     return rb.reshape(shape), co.reshape(shape)
 
 
+def ripple_segment(a: jax.Array, b: jax.Array, carry=None):
+    """k chained SS-SUB bit steps (Alg 6) in ONE pallas dispatch.
+
+    a, b: (..., k) uint32 bit planes (last axis = consecutive bit
+    positions); carry: (...) or ``None`` when the chain starts at the LSB.
+    Returns the final ``(rb, carry')`` after k steps, each shaped (...).
+    The carry chains in registers inside the kernel, so a degree-reduction
+    interval of k bits costs one launch instead of k."""
+    interp = _interpret()
+    shape = a.shape[:-1]
+    k = a.shape[-1]
+    flat_a = jnp.moveaxis(a.reshape(-1, k), -1, 0)     # (k, N)
+    flat_b = jnp.moveaxis(b.reshape(-1, k), -1, 0)
+    init = carry is None
+    flat_c = (jnp.zeros(flat_a.shape[1:], flat_a.dtype) if init
+              else carry.reshape(-1))
+    rb, co = ripple_segment_pallas(flat_a, flat_b, flat_c, init=init,
+                                   interpret=interp)
+    return rb.reshape(shape), co.reshape(shape)
+
+
 @jax.jit
 def match_matrix(col_x: jax.Array, col_y: jax.Array) -> jax.Array:
     """All-pairs word match (join §3.3.1 hotspot) via per-position ss_matmul.
@@ -133,6 +154,18 @@ def match_matrix(col_x: jax.Array, col_y: jax.Array) -> jax.Array:
     return acc
 
 
+@jax.jit
+def match_matrix_batch(col_x: jax.Array, col_y: jax.Array) -> jax.Array:
+    """Stacked all-pairs match for a join group: col_x (c, B, nx, W, A),
+    col_y (c, B, ny, W, A) -> (c, B, nx, ny). One vmapped composite over
+    the group's B column pairs (each inner hop is the ss_matmul kernel), so
+    equal-size right relations ride one dispatch like ``aa_match_batch``
+    does for predicates."""
+    if col_x.ndim != 5 or col_y.ndim != 5:
+        raise ValueError(f"unsupported ranks: {col_x.shape}, {col_y.shape}")
+    return jax.vmap(match_matrix, in_axes=1, out_axes=1)(col_x, col_y)
+
+
 def as_backend():
     """Bundle these kernels as the ``"pallas"`` entry of the backend
     registry (``repro.api.backends``) — the query suite selects them with
@@ -140,4 +173,6 @@ def as_backend():
     from ..api.backends import Backend  # local import to avoid cycle
     return Backend(name="pallas", aa_match=aa_match, ss_matmul=ss_matmul,
                    match_matrix=match_matrix, aa_match_batch=aa_match_batch,
-                   ripple_carry=ripple_carry)
+                   ripple_carry=ripple_carry,
+                   ripple_segment=ripple_segment,
+                   match_matrix_batch=match_matrix_batch)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused SS-SUB ripple bit step (paper §3.4, Alg 6).
+"""Pallas TPU kernels: fused SS-SUB ripple steps (paper §3.4, Alg 6).
 
 One bit position of the two's-complement ripple subtract over secret-shared
 bit planes. For every lane (one share of one query-direction of one tuple):
@@ -15,10 +15,17 @@ subtrahend bit is inverted there too).
 Six fused elementwise mod-p ops per lane — unbatched, B queries would pay B
 tiny dispatches per bit; the batched range engine stacks the whole query
 batch (both subtraction directions of Eq. 2) into one (c·2B·n) plane and
-issues this kernel ONCE per bit-round. Purely a VPU workload: same
-16-bit-limb Mersenne-31 arithmetic as ss_matmul, 1-D grid over flattened
-lanes, both outputs written in the same pass (the carry never round-trips
-to HBM between the xor/propagate sub-steps).
+issues :func:`ripple_carry_pallas` ONCE per bit-round. Purely a VPU
+workload: same 16-bit-limb Mersenne-31 arithmetic as ss_matmul, 1-D grid
+over flattened lanes, both outputs written in the same pass (the carry
+never round-trips to HBM between the xor/propagate sub-steps).
+
+:func:`ripple_segment_pallas` goes one step further: the k bit positions
+*between* two degree-reduction boundaries chain inside ONE kernel — the
+carry lives in registers across all k steps and only the final (rb, carry)
+pair is written back, so a ``reduce_every=k`` range group pays ~t/k
+dispatches instead of t. Layout is (k, N): bit position on the sublane
+axis, flattened lanes on the 128-wide lane axis.
 """
 from __future__ import annotations
 
@@ -77,3 +84,55 @@ def ripple_carry_pallas(a: jax.Array, b: jax.Array, carry: jax.Array, *,
         interpret=interpret,
     )(jnp.pad(a, pad), jnp.pad(b, pad), jnp.pad(carry, pad))
     return out[0][:n], out[1][:n]
+
+
+def _ripple_segment_kernel(a_ref, b_ref, c_ref, rb_ref, co_ref, *,
+                           k: int, init: bool):
+    """Chain k ripple bit steps; carry stays in registers between steps."""
+    carry = c_ref[0, :]
+    rb = carry
+    for i in range(k):
+        a = a_ref[i, :]
+        b = b_ref[i, :]
+        ai = _submod(jnp.ones_like(a), a)
+        ab = _mulmod(ai, b)
+        s = _addmod(ai, b)
+        if init and i == 0:
+            carry = _submod(s, ab)
+            rb = _submod(s, _addmod(carry, carry))
+        else:
+            x = _submod(s, _addmod(ab, ab))
+            cx = _mulmod(carry, x)
+            rb = _submod(_addmod(x, carry), _addmod(cx, cx))
+            carry = _addmod(ab, cx)
+    rb_ref[0, :] = rb
+    co_ref[0, :] = carry
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "init", "interpret"))
+def ripple_segment_pallas(a: jax.Array, b: jax.Array, carry: jax.Array, *,
+                          bn: int = 4096, init: bool = False,
+                          interpret: bool = True):
+    """a, b: (k, N) bit planes (k = consecutive bit positions, N flattened
+    lanes); carry: (N,) -> final ``(rb, carry')`` each (N,) after k chained
+    steps in ONE kernel launch.
+
+    ``init=True`` makes step 0 the LSB two's-complement step (``carry`` is
+    ignored but must be passed — zeros are fine)."""
+    k, n = a.shape
+    bn = min(bn, _round_up(max(n, 1), 8))
+    n_pad = _round_up(max(n, 1), bn)
+    pad2 = ((0, 0), (0, n_pad - n))
+    pad1 = ((0, n_pad - n),)
+    out = pl.pallas_call(
+        functools.partial(_ripple_segment_kernel, k=k, init=init),
+        grid=(n_pad // bn,),
+        in_specs=[pl.BlockSpec((k, bn), lambda i: (0, i)),
+                  pl.BlockSpec((k, bn), lambda i: (0, i)),
+                  pl.BlockSpec((1, bn), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((1, bn), lambda i: (0, i))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((1, n_pad), jnp.uint32)] * 2,
+        interpret=interpret,
+    )(jnp.pad(a, pad2), jnp.pad(b, pad2),
+      jnp.pad(carry, pad1).reshape(1, n_pad))
+    return out[0][0, :n], out[1][0, :n]

@@ -5,33 +5,49 @@ but real: fixed-capacity batch slots, greedy sampling, per-slot lengths,
 jitted prefill and decode steps. The decode step is the same function the
 dry-run lowers for the decode_32k / long_500k cells.
 
-``QueryServer`` — the paper-workload analog rebuilt as a *micro-batching
-scheduler*: logical query plans (``repro.api.plans``) are enqueued with
-``submit``; each ``pump`` drains up to ``max_batch`` waiting requests and
-hands them to ``QueryClient.run_batch``, which groups compatible strategies
-and executes every protocol round once for the whole group — including
-range traffic (one fused SS-SUB ripple per (bit-width, reduce_every)
-group) and join traffic (PK/FK match matrices ride the batch's single
+``QueryServer`` — the paper-workload analog rebuilt as a *deadline-batched
+async scheduler over a sharded dataplane*: logical query plans
+(``repro.api.plans``) are enqueued with ``submit`` (thread-safe; each
+request carries a ``wait()``-able completion event); the background
+scheduler thread (``start``/``stop``) parks submissions up to
+``max_wait_ms`` to fill ``max_batch``, then closes the batch — by *fill*
+when the queue reaches ``max_batch``, by *deadline* when the oldest
+request's wait expires — and runs the whole group through
+``QueryClient.run_batch``, which groups compatible strategies and executes
+every protocol round once for the whole group — including range traffic
+(one fused SS-SUB ripple segment per degree-reduction interval per
+(bit-width, reduce_every) group) and join traffic (equal-size PK/FK match
+matrices stack into one batched dispatch and ride the batch's single
 cross-group fetch ``ss_matmul``; equijoins fuse per phase), so a mixed
-live queue pays one dispatch per round, not one per request. Per-request
-latency (enqueue → result), batch/throughput counters and a per-family
-served breakdown are kept in ``ServeStats``. Per-request keys derive from
-the client's root key; an optional ``MapReduceExecutor`` fans each
-cloud-side map phase (including the fused batch dispatch) out over
-fault-tolerant worker splits.
+live queue pays one dispatch set per round, not one per request. With
+``shards=S`` the relation is attached as a ``ShardedRelation`` and every
+cloud step fans out S tuple-axis shard dispatches, executed concurrently
+on a thread pool (results stay bit-identical — mod-p reduction is exact).
+
+Per-request latency (enqueue → result), queue-wait and batch-fill
+histograms, close-reason counters, batch/throughput counters and a
+per-family served breakdown are kept in ``ServeStats``. Per-request keys
+derive from the client's root key in pop order; an optional
+``MapReduceExecutor`` fans each cloud-side map phase (including the fused
+batch dispatch) out over fault-tolerant worker splits. The synchronous
+``pump``/``serve`` surface is unchanged — the scheduler thread is the same
+``pump`` driven by a deadline instead of by the caller.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..api import MapReduceExecutor, Plan, QueryClient, QueryResult
+from ..core.dataplane import (Dispatcher, ShardedRelation,
+                              ThreadedDispatcher)
 from ..core.engine import SecretSharedDB
 from ..models import decode_step, init_cache, prefill
 from ..models.config import ModelConfig
@@ -92,6 +108,18 @@ class QueryRequest:
     error: Optional[Exception] = None
     latency_s: float = 0.0           # enqueue -> result available
     enqueued_at: float = 0.0
+    queue_wait_s: float = 0.0        # enqueue -> batch close
+    _done: threading.Event = dataclasses.field(
+        default_factory=threading.Event, repr=False, compare=False)
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> "QueryRequest":
+        """Block until the scheduler finished this request (async mode)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request not served within {timeout}s")
+        return self
 
 
 #: latency samples kept for quantile estimates (a sliding window, so a
@@ -107,15 +135,28 @@ def plan_family(plan: Plan) -> str:
             "Join": "join"}.get(name, name.lower())
 
 
+def _quantile(xs, q: float) -> float:
+    if not xs:
+        return 0.0
+    s = sorted(xs)
+    return s[min(len(s) - 1, int(q * len(s)))]
+
+
 @dataclasses.dataclass
 class ServeStats:
-    """Aggregate micro-batching telemetry (reset with ``QueryServer.reset``)."""
+    """Aggregate scheduling telemetry (reset with ``QueryServer.reset``)."""
     served: int = 0
     failed: int = 0
     batches: int = 0
     busy_s: float = 0.0              # wall time spent inside run_batch
     latencies_s: "Deque[float]" = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+    queue_waits_s: "Deque[float]" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+    batch_fill: Dict[int, int] = dataclasses.field(
+        default_factory=dict)       # batch size -> how many batches
+    closes: Dict[str, int] = dataclasses.field(
+        default_factory=dict)       # why batches closed: full/deadline/...
     served_by_family: Dict[str, int] = dataclasses.field(
         default_factory=dict)       # which protocol groups the traffic hits
 
@@ -128,10 +169,15 @@ class ServeStats:
         return self.served / self.busy_s if self.busy_s > 0 else 0.0
 
     def latency_quantile(self, q: float) -> float:
-        if not self.latencies_s:
-            return 0.0
-        xs = sorted(self.latencies_s)
-        return xs[min(len(xs) - 1, int(q * len(xs)))]
+        return _quantile(self.latencies_s, q)
+
+    def queue_wait_quantile(self, q: float) -> float:
+        return _quantile(self.queue_waits_s, q)
+
+    def record_batch(self, fill: int, reason: str) -> None:
+        self.batches += 1
+        self.batch_fill[fill] = self.batch_fill.get(fill, 0) + 1
+        self.closes[reason] = self.closes.get(reason, 0) + 1
 
     def as_dict(self) -> dict:
         return dict(served=self.served, failed=self.failed,
@@ -140,38 +186,80 @@ class ServeStats:
                     busy_s=self.busy_s, throughput_qps=self.throughput_qps,
                     p50_latency_s=self.latency_quantile(0.50),
                     p95_latency_s=self.latency_quantile(0.95),
+                    p50_queue_wait_s=self.queue_wait_quantile(0.50),
+                    p95_queue_wait_s=self.queue_wait_quantile(0.95),
+                    batch_fill=dict(self.batch_fill),
+                    closes=dict(self.closes),
                     served_by_family=dict(self.served_by_family))
 
 
 class QueryServer:
-    """Micro-batching scheduler for query plans over one shared relation.
+    """Deadline-batched scheduler for query plans over one shared relation.
 
-    ``submit`` enqueues; ``pump`` drains one micro-batch (≤ ``max_batch``)
+    ``submit`` enqueues (thread-safe; the returned request is
+    ``wait()``-able); ``pump`` drains one micro-batch (≤ ``max_batch``)
     through ``QueryClient.run_batch`` — the client groups compatible
     strategies so each protocol round is issued once per group, not once
-    per request. ``serve`` is the synchronous convenience loop: enqueue
-    everything, pump until the queue is dry.
+    per request. Two driving modes:
+
+      * synchronous — the caller pumps (``serve`` is the convenience loop:
+        enqueue everything, pump until the queue is dry);
+      * async — ``start()`` spawns the scheduler thread: submissions park
+        up to ``max_wait_ms`` to fill ``max_batch``, then the batch closes
+        (by *fill* or by *deadline* — counted in ``stats.closes``) and
+        runs. ``stop()`` drains and joins. The server is a context
+        manager: ``with QueryServer(..., max_wait_ms=5) as srv: ...``.
+
+    ``shards=S`` attaches the relation as a tuple-axis
+    :class:`ShardedRelation` whose per-shard cloud dispatches run
+    concurrently on a thread pool (pass ``dispatcher=`` to override the
+    placement policy, e.g. ``MapReduceExecutor.dispatcher()``). Sharding
+    and batching are both pure execution policy — results and ledgers are
+    bit-identical to a solo, unsharded client.
     """
 
-    def __init__(self, db: SecretSharedDB, key, *, backend="jnp",
+    def __init__(self, db: Union[SecretSharedDB, ShardedRelation], key, *,
+                 backend="jnp",
                  executor: Optional[MapReduceExecutor] = None,
-                 max_batch: int = 32):
+                 max_batch: int = 32,
+                 max_wait_ms: float = 20.0,
+                 shards: int = 1,
+                 dispatcher: Optional[Dispatcher] = None):
         self.client = QueryClient(db, key, backend=backend,
                                   executor=executor)
+        self._owned_dispatcher: Optional[ThreadedDispatcher] = None
+        if shards > 1 or dispatcher is not None:
+            if dispatcher is None:
+                plane = self.client.dataplane
+                workers = max(shards, plane.n_shards if plane else 1)
+                dispatcher = self._owned_dispatcher = ThreadedDispatcher(
+                    max_workers=workers)
+            self.client.attach(shards=shards, dispatcher=dispatcher)
         self.max_batch = max(1, max_batch)
+        self.max_wait_ms = max(0.0, max_wait_ms)
         self.stats = ServeStats()
         self._queue: Deque[QueryRequest] = collections.deque()
+        self._cond = threading.Condition()
+        self._pump_lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._stopping = False
+
+    @property
+    def dataplane(self) -> Optional[ShardedRelation]:
+        return self.client.dataplane
 
     # -- scheduling ---------------------------------------------------------
     def submit(self, request: QueryRequest) -> QueryRequest:
         request.enqueued_at = time.time()
-        self._queue.append(request)
+        with self._cond:
+            self._queue.append(request)
+            self._cond.notify_all()
         return request
 
     def pending(self) -> int:
         return len(self._queue)
 
-    def pump(self) -> List[QueryRequest]:
+    def pump(self, reason: str = "manual") -> List[QueryRequest]:
         """Drain one micro-batch and execute it; returns finished requests.
 
         Fault isolation: a plan that raises (bad cardinality hint, invalid
@@ -179,42 +267,120 @@ class QueryServer:
         failure the micro-batch is re-run per request and only the
         offending request(s) carry ``error`` (result stays None).
         """
-        batch: List[QueryRequest] = []
-        while self._queue and len(batch) < self.max_batch:
-            batch.append(self._queue.popleft())
-        if not batch:
-            return []
-        t0 = time.time()
-        try:
-            outcomes = self.client.run_batch([r.plan for r in batch])
-        except Exception:  # noqa: BLE001 — isolate the failing request(s)
-            outcomes = []
+        with self._pump_lock:
+            with self._cond:
+                batch: List[QueryRequest] = []
+                while self._queue and len(batch) < self.max_batch:
+                    batch.append(self._queue.popleft())
+            if not batch:
+                return []
+            t0 = time.time()
             for r in batch:
-                try:
-                    outcomes.append(self.client.run_batch([r.plan])[0])
-                except Exception as e:  # noqa: BLE001
-                    outcomes.append(e)
-        t1 = time.time()
-        for r, res in zip(batch, outcomes):
-            if isinstance(res, Exception):
-                r.error = res
-                self.stats.failed += 1
-            else:
-                r.result = res
-                self.stats.served += 1
-                fam = plan_family(r.plan)
-                self.stats.served_by_family[fam] = \
-                    self.stats.served_by_family.get(fam, 0) + 1
-            r.latency_s = t1 - (r.enqueued_at or t0)
-            self.stats.latencies_s.append(r.latency_s)
-        self.stats.batches += 1
-        self.stats.busy_s += t1 - t0
-        return batch
+                r.queue_wait_s = t0 - (r.enqueued_at or t0)
+                self.stats.queue_waits_s.append(r.queue_wait_s)
+            try:
+                outcomes = self.client.run_batch([r.plan for r in batch])
+            except Exception:  # noqa: BLE001 — isolate failing request(s)
+                outcomes = []
+                for r in batch:
+                    try:
+                        outcomes.append(self.client.run_batch([r.plan])[0])
+                    except Exception as e:  # noqa: BLE001
+                        outcomes.append(e)
+            t1 = time.time()
+            for r, res in zip(batch, outcomes):
+                if isinstance(res, Exception):
+                    r.error = res
+                    self.stats.failed += 1
+                else:
+                    r.result = res
+                    self.stats.served += 1
+                    fam = plan_family(r.plan)
+                    self.stats.served_by_family[fam] = \
+                        self.stats.served_by_family.get(fam, 0) + 1
+                r.latency_s = t1 - (r.enqueued_at or t0)
+                self.stats.latencies_s.append(r.latency_s)
+                r._done.set()
+            self.stats.record_batch(len(batch), reason)
+            self.stats.busy_s += t1 - t0
+            return batch
+
+    # -- async driver -------------------------------------------------------
+    def start(self) -> "QueryServer":
+        """Spawn the deadline-batching scheduler thread (idempotent)."""
+        with self._cond:
+            if self._thread is not None:
+                return self
+            self._stopping = False
+            self._thread = threading.Thread(target=self._scheduler_loop,
+                                            name="query-server",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the scheduler thread; ``drain`` pumps the queue dry first."""
+        with self._cond:
+            thread = self._thread
+            self._stopping = True
+            self._cond.notify_all()
+        if thread is not None:
+            thread.join()
+        with self._cond:
+            self._thread = None
+        while drain and self._queue:
+            self.pump("drain")
+
+    def close(self) -> None:
+        """Stop the scheduler and release the server-owned shard pool.
+
+        Terminal: after ``close()`` the server's own ThreadedDispatcher
+        falls back to serial shard execution (still correct) if reused.
+        """
+        self.stop()
+        if self._owned_dispatcher is not None:
+            self._owned_dispatcher.close()
+
+    def __enter__(self) -> "QueryServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _scheduler_loop(self) -> None:
+        wait_s = self.max_wait_ms / 1e3
+        while True:
+            with self._cond:
+                while not self._queue and not self._stopping:
+                    self._cond.wait()       # submit()/stop() notify
+                if self._stopping:
+                    return
+                # park until the batch fills or the OLDEST submission's
+                # deadline expires — latency is bounded by max_wait_ms,
+                # fusion is bounded by max_batch.
+                deadline = self._queue[0].enqueued_at + wait_s
+                while (len(self._queue) < self.max_batch
+                       and not self._stopping):
+                    remaining = deadline - time.time()
+                    if remaining <= 0:
+                        break
+                    self._cond.wait(remaining)
+                reason = ("full" if len(self._queue) >= self.max_batch
+                          else "deadline")
+            self.pump(reason)
 
     def serve(self, requests: Sequence[QueryRequest]) -> List[QueryRequest]:
-        """Enqueue ``requests`` and pump until everything is answered."""
+        """Enqueue ``requests`` and finish them all.
+
+        With the scheduler running this blocks on the requests' completion
+        events; otherwise it pumps inline until the queue is dry.
+        """
         for r in requests:
             self.submit(r)
+        if self._thread is not None:
+            for r in requests:
+                r.wait()
+            return list(requests)
         done: List[QueryRequest] = []
         while self._queue:
             done += self.pump()

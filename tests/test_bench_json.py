@@ -41,13 +41,17 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
     monkeypatch.setattr(
         bq, "bench_batched_vs_sequential",
         lambda **kw: real_sweep(batch_sizes=(2,), n=16))
+    real_sharded = bq.bench_sharded_dataplane
+    monkeypatch.setattr(
+        bq, "bench_sharded_dataplane",
+        lambda **kw: real_sharded(n=16, batch=4, shard_counts=(1, 2)))
     out = tmp_path / "BENCH_queries.json"
     bq.main(["--smoke", "--out", str(out)])
 
     doc = json.loads(out.read_text())
     assert doc["schema"] == "bench_queries/v1"
     assert doc["smoke"] is True
-    assert doc["results"] and doc["batched"]
+    assert doc["results"] and doc["batched"] and doc["sharded"]
     for row in doc["results"]:
         assert {"bench", "name", "n", "us_per_call", "comm_bits", "rounds",
                 "cloud_bits", "user_bits", "paper_claim"} <= set(row)
@@ -56,6 +60,17 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
         assert {"name", "n", "batch", "seq_us", "batch_us", "speedup",
                 "rounds", "comm_bits", "ledger_equal"} <= set(row)
         assert row["ledger_equal"] is True
+    rounds = set()
+    for row in doc["sharded"]:
+        assert {"name", "n", "batch", "shards", "dispatches", "steps",
+                "shard_rows", "rounds", "comm_bits",
+                "ledger_equal"} <= set(row)
+        assert row["ledger_equal"] is True
+        # S blocks of ceil(n/S) tuples, one dispatch per shard per step
+        assert row["shard_rows"] == -(-row["n"] // row["shards"])
+        assert row["dispatches"] == row["steps"] * row["shards"]
+        rounds.add(row["rounds"])
+    assert len(rounds) == 1          # rounds never move with S
     # the tiny sweep covers all three batched families
     names = {row["name"] for row in doc["batched"]}
     assert {"batched_range", "batched_join_pkfk"} <= names
@@ -139,3 +154,82 @@ def test_compare_bench_rejects_unknown_schema(cb, tmp_path):
     doc["schema"] = "bench_queries/v0"
     assert cb.main([_write(tmp_path, "bad.json", doc),
                     _write(tmp_path, "ok.json", _doc())]) == 2
+
+
+# ---------------------------------------------------------------------------
+# sharded section gating
+# ---------------------------------------------------------------------------
+
+def _sharded_doc():
+    doc = _doc()
+    doc["sharded"] = [
+        {"name": "sharded_batch", "n": 16, "batch": 4, "shards": 2,
+         "dispatches": 12, "steps": 6, "shard_rows": 8, "wall_us": 10,
+         "rounds": 13, "comm_bits": 9000, "ledger_equal": True},
+    ]
+    return doc
+
+
+def test_compare_bench_gates_sharded_costs(cb, tmp_path):
+    new = _write(tmp_path, "s_new.json", _sharded_doc())
+    old = _write(tmp_path, "s_old.json", _sharded_doc())
+    assert cb.main([new, old]) == 0
+    # cost increase in the sharded sweep is a regression
+    doc = _sharded_doc()
+    doc["sharded"][0]["comm_bits"] += 31
+    assert cb.main([_write(tmp_path, "s_up.json", doc), old]) == 1
+    # broken transcript identity is a regression
+    doc = _sharded_doc()
+    doc["sharded"][0]["ledger_equal"] = False
+    assert cb.main([_write(tmp_path, "s_bad.json", doc), old]) == 1
+    # an OLD baseline without the section is not a "vanished config"
+    assert cb.main([new, _write(tmp_path, "s_v1.json", _doc())]) == 0
+
+
+# ---------------------------------------------------------------------------
+# BENCH trajectory history (bench_history/v1)
+# ---------------------------------------------------------------------------
+
+def test_history_appends_schema_versioned_series(cb, tmp_path):
+    hist_path = tmp_path / "BENCH_history.json"
+    new = _write(tmp_path, "h_new.json", _sharded_doc())
+    # first run: no baseline needed, file created
+    assert cb.main([new, "--append-history", str(hist_path),
+                    "--history-label", "pr-4"]) == 0
+    # second run chains onto the same file (with a compare this time)
+    old = _write(tmp_path, "h_old.json", _sharded_doc())
+    assert cb.main([new, old, "--append-history", str(hist_path),
+                    "--history-label", "pr-5"]) == 0
+    h = json.loads(hist_path.read_text())
+    assert h["schema"] == "bench_history/v1"
+    assert [r["label"] for r in h["runs"]] == ["pr-4", "pr-5"]
+    for run in h["runs"]:
+        assert run["table"]["bench_count/count_3.1/16"] == {
+            "rounds": 1, "comm_bits": 1000}
+        assert run["batched"]["batched_range/4/16"]["rounds"] == 13
+        assert run["sharded"]["sharded_batch/2/16"]["comm_bits"] == 9000
+    cb.validate_history(h)
+
+
+def test_history_validation_rejects_malformed(cb, tmp_path):
+    import pytest as _pytest
+    with _pytest.raises(ValueError):
+        cb.validate_history({"schema": "bench_history/v0", "runs": []})
+    with _pytest.raises(ValueError):
+        cb.validate_history({"schema": "bench_history/v1",
+                             "runs": [{"table": {}}]})   # no label
+    with _pytest.raises(ValueError):
+        cb.validate_history({"schema": "bench_history/v1", "runs": [
+            {"label": "x", "table": {"a/b/1": {"rounds": 1}}}]})  # no bits
+    # appending onto a corrupt history is refused, not silently rebuilt
+    bad = tmp_path / "bad_history.json"
+    bad.write_text(json.dumps({"schema": "nope", "runs": []}))
+    new = _write(tmp_path, "hv_new.json", _doc())
+    assert cb.main([new, "--append-history", str(bad)]) == 2
+
+
+def test_history_requires_baseline_or_history_flag(cb, tmp_path):
+    import pytest as _pytest
+    new = _write(tmp_path, "solo.json", _doc())
+    with _pytest.raises(SystemExit):
+        cb.main([new])

@@ -1,0 +1,209 @@
+"""Async QueryServer: deadline-batched scheduling over the shared relation.
+
+The scheduler thread parks submissions up to ``max_wait_ms`` to fill
+``max_batch`` and closes each batch by *fill* or by *deadline* — both paths
+must serve correct results, isolate faulting plans, and keep ``ServeStats``
+monotone under concurrent submitters.
+"""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.api import Count, Eq, Select
+from repro.core import Codec, outsource
+from repro.core.queries import CardinalityError
+from repro.launch.serve import QueryRequest, QueryServer
+
+CODEC = Codec(word_length=8)
+COLUMNS = ["EmployeeId", "FirstName", "LastName", "Salary", "Department"]
+EMPLOYEE = [
+    ["E101", "Adam", "Smith", "1000", "Sale"],
+    ["E102", "John", "Taylor", "2000", "Design"],
+    ["E103", "Eve", "Smith", "500", "Sale"],
+    ["E104", "John", "Williams", "5000", "Sale"],
+]
+
+
+@pytest.fixture(scope="module")
+def employee_db():
+    return outsource(jax.random.PRNGKey(7), EMPLOYEE, column_names=COLUMNS,
+                     codec=CODEC, n_shares=20, degree=1,
+                     numeric_columns={3: 14})
+
+
+def test_deadline_closes_partial_batch(employee_db):
+    """max_batch is far above the traffic: the batch must close by the
+    oldest submission's deadline, not wait for fill."""
+    with QueryServer(employee_db, key=11, max_batch=64,
+                     max_wait_ms=25) as server:
+        reqs = [server.submit(QueryRequest(Count(Eq("FirstName", "John"))))
+                for _ in range(3)]
+        for r in reqs:
+            r.wait(timeout=30)
+    assert [r.result.count for r in reqs] == [2, 2, 2]
+    assert server.stats.closes.get("deadline", 0) >= 1
+    assert server.stats.closes.get("full", 0) == 0
+    assert all(r.queue_wait_s >= 0 for r in reqs)
+    assert len(server.stats.queue_waits_s) == 3
+    assert sum(server.stats.batch_fill.values()) == server.stats.batches
+
+
+def test_full_batch_closes_before_deadline(employee_db):
+    """With max_batch=2 and a long deadline, fill must close batches."""
+    with QueryServer(employee_db, key=12, max_batch=2,
+                     max_wait_ms=10_000) as server:
+        reqs = [server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+                for _ in range(4)]
+        for r in reqs:
+            r.wait(timeout=30)
+    assert all(r.result.count == 1 for r in reqs)
+    assert server.stats.closes.get("full", 0) >= 2
+    assert server.stats.batch_fill.get(2, 0) >= 2
+
+
+def test_async_results_match_sync_client(employee_db):
+    """The scheduler thread serves the same answers a synchronous client
+    derives for the same plans (keys assign in pop order, so compare
+    values, not transcripts)."""
+    plans = [Count(Eq("FirstName", "John")),
+             Select(Eq("Department", "Sale"), strategy="tree"),
+             Count(Eq("Department", "Design"))]
+    with QueryServer(employee_db, key=13, max_batch=8,
+                     max_wait_ms=15) as server:
+        reqs = [server.submit(QueryRequest(p)) for p in plans]
+        for r in reqs:
+            r.wait(timeout=30)
+    assert reqs[0].result.count == 2
+    assert len(reqs[1].result.rows) == 3
+    assert reqs[2].result.count == 1
+
+
+def test_async_soak_concurrent_submitters_stats_monotone(employee_db):
+    """Soak: several submitter threads race the scheduler; served counts
+    only grow, every request finishes exactly once, failures stay
+    isolated to the bad plans."""
+    server = QueryServer(employee_db, key=17, max_batch=4, max_wait_ms=5,
+                         shards=2)
+    server.start()
+    good_per_thread, n_threads = 6, 3
+    all_reqs = []
+    lock = threading.Lock()
+
+    def submitter(tid):
+        for i in range(good_per_thread):
+            plan = (Select(Eq("FirstName", "John"), strategy="one_tuple")
+                    if (tid == 0 and i == 2)     # ℓ=2 -> CardinalityError
+                    else Count(Eq("FirstName", "John")))
+            r = server.submit(QueryRequest(plan))
+            with lock:
+                all_reqs.append(r)
+            time.sleep(0.003)
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(n_threads)]
+    observed = []
+    for t in threads:
+        t.start()
+    while any(t.is_alive() for t in threads):
+        observed.append(server.stats.served)
+        time.sleep(0.002)
+    for t in threads:
+        t.join()
+    for r in all_reqs:
+        r.wait(timeout=60)
+    server.stop()
+    observed.append(server.stats.served)
+
+    total = good_per_thread * n_threads
+    assert len(all_reqs) == total
+    assert server.stats.served == total - 1
+    assert server.stats.failed == 1
+    # fault isolation: exactly the poisoned request errored
+    errored = [r for r in all_reqs if r.error is not None]
+    assert len(errored) == 1
+    assert isinstance(errored[0].error, CardinalityError)
+    good = [r for r in all_reqs if r.error is None]
+    assert all(r.result.count == 2 for r in good)
+    # stats monotonicity under concurrency
+    assert all(a <= b for a, b in zip(observed, observed[1:]))
+    assert server.stats.batches == sum(server.stats.batch_fill.values())
+    d = server.stats.as_dict()
+    assert d["served"] == total - 1 and d["closes"]
+
+
+def test_stop_drains_queue(employee_db):
+    server = QueryServer(employee_db, key=19, max_batch=4,
+                         max_wait_ms=10_000)
+    # no scheduler running: stop() must still drain pending work
+    reqs = [server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+            for _ in range(3)]
+    server.stop()
+    assert all(r.done() and r.result.count == 1 for r in reqs)
+    assert server.stats.closes.get("drain", 0) >= 1
+
+
+def test_start_is_idempotent_and_restartable(employee_db):
+    server = QueryServer(employee_db, key=21, max_batch=2, max_wait_ms=5)
+    server.start()
+    server.start()                               # no second thread
+    r = server.submit(QueryRequest(Count(Eq("FirstName", "Adam"))))
+    r.wait(timeout=30)
+    server.stop()
+    assert r.result.count == 1
+    # restart after stop
+    server.start()
+    r2 = server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+    r2.wait(timeout=30)
+    server.stop()
+    assert r2.result.count == 1
+
+
+def test_wait_timeout_raises(employee_db):
+    server = QueryServer(employee_db, key=23)    # scheduler not started
+    r = server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+    with pytest.raises(TimeoutError):
+        r.wait(timeout=0.01)
+    server.pump()
+    assert r.wait(timeout=1).result.count == 1
+
+
+def test_server_adopts_presharded_plane(employee_db):
+    """A ShardedRelation handed to the server keeps its partitioning, with
+    or without an explicit dispatcher; close() releases the owned pool."""
+    from repro.api import ShardedRelation, ThreadedDispatcher
+    plane = ShardedRelation(employee_db, shards=3)
+    srv = QueryServer(plane, key=5, max_wait_ms=5,
+                      dispatcher=ThreadedDispatcher(max_workers=3))
+    assert srv.dataplane.n_shards == 3
+    with srv:
+        r = srv.submit(QueryRequest(Count(Eq("FirstName", "John"))))
+        r.wait(timeout=30)
+    assert r.result.count == 2
+
+    srv2 = QueryServer(employee_db, key=5, max_wait_ms=5, shards=2)
+    assert srv2.dataplane.n_shards == 2
+    with srv2:
+        r2 = srv2.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+        r2.wait(timeout=30)
+    assert r2.result.count == 1
+    # __exit__ -> close(): the owned pool is released; a late pump still
+    # works (serial fallback)
+    assert srv2._owned_dispatcher is not None
+    r3 = srv2.submit(QueryRequest(Count(Eq("FirstName", "John"))))
+    srv2.pump()
+    assert r3.result.count == 2
+
+
+def test_sync_pump_surface_unchanged(employee_db):
+    """No scheduler thread: submit/pump/serve behave exactly as before."""
+    server = QueryServer(employee_db, key=2, max_batch=8)
+    assert server.pump() == []
+    server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+    server.submit(QueryRequest(Count(Eq("FirstName", "John"))))
+    assert server.pending() == 2
+    out = server.pump()
+    assert server.pending() == 0
+    assert [r.result.count for r in out] == [1, 2]
+    assert all(r.done() for r in out)
