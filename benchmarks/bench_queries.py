@@ -12,7 +12,9 @@ ledger equality while measuring the fusion speedup;
 ``bench_sharded_dataplane`` runs a mixed batch over ``ShardedRelation``
 (S ∈ {1,2,4}) and asserts the dataplane acceptance shape: bit-identical
 rows/ledgers, dispatch fan-out = steps × S over ceil(n/S)-tuple blocks,
-zero added rounds.
+zero added rounds; ``bench_multi_tenant_serving`` routes a mixed workload
+over two relations through ONE multi-tenant ``QueryServer`` and asserts
+it matches two solo single-relation servers bit for bit.
 
 Each table function returns rows of
   (name, n, us_per_call, comm_bits, rounds, cloud_bits, user_bits, claim)
@@ -35,8 +37,8 @@ from typing import List, Optional, Sequence
 
 import jax
 
-from repro.api import Between, DBStats, Join, QueryClient, RangeCount, \
-    RangeSelect, Select, Eq, Padding, choose_select_strategy
+from repro.api import Between, Count, DBStats, Join, QueryClient, \
+    RangeCount, RangeSelect, Select, Eq, Padding, choose_select_strategy
 from repro.core import outsource, Codec
 from repro.data import synthetic_relation
 
@@ -341,6 +343,67 @@ def bench_sharded_dataplane(*, n: int = 128, batch: int = 8,
     return out
 
 
+def bench_multi_tenant_serving(*, n: int = 64, queries: int = 6
+                               ) -> List[dict]:
+    """The multi-tenant serving acceptance sweep: a mixed workload routed
+    to ONE ``QueryServer`` over two attached relations (different shard
+    counts, shared dispatcher pool) must return rows and ledgers
+    bit-identical to running each relation on its own single-relation
+    server — per-relation queues, key streams and batch groups make
+    tenant transcripts independent of neighbour traffic.
+    """
+    from repro.launch.serve import QueryRequest, QueryServer
+
+    rows_a, db_a = _db(n, seed=11, skew=0.25, numeric=True)
+    rows_b, db_b = _db(max(8, n // 2), seed=12, skew=0.4)
+    pats_a = sorted({r[1] for r in rows_a})
+    pats_b = sorted({r[4] for r in rows_b})
+    plans_a = [Select(Eq("FirstName", pats_a[i % len(pats_a)]),
+                      strategy="one_round") for i in range(queries - 1)]
+    plans_a.append(RangeCount(Between("Salary", 500, 4000),
+                              reduce_every=2))
+    plans_b = [Count(Eq("Department", pats_b[i % len(pats_b)]))
+               for i in range(queries)]
+
+    def solo(db, key, plans, shards):
+        srv = QueryServer(db, key=key, shards=shards)
+        reqs = srv.serve([QueryRequest(p) for p in plans])
+        srv.close()
+        assert all(r.error is None for r in reqs)
+        return [r.result for r in reqs]
+
+    solo_a = solo(db_a, 51, plans_a, shards=2)
+    solo_b = solo(db_b, 52, plans_b, shards=3)
+
+    server = QueryServer(pool_workers=4)
+    server.attach("alpha", db_a, shards=2, key=51)
+    server.attach("beta", db_b, shards=3, key=52)
+    t0 = time.time()
+    reqs_a = [server.submit(p, relation="alpha") for p in plans_a]
+    reqs_b = [server.submit(p, relation="beta") for p in plans_b]
+    while server.pending():
+        server.pump()
+    wall_us = (time.time() - t0) * 1e6
+    server.close()
+
+    multi = [r.result for r in reqs_a + reqs_b]
+    ledger_equal = all(
+        a.rows == b.rows and a.count == b.count
+        and a.addresses == b.addresses and a.ledger == b.ledger
+        for a, b in zip(solo_a + solo_b, multi))
+    assert ledger_equal, "multi-tenant != solo servers (rows or ledgers)"
+    snap = server.stats.snapshot()
+    assert snap["relations"]["alpha"]["served"] == len(plans_a)
+    assert snap["relations"]["beta"]["served"] == len(plans_b)
+    return [dict(name="multi_tenant_mixed", n=n, relations=2,
+                 queries=len(multi), wall_us=round(wall_us),
+                 rounds=sum(r.ledger.rounds for r in multi),
+                 comm_bits=sum(r.ledger.communication_bits for r in multi),
+                 served_by_relation={k: v["served"]
+                                     for k, v in snap["relations"].items()},
+                 ledger_equal=ledger_equal)]
+
+
 ALL = [bench_count, bench_select_single, bench_select_one_round,
        bench_select_tree, bench_planner_auto, bench_join, bench_range,
        bench_scaling_verification]
@@ -374,8 +437,11 @@ def collect(*, smoke: bool = False) -> dict:
         n=64 if smoke else 256)
     sharded = bench_sharded_dataplane(n=64 if smoke else 128,
                                       batch=6 if smoke else 8)
+    serving = bench_multi_tenant_serving(n=32 if smoke else 64,
+                                         queries=4 if smoke else 6)
     return dict(schema="bench_queries/v1", smoke=smoke,
-                results=results, batched=batched, sharded=sharded)
+                results=results, batched=batched, sharded=sharded,
+                serving=serving)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -401,6 +467,11 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
               f"ceil(n/S)={s['shard_rows']} rows/shard, "
               f"rounds={s['rounds']} (ledger_equal={s['ledger_equal']})",
               file=sys.stderr)
+    for s in doc["serving"]:
+        print(f"  {s['name']} relations={s['relations']} n={s['n']}: "
+              f"{s['queries']} queries served by one scheduler "
+              f"{s['served_by_relation']} "
+              f"(ledger_equal={s['ledger_equal']})", file=sys.stderr)
 
 
 if __name__ == "__main__":

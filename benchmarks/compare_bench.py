@@ -64,6 +64,12 @@ def index_sharded(doc: dict) -> Dict[Tuple[str, int, int], dict]:
             for r in doc.get("sharded", [])}
 
 
+def index_serving(doc: dict) -> Dict[Tuple[str, int, int], dict]:
+    # "serving" (multi-tenant sweep) post-dates "sharded" the same way.
+    return {(r["name"], r["relations"], r["n"]): r
+            for r in doc.get("serving", [])}
+
+
 def compare(new: dict, old: dict, *, allow_missing: bool = False
             ) -> Tuple[List[str], List[str]]:
     """-> (regressions, notes). Empty regressions == gate passes."""
@@ -97,6 +103,8 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
               GATED_KEYS)
     diff_rows("sharded", index_sharded(new), index_sharded(old),
               GATED_KEYS)
+    diff_rows("serving", index_serving(new), index_serving(old),
+              GATED_KEYS)
     for key, row in index_batched(new).items():
         if not row.get("ledger_equal", False):
             regressions.append(
@@ -108,6 +116,12 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
                 f"sharded {'/'.join(str(k) for k in key)}: "
                 f"sharded != unsharded ledger (dataplane broke the "
                 f"transcript identity)")
+    for key, row in index_serving(new).items():
+        if not row.get("ledger_equal", False):
+            regressions.append(
+                f"serving {'/'.join(str(k) for k in key)}: "
+                f"multi-tenant != solo-server ledger (cross-relation "
+                f"routing broke tenant isolation)")
     return regressions, notes
 
 
@@ -129,7 +143,8 @@ def history_entry(doc: dict, label: str) -> dict:
     return dict(label=label, smoke=bool(doc.get("smoke")),
                 table=costs(index_results(doc)),
                 batched=costs(index_batched(doc)),
-                sharded=costs(index_sharded(doc)))
+                sharded=costs(index_sharded(doc)),
+                serving=costs(index_serving(doc)))
 
 
 def append_history(doc: dict, history: Optional[dict], label: str) -> dict:
@@ -152,7 +167,7 @@ def validate_history(history: dict) -> None:
     for run in runs:
         if "label" not in run:
             raise ValueError("history run without a label")
-        for section in ("table", "batched", "sharded"):
+        for section in ("table", "batched", "sharded", "serving"):
             for cfg, costs in run.get(section, {}).items():
                 missing = [f for f in GATED_KEYS if f not in costs]
                 if missing:
@@ -222,7 +237,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         print(f"no protocol-cost regressions "
               f"({len(index_results(new))} table rows, "
               f"{len(index_batched(new))} batched rows, "
-              f"{len(index_sharded(new))} sharded rows checked)")
+              f"{len(index_sharded(new))} sharded rows, "
+              f"{len(index_serving(new))} serving rows checked)")
     return 0
 
 

@@ -1,0 +1,136 @@
+"""Trend tables for the BENCH_history.json protocol-cost time series.
+
+``compare_bench.py --append-history`` chains every CI run's gated protocol
+costs (rounds, comm_bits per configuration) onto a ``bench_history/v1``
+document; this tool closes the loop by rendering that series as a
+per-config trend table — one row per (section, configuration, metric),
+the value at every recorded run, and a verdict:
+
+  =          no change from the previous recorded run
+  improved   the latest run is cheaper than the first (all-time progress)
+  REGRESSED  the latest run is costlier than the PREVIOUS recorded run —
+             the pairwise gate should have caught it; surfaced here in
+             case a baseline was skipped (expired artifact, first run, …)
+
+The gate compares only the last step, deliberately: a cost increase that
+slips past a missing pairwise baseline fails the lane ONCE (on the run
+that introduced it), then the series carries the new level and recovers —
+an all-time-minimum gate would fail every future run with no way out
+short of deleting the history.
+
+Exit status: 0 = no regressed trends, 1 = at least one metric got worse
+on the latest step, 2 = the history could not be loaded/validated. The CI
+bench-smoke lane runs this right after chaining the history.
+
+Usage::
+
+  PYTHONPATH=src python benchmarks/plot_history.py BENCH_history.json
+      [--section table|batched|sharded|serving]   # default: all sections
+      [--metric rounds|comm_bits]          # default: both gated metrics
+      [--format table|tsv]                 # tsv for spreadsheet import
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import compare_bench  # noqa: E402  (sibling module, shares the schema)
+
+SECTIONS = ("table", "batched", "sharded", "serving")
+
+
+def trend_rows(history: dict, *, sections: Sequence[str] = SECTIONS,
+               metrics: Sequence[str] = compare_bench.GATED_KEYS
+               ) -> List[dict]:
+    """-> one row per (section, config, metric) with the value series.
+
+    A config absent from some runs (added or dropped mid-series) carries
+    ``None`` at those positions; the verdict only compares recorded
+    values. Rows come back sorted for stable output.
+    """
+    runs = history["runs"]
+    rows: List[dict] = []
+    for section in sections:
+        configs = sorted({cfg for run in runs
+                          for cfg in run.get(section, {})})
+        for cfg in configs:
+            for metric in metrics:
+                series: List[Optional[int]] = [
+                    run.get(section, {}).get(cfg, {}).get(metric)
+                    for run in runs]
+                seen = [v for v in series if v is not None]
+                if not seen:
+                    continue
+                if len(seen) >= 2 and seen[-1] > seen[-2]:
+                    verdict = "REGRESSED"       # got worse THIS step
+                elif seen[-1] < seen[0]:
+                    verdict = "improved"
+                else:
+                    verdict = "="
+                rows.append(dict(section=section, config=cfg,
+                                 metric=metric, series=series,
+                                 verdict=verdict))
+    return rows
+
+
+def format_trends(history: dict, rows: List[dict], *,
+                  fmt: str = "table") -> str:
+    labels = [run["label"] for run in history["runs"]]
+    cells = [["section", "config", "metric", *labels, "trend"]]
+    for r in rows:
+        cells.append([r["section"], r["config"], r["metric"],
+                      *["-" if v is None else str(v) for v in r["series"]],
+                      r["verdict"]])
+    if fmt == "tsv":
+        return "\n".join("\t".join(row) for row in cells)
+    widths = [max(len(row[i]) for row in cells)
+              for i in range(len(cells[0]))]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(row, widths)).rstrip()
+             for row in cells]
+    lines.insert(1, "  ".join("-" * w for w in widths))
+    return "\n".join(lines)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("history", help="BENCH_history.json "
+                                    "(bench_history/v1)")
+    ap.add_argument("--section", choices=SECTIONS, default=None,
+                    metavar="SECTION",
+                    help="limit to one section (default: all)")
+    ap.add_argument("--metric", choices=compare_bench.GATED_KEYS,
+                    default=None,
+                    help="limit to one gated metric (default: both)")
+    ap.add_argument("--format", choices=("table", "tsv"), default="table")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.history) as f:
+            history = json.load(f)
+        compare_bench.validate_history(history)
+        if not history["runs"]:
+            raise ValueError("history has no runs to plot")
+        rows = trend_rows(
+            history,
+            sections=(args.section,) if args.section else SECTIONS,
+            metrics=((args.metric,) if args.metric
+                     else compare_bench.GATED_KEYS))
+    except (OSError, ValueError, KeyError) as e:
+        print(f"plot_history: cannot render: {e}", file=sys.stderr)
+        return 2
+    print(format_trends(history, rows, fmt=args.format))
+    regressed = [r for r in rows if r["verdict"] == "REGRESSED"]
+    if regressed:
+        print(f"{len(regressed)} cost trend(s) REGRESSED across "
+              f"{len(history['runs'])} run(s)", file=sys.stderr)
+        return 1
+    print(f"{len(rows)} cost trend(s) over {len(history['runs'])} run(s): "
+          f"no regressions", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,9 @@
 """Private serving: batched LM inference where the embedding lookup runs as
-the paper's oblivious selection (§3.2.1) over Shamir-shared tables, plus an
-oblivious QueryServer draining logical query plans over a secret-shared
-user-profile relation — both through the unified ``repro.api`` surface
-(backend registry for the kernels, QueryClient for the query suite).
+the paper's oblivious selection (§3.2.1) over Shamir-shared tables, plus a
+multi-tenant oblivious QueryServer draining logical query plans over
+several secret-shared relations (user profiles + orders) through one
+scheduler — both through the unified ``repro.api`` surface (backend
+registry for the kernels, QueryClient for the query suite).
 
 The serving "clouds" hold only shares of the (fixed-point) embedding table;
 each request's token ids are one-hot-encoded (the paper's unary encoding),
@@ -26,7 +27,7 @@ from repro.core import outsource, Codec  # noqa: E402
 from repro.models import init_params  # noqa: E402
 from repro.models.private_embed import (setup_private_embed,  # noqa: E402
                                         private_lookup)
-from repro.launch.serve import (BatchServer, QueryRequest,  # noqa: E402
+from repro.launch.serve import (BatchServer,  # noqa: E402
                                 QueryServer, Request)
 
 
@@ -68,31 +69,57 @@ def main():
     print(f"private == plaintext generations: {same}")
 
     # --- the same clouds also serve oblivious DB queries ----------------
+    # The owner shares a *database* — plural relations — once (§2); one
+    # multi-tenant QueryServer then fronts all of them: each attach() gets
+    # its own dataplane, batching policy and query-key stream, while every
+    # relation's shard dispatches ride ONE bounded server pool.
     profiles = [["u01", "gold", "150"], ["u02", "free", "12"],
                 ["u03", "gold", "87"], ["u04", "silver", "45"]]
+    orders = [["o1", "u01", "open"], ["o2", "u03", "done"],
+              ["o3", "u01", "open"], ["o4", "u02", "open"],
+              ["o5", "u04", "done"], ["o6", "u01", "done"]]
     # word_length 6 -> match degree (1+1)·6 = 12, openable by 16 clouds
-    db = outsource(jax.random.PRNGKey(5), profiles,
-                   column_names=["UserId", "Tier", "Requests"],
-                   codec=Codec(word_length=6), n_shares=16)
-    # async mode: the scheduler thread parks submissions up to max_wait_ms
-    # to fill max_batch, and the relation is sharded along the tuple axis
-    # (bit-identical results; shard dispatches run concurrently).
-    with QueryServer(db, key=11, max_batch=8, max_wait_ms=10,
-                     shards=2) as qserver:
-        queries = [qserver.submit(QueryRequest(Count(Eq("Tier", "gold")))),
-                   qserver.submit(QueryRequest(Select(Eq("Tier", "gold"))))]
+    codec = Codec(word_length=6)
+    db_profiles = outsource(jax.random.PRNGKey(5), profiles,
+                            column_names=["UserId", "Tier", "Requests"],
+                            codec=codec, n_shares=16)
+    db_orders = outsource(jax.random.PRNGKey(6), orders,
+                          column_names=["OrderId", "UserId", "Status"],
+                          codec=codec, n_shares=16)
+    # async mode: the scheduler thread parks each relation's submissions
+    # up to its max_wait_ms to fill its max_batch, closing per-relation
+    # batches independently; tuple-axis sharding stays bit-identical and
+    # both relations' shard dispatches share the server's 4-worker pool.
+    qserver = QueryServer(max_batch=8, max_wait_ms=10, pool_workers=4)
+    qserver.attach("profiles", db_profiles, shards=2, key=11)
+    qserver.attach("orders", db_orders, shards=3, key=12, max_batch=4)
+    with qserver:
+        queries = [
+            qserver.submit(Count(Eq("Tier", "gold")),
+                           relation="profiles"),
+            qserver.submit(Select(Eq("Tier", "gold")),
+                           relation="profiles"),
+            qserver.submit(Count(Eq("Status", "open")),
+                           relation="orders"),
+            qserver.submit(Select(Eq("UserId", "u01"),
+                                  strategy="one_round"),
+                           relation="orders"),
+        ]
         for q in queries:
             q.wait()
     for q in queries:
-        print(f"plan {type(q.plan).__name__}: strategy={q.result.strategy} "
-              f"count={q.result.count} ({q.latency_s:.2f}s, "
-              f"{q.result.ledger.rounds} rounds)")
-    st = qserver.stats
-    print(f"server: {st.served} queries in {st.batches} batch(es) "
-          f"(closed by {dict(st.closes)}), "
-          f"mean batch {st.mean_batch_size:.1f}, "
-          f"p50 queue wait {st.queue_wait_quantile(0.5) * 1e3:.1f}ms, "
-          f"p50 latency {st.latency_quantile(0.5):.2f}s")
+        print(f"[{q.relation}] {type(q.plan).__name__}: "
+              f"strategy={q.result.strategy} count={q.result.count} "
+              f"({q.latency_s:.2f}s, {q.result.ledger.rounds} rounds)")
+    st = qserver.stats.snapshot()
+    print(f"server: {st['served']} queries in {st['batches']} batch(es) "
+          f"(closed by {st['closes']}), "
+          f"mean batch {st['mean_batch_size']:.1f}, "
+          f"p50 queue wait {st['p50_queue_wait_s'] * 1e3:.1f}ms, "
+          f"p50 latency {st['p50_latency_s']:.2f}s")
+    for name, rs in st["relations"].items():
+        print(f"  [{name}] served={rs['served']} in {rs['batches']} "
+              f"batch(es), families={rs['served_by_family']}")
 
 
 if __name__ == "__main__":

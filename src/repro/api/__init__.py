@@ -16,12 +16,12 @@ paper-optimal selection strategy; backends are looked up in a registry
 The legacy free functions in ``repro.core.queries`` remain as thin
 deprecated wrappers; new code should go through this package.
 """
-from ..core.dataplane import (Dispatcher, ShardedRelation,
+from ..core.dataplane import (Dispatcher, PoolHandle, ShardedRelation,
                               ThreadedDispatcher)
 from .backends import (Backend, available_backends, batched_match_matrix,
                        batched_matcher, get_backend, register_backend,
                        ripple_segmenter, ripple_stepper)
-from .client import QueryClient
+from .client import DEFAULT_RELATION, AttachedRelation, QueryClient
 from .executor import MapReduceDispatcher, MapReduceExecutor
 from .planner import (DEFAULT_ELL, BatchExplanation, CostEstimate, DBStats,
                       GroupEstimate, candidate_estimates,
@@ -37,8 +37,9 @@ __all__ = [
     "Backend", "available_backends", "batched_matcher",
     "batched_match_matrix", "get_backend", "register_backend",
     "ripple_segmenter", "ripple_stepper", "QueryClient",
+    "DEFAULT_RELATION", "AttachedRelation",
     "MapReduceDispatcher", "MapReduceExecutor",
-    "Dispatcher", "ShardedRelation", "ThreadedDispatcher",
+    "Dispatcher", "PoolHandle", "ShardedRelation", "ThreadedDispatcher",
     "DEFAULT_ELL", "BatchExplanation", "CostEstimate", "DBStats",
     "GroupEstimate", "candidate_estimates", "choose_select_strategy",
     "estimate_batch_group_cost", "estimate_count_cost",

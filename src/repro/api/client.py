@@ -6,6 +6,17 @@ backend choice (``repro.api.backends`` registry), the optional MapReduce
 executor, and the cost-based selection planner (``repro.api.planner``).
 Every query family returns the same :class:`~.plans.QueryResult`.
 
+The client fronts a *registry* of attached relations, matching the paper's
+deployment model (§2: the owner outsources secret-shares of a database —
+plural relations — once; users then query any of them without the owner in
+the loop). ``QueryClient(db, key)`` registers ``db`` under the default
+name; ``attach(other_db, name="orders", shards=S)`` registers more, each
+with its own sharded dataplane, its own planner statistics and — crucially
+— its own root key and query counter, so the per-query key stream of one
+relation never depends on traffic to another: a plan sequence submitted to
+relation "orders" opens bit-identical rows and ledgers whether or not
+"users" traffic interleaves with it (the multi-tenant serving acceptance).
+
 Every plan family executes through the round-structured batch engine
 (``repro.core.queries.rounds``): :meth:`QueryClient.run_batch` cost-plans
 each query, groups compatible strategies — Count/Select by selection
@@ -23,7 +34,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+import zlib
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
 
@@ -37,6 +49,48 @@ from .executor import MapReduceExecutor
 from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
                     QueryResult, RangeCount, RangeSelect, Select,
                     resolve_column)
+
+#: registry name a bare ``QueryClient(db, key)`` attaches its relation
+#: under; single-relation callers never need to spell it.
+DEFAULT_RELATION = "default"
+
+#: explanation-cache entries kept per client (FIFO eviction) — a serving
+#: frontend explains a bounded set of recurring plan shapes; anything
+#: beyond this just recomputes.
+EXPLAIN_CACHE_MAX = 128
+
+
+@dataclasses.dataclass
+class AttachedRelation:
+    """One registered relation: its shares, dataplane and key stream."""
+    name: str
+    db: SecretSharedDB
+    dataplane: Optional[ShardedRelation]
+    root_key: jax.Array
+    counter: Iterator[int]
+
+    @property
+    def rel(self) -> Union[SecretSharedDB, ShardedRelation]:
+        """What the round engine executes against (plane if attached)."""
+        return self.dataplane if self.dataplane is not None else self.db
+
+    @property
+    def n_shards(self) -> int:
+        return self.dataplane.n_shards if self.dataplane is not None else 1
+
+
+def _as_key(key) -> jax.Array:
+    return jax.random.PRNGKey(key) if isinstance(key, int) else key
+
+
+def _plan_signature(plan: Plan) -> tuple:
+    """Structural cache key for one plan (Join rights key by identity —
+    two different share sets are different plans even if equal-valued)."""
+    if isinstance(plan, Join):
+        return ("Join", id(plan.right), tuple(plan.on), plan.kind,
+                plan.padding.rows, plan.padding.values)
+    return (type(plan).__name__,) + tuple(
+        getattr(plan, f.name) for f in dataclasses.fields(plan))
 
 
 @dataclasses.dataclass
@@ -53,11 +107,17 @@ class _Slot:
 
 
 class QueryClient:
-    """Authorized-user facade over one outsourced relation.
+    """Authorized-user facade over the outsourced relation registry.
 
-    db:              the user's secret-shared relation (``core.outsource``).
+    db:              the user's secret-shared relation (``core.outsource``)
+                     — registered under :data:`DEFAULT_RELATION`; pass
+                     ``None`` to start with an empty registry and
+                     ``attach(..., name=...)`` relations explicitly.
     key:             root PRNG key (or int seed); per-query keys derive via
                      ``fold_in`` so identical plans replay identically.
+                     Each attached relation gets its own independent key
+                     stream (seeded from this root unless ``attach`` is
+                     given an explicit ``key=``).
     backend:         registered backend name or Backend instance.
     executor:        optional :class:`MapReduceExecutor` — fans every
                      cloud-side map phase out over fault-tolerant splits.
@@ -65,46 +125,115 @@ class QueryClient:
                      one extra protocol round is worth to this user.
     """
 
-    def __init__(self, db: Union[SecretSharedDB, ShardedRelation], key, *,
+    def __init__(self, db: Union[SecretSharedDB, ShardedRelation,
+                                 None] = None, key=0, *,
                  backend: BackendLike = "jnp",
                  executor: Optional[MapReduceExecutor] = None,
                  round_cost_bits: int = 0):
-        self.dataplane: Optional[ShardedRelation] = None
-        if isinstance(db, ShardedRelation):
-            self.dataplane = db
-            db = db.db
-        self.db = db
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
         self._root_key = key
+        self._relations: Dict[str, AttachedRelation] = {}
+        # sig -> (BatchExplanation, pinned Join right relations)
+        self._explanations: Dict[tuple, tuple] = {}
+        if db is not None:
+            plane = db if isinstance(db, ShardedRelation) else None
+            self._relations[DEFAULT_RELATION] = AttachedRelation(
+                DEFAULT_RELATION, plane.db if plane is not None else db,
+                plane, key, itertools.count())
         self.backend = get_backend(backend)
         if executor is not None:
             self.backend = executor.wrap(self.backend)
         self.executor = executor
         self.round_cost_bits = round_cost_bits
-        self._query_counter = itertools.count()
+
+    # -- registry -----------------------------------------------------------
+    @property
+    def relations(self) -> Tuple[str, ...]:
+        """Attached relation names, in registration order."""
+        return tuple(self._relations)
+
+    def _entry(self, relation: Optional[str] = None) -> AttachedRelation:
+        if relation is None:
+            ent = self._relations.get(DEFAULT_RELATION)
+            if ent is not None:
+                return ent
+            if len(self._relations) == 1:
+                return next(iter(self._relations.values()))
+            if not self._relations:
+                raise ValueError("no relation attached — pass a db to "
+                                 "QueryClient(...) or call attach(db, "
+                                 "name=...)")
+            raise ValueError(f"several relations attached "
+                             f"({list(self._relations)}) and none is "
+                             f"{DEFAULT_RELATION!r} — pass relation=")
+        try:
+            return self._relations[relation]
+        except KeyError:
+            raise KeyError(f"unknown relation {relation!r}; attached: "
+                           f"{list(self._relations)}") from None
+
+    @property
+    def db(self) -> Optional[SecretSharedDB]:
+        """The default relation's shares (None with an empty registry)."""
+        ent = (self._relations.get(DEFAULT_RELATION)
+               or next(iter(self._relations.values()), None))
+        return ent.db if ent is not None else None
+
+    @property
+    def dataplane(self) -> Optional[ShardedRelation]:
+        """The default relation's dataplane (None until sharded/attached)."""
+        ent = (self._relations.get(DEFAULT_RELATION)
+               or next(iter(self._relations.values()), None))
+        return ent.dataplane if ent is not None else None
+
+    def dataplane_of(self, relation: str) -> Optional[ShardedRelation]:
+        return self._entry(relation).dataplane
 
     # -- keys ---------------------------------------------------------------
-    def _next_key(self) -> jax.Array:
-        return jax.random.fold_in(self._root_key, next(self._query_counter))
+    def _next_key(self,
+                  ent: Optional[AttachedRelation] = None) -> jax.Array:
+        ent = ent if ent is not None else self._entry()
+        return jax.random.fold_in(ent.root_key, next(ent.counter))
 
     # -- dataplane ----------------------------------------------------------
     def attach(self, relation: Union[SecretSharedDB, ShardedRelation,
                                      None] = None, *,
+               name: Optional[str] = None,
                shards: int = 1,
-               dispatcher: Optional[Dispatcher] = None) -> ShardedRelation:
-        """Attach (or re-shard) the serving relation as a sharded dataplane.
+               dispatcher: Optional[Dispatcher] = None,
+               key=None) -> ShardedRelation:
+        """Attach (or re-shard) a serving relation as a sharded dataplane.
 
-        Every cloud step of every subsequent query fans out as one dispatch
-        per tuple-axis shard, executed by ``dispatcher`` (serial by
-        default; pass a ``ThreadedDispatcher`` for concurrent shards or
+        ``name`` addresses the registry slot (default:
+        :data:`DEFAULT_RELATION`, the single-relation surface). A new name
+        registers ``relation`` as an additional tenant with its own key
+        stream — ``key`` seeds it explicitly (so a multi-tenant server can
+        replay a solo client bit-for-bit); otherwise the stream derives
+        from the client root key and the name, order-independently.
+
+        Every cloud step of every subsequent query against this relation
+        fans out as one dispatch per tuple-axis shard, executed by
+        ``dispatcher`` (serial by default; pass a ``ThreadedDispatcher`` —
+        or a shared pool's ``handle()`` — for concurrent shards, or
         ``MapReduceExecutor.dispatcher()`` for fault-tolerant placement).
         Sharding is pure execution policy: rows, opened values and ledgers
         stay bit-identical to the unsharded relation, and the planner
         prices the per-shard dispatch counts through ``stats().shards``.
+
+        Re-attaching invalidates cached :class:`~.planner.BatchExplanation`
+        estimates — their ``dispatches`` are priced per target relation at
+        its shard count, so they go stale the moment the dataplane moves.
         """
-        rel = relation if relation is not None \
-            else (self.dataplane if self.dataplane is not None else self.db)
+        name = DEFAULT_RELATION if name is None else name
+        ent = self._relations.get(name)
+        if relation is None:
+            if ent is None:
+                raise ValueError(f"no relation registered under {name!r} — "
+                                 f"pass the db to attach")
+            rel = ent.dataplane if ent.dataplane is not None else ent.db
+        else:
+            rel = relation
         if isinstance(rel, ShardedRelation):
             if shards <= 1 and dispatcher is None:
                 plane = rel                      # adopt as-is
@@ -117,22 +246,49 @@ class QueryClient:
         else:
             plane = ShardedRelation(rel, shards=shards,
                                     dispatcher=dispatcher)
-        self.dataplane = plane
-        self.db = plane.db
+        if ent is None:
+            if key is not None:
+                root = _as_key(key)
+            else:
+                # derive the relation's key stream from the client root and
+                # the NAME ALONE (two independent 31-bit folds), so the
+                # stream is order-independent — attaching the same names in
+                # any order replays identically. Distinct tenants MUST get
+                # distinct streams (the protocol's masking randomness must
+                # be independent), so the astronomically unlikely double
+                # collision is checked and refused, never absorbed.
+                raw = name.encode()
+                root = jax.random.fold_in(
+                    jax.random.fold_in(self._root_key,
+                                       zlib.crc32(raw) & 0x7fffffff),
+                    zlib.crc32(raw[::-1] + b"\x00") & 0x7fffffff)
+                for other in self._relations.values():
+                    if bool((other.root_key == root).all()):
+                        raise ValueError(
+                            f"derived key stream for {name!r} collides "
+                            f"with relation {other.name!r} — pass an "
+                            f"explicit key= for one of them")
+            ent = AttachedRelation(name, plane.db, plane, root,
+                                   itertools.count())
+            self._relations[name] = ent
+        else:
+            ent.db, ent.dataplane = plane.db, plane
+            if key is not None:                  # explicit re-key: restart
+                ent.root_key = _as_key(key)
+                ent.counter = itertools.count()
+        # stale-estimate bugfix: cached explanations price dispatches at
+        # the OLD shard count — drop them all (cheap; they re-compute).
+        self._explanations.clear()
         return plane
 
-    @property
-    def _rel(self) -> Union[SecretSharedDB, ShardedRelation]:
-        """What the round engine executes against (plane if attached)."""
-        return self.dataplane if self.dataplane is not None else self.db
-
     # -- planning -----------------------------------------------------------
-    def stats(self) -> _planner.DBStats:
-        return _planner.DBStats.of(
-            self.db, shards=(self.dataplane.n_shards
-                             if self.dataplane is not None else 1))
+    def stats(self, relation: Optional[str] = None) -> _planner.DBStats:
+        ent = self._entry(relation)
+        return _planner.DBStats.of(ent.db, shards=ent.n_shards,
+                                   relation=ent.name)
 
-    def explain(self, plan: Union[Select, Sequence[Plan]]):
+    def explain(self, plan: Union[Select, Sequence[Plan]], *,
+                relation: Optional[str] = None):
         """Planner predictions without touching shares.
 
         One ``Select`` -> its eligible strategy estimates, cheapest first
@@ -141,22 +297,40 @@ class QueryClient:
         A *sequence of plans* -> a :class:`~.planner.BatchExplanation`: the
         plans are grouped exactly as :meth:`run_batch` would group them and
         each group is priced with ``estimate_batch_group_cost`` (bits sum,
-        rounds/dispatches fuse to the deepest member, the cross-group fetch
-        counted once) — a predicted ``run_batch`` ledger.
+        rounds/dispatches fuse, the cross-group fetch priced once) — a
+        predicted ``run_batch`` ledger for the target relation.
+        Explanations are cached per (relation, plan signature) and
+        invalidated by :meth:`attach` — a re-shard re-prices dispatches.
         """
+        ent = self._entry(relation)
         if isinstance(plan, Plan):
             cands = _planner.candidate_estimates(
-                self.stats(), ell=plan.expected_matches,
+                self.stats(ent.name), ell=plan.expected_matches,
                 padded_rows=plan.padding.rows)
             return sorted(cands,
                           key=lambda e: (e.score(self.round_cost_bits),
                                          e.rounds))
-        return self._explain_batch(list(plan))
+        plans = list(plan)
+        sig = (ent.name, tuple(_plan_signature(p) for p in plans))
+        hit = self._explanations.get(sig)
+        if hit is not None:
+            return hit[0]
+        exp = self._explain_batch(plans, ent)
+        if len(self._explanations) >= EXPLAIN_CACHE_MAX:
+            self._explanations.pop(next(iter(self._explanations)))
+        # the entry pins every Join right relation: its id() is part of
+        # the signature, so the object must stay alive (un-reusable) for
+        # as long as the cached explanation can be served.
+        self._explanations[sig] = (exp, tuple(
+            p.right for p in plans if isinstance(p, Join)))
+        return exp
 
-    def _explain_batch(self, plans: List[Plan]) -> _planner.BatchExplanation:
+    def _explain_batch(self, plans: List[Plan],
+                       ent: AttachedRelation) -> _planner.BatchExplanation:
         """Group ``plans`` exactly as :meth:`run_batch` would (AUTO plans
         see the same live group sizes/depths) and price each group."""
-        stats = self.stats()
+        db = ent.db
+        stats = self.stats(ent.name)
         sel_ells: Dict[str, List[Optional[int]]] = {"one_tuple": [],
                                                     "one_round": [],
                                                     "tree": []}
@@ -191,11 +365,11 @@ class QueryClient:
                 else:
                     add_select(plan, plan.strategy)
             elif isinstance(plan, (RangeCount, RangeSelect)):
-                col = resolve_column(self.db, plan.where.column)
-                if col not in self.db.numeric_bits:   # as range_phase would
+                col = resolve_column(db, plan.where.column)
+                if col not in db.numeric_bits:   # as range_phase would
                     raise ValueError(f"column {col} was not outsourced in "
                                      f"binary form")
-                gk = (self.db.numeric_bits[col], plan.reduce_every)
+                gk = (db.numeric_bits[col], plan.reduce_every)
                 want = isinstance(plan, RangeSelect)
                 range_grps.setdefault(gk, []).append(
                     (want, None, plan.padding.rows if want else None))
@@ -259,19 +433,24 @@ class QueryClient:
         return _planner.explain_batch_groups(stats, groups)
 
     # -- execution ----------------------------------------------------------
-    def run(self, plan: Plan) -> QueryResult:
+    def run(self, plan: Plan, *,
+            relation: Optional[str] = None) -> QueryResult:
         """Execute one logical plan (the B = 1 case of :meth:`run_batch`)."""
-        return self.run_batch([plan])[0]
+        return self.run_batch([plan], relation=relation)[0]
 
-    def run_batch(self, plans: Sequence[Plan]) -> List[QueryResult]:
+    def run_batch(self, plans: Sequence[Plan], *,
+                  relation: Optional[str] = None) -> List[QueryResult]:
         """Execute B logical plans, fusing each protocol round per group.
 
-        Per-plan keys derive from the root key in list order; every plan is
-        cost-planned exactly as :meth:`run` would (AUTO selections see the
-        batch's live group sizes, so with ``round_cost_bits > 0`` a
-        borderline query is steered onto a group whose fused rounds it can
-        ride for free), then compatible plans are grouped and executed
-        through the batched round engine:
+        ``relation`` picks the registry entry the batch runs against (the
+        default relation when omitted). Per-plan keys derive from THAT
+        relation's root key in list order — key streams are per relation,
+        so batches against different relations never perturb each other's
+        transcripts. Every plan is cost-planned exactly as :meth:`run`
+        would (AUTO selections see the batch's live group sizes, so with
+        ``round_cost_bits > 0`` a borderline query is steered onto a group
+        whose fused rounds it can ride for free), then compatible plans
+        are grouped and executed through the batched round engine:
 
         * Count/Select groups stack their shared predicates — each match,
           Q&A and address round is one fused dispatch + one interpolation.
@@ -297,6 +476,9 @@ class QueryClient:
         ``strategy="auto"`` the query replans onto one_round/tree inside the
         batch, reusing the learned count.
         """
+        ent = self._entry(relation)
+        db, rel = ent.db, ent.rel
+        stats = self.stats(ent.name)
         results: Dict[int, QueryResult] = {}
         count_grp: List[_Slot] = []
         sel_grp: Dict[str, List[_Slot]] = {"one_tuple": [], "one_round": [],
@@ -315,7 +497,7 @@ class QueryClient:
             slot.strategy = strategy
             group_sizes[strategy] += 1
             est = _planner.estimate_select_cost(
-                strategy, self.stats(),
+                strategy, stats,
                 ell=(1 if strategy == "one_tuple" else
                      _planner.DEFAULT_ELL if ell is None else max(ell, 1)),
                 padded_rows=slot.plan.padding.rows)
@@ -324,12 +506,12 @@ class QueryClient:
             sel_grp[strategy].append(slot)
 
         for idx, plan in enumerate(plans):
-            slot = _Slot(idx, plan, self._next_key())
+            slot = _Slot(idx, plan, self._next_key(ent))
             if isinstance(plan, Count):
-                slot.column = resolve_column(self.db, plan.where.column)
+                slot.column = resolve_column(db, plan.where.column)
                 count_grp.append(slot)
             elif isinstance(plan, Select):
-                slot.column = resolve_column(self.db, plan.where.column)
+                slot.column = resolve_column(db, plan.where.column)
                 if plan.strategy == AUTO:
                     auto_slots.append(slot)   # assigned once groups known
                     continue
@@ -341,8 +523,8 @@ class QueryClient:
                         "requested)")
                 join_group(slot, plan.strategy, plan.expected_matches)
             elif isinstance(plan, (RangeCount, RangeSelect)):
-                slot.column = resolve_column(self.db, plan.where.column)
-                gk = (self.db.numeric_bits.get(slot.column, -1),
+                slot.column = resolve_column(db, plan.where.column)
+                gk = (db.numeric_bits.get(slot.column, -1),
                       plan.reduce_every)
                 range_grps.setdefault(gk, []).append(slot)
             elif isinstance(plan, Join):
@@ -357,7 +539,7 @@ class QueryClient:
         # round_cost_bits=0 this reduces to sequential planning).
         for slot in auto_slots:
             chosen = _planner.choose_select_strategy(
-                self.stats(), ell=slot.plan.expected_matches,
+                stats, ell=slot.plan.expected_matches,
                 padded_rows=slot.plan.padding.rows,
                 round_cost_bits=self.round_cost_bits,
                 group_sizes=group_sizes, group_rounds=group_rounds).strategy
@@ -369,7 +551,7 @@ class QueryClient:
         fetch_meta: List[Tuple[_Slot, str, List[int]]] = []
 
         if count_grp:
-            counts = rounds.count_phase(be, self._rel, [
+            counts = rounds.count_phase(be, rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, s.key,
                                 s.ledger) for s in count_grp])
             for s, cnt in zip(count_grp, counts):
@@ -380,7 +562,7 @@ class QueryClient:
         if sel_grp["one_tuple"]:
             group = sel_grp["one_tuple"]
             keys = [jax.random.split(s.key) for s in group]
-            ells = rounds.count_phase(be, self._rel, [
+            ells = rounds.count_phase(be, rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, kc, s.ledger)
                 for s, (kc, _) in zip(group, keys)])
             verified: List[Tuple[_Slot, jax.Array]] = []
@@ -395,14 +577,14 @@ class QueryClient:
                 # hint was wrong: replan with the learned ℓ on a fresh key;
                 # the slot's ledger keeps the aborted count-phase cost.
                 chosen = _planner.choose_select_strategy(
-                    self.stats(), ell=ell, padded_rows=s.plan.padding.rows,
+                    stats, ell=ell, padded_rows=s.plan.padding.rows,
                     round_cost_bits=self.round_cost_bits,
                     group_sizes=group_sizes,
                     group_rounds=group_rounds).strategy
-                s.key, s.known_count = self._next_key(), ell
+                s.key, s.known_count = self._next_key(ent), ell
                 join_group(s, chosen, ell)
             if verified:
-                rows = rounds.one_tuple_round(be, self._rel, [
+                rows = rounds.one_tuple_round(be, rel, [
                     rounds.MatchJob(s.column, s.plan.where.pattern, k_sel,
                                     s.ledger) for s, k_sel in verified])
                 for (s, _), row in zip(verified, rows):
@@ -414,7 +596,7 @@ class QueryClient:
         if sel_grp["one_round"]:
             group = sel_grp["one_round"]
             keys = [jax.random.split(s.key) for s in group]
-            addrs = rounds.match_all_round(be, self._rel, [
+            addrs = rounds.match_all_round(be, rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, kp, s.ledger)
                 for s, (kp, _) in zip(group, keys)])
             for s, (_, kf), a in zip(group, keys, addrs):
@@ -428,7 +610,7 @@ class QueryClient:
             keys = [jax.random.split(s.key, 3) for s in group]
             need = [(s, kc) for s, (kc, _, _) in zip(group, keys)
                     if s.known_count is None]
-            ells = rounds.count_phase(be, self._rel, [
+            ells = rounds.count_phase(be, rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, kc, s.ledger)
                 for s, kc in need])
             for (s, _), ell in zip(need, ells):
@@ -442,7 +624,7 @@ class QueryClient:
                 else:
                     live.append((s, kp, kf))
             if live:
-                addrs = rounds.tree_rounds(be, self._rel, [
+                addrs = rounds.tree_rounds(be, rel, [
                     rounds.TreeJob(s.column, s.plan.where.pattern, kp,
                                    s.ledger, ell=s.known_count,
                                    branching=s.plan.branching)
@@ -464,7 +646,7 @@ class QueryClient:
                     s.column, s.plan.where.lo, s.plan.where.hi, k_ind,
                     s.ledger, reduce_every=reduce_every,
                     want_addresses=isinstance(s.plan, RangeSelect)))
-            for s, out in zip(group, rounds.range_rounds(be, self._rel, jobs)):
+            for s, out in zip(group, rounds.range_rounds(be, rel, jobs)):
                 if isinstance(s.plan, RangeCount):
                     results[s.idx] = QueryResult(
                         plan=s.plan, ledger=s.ledger,
@@ -479,14 +661,14 @@ class QueryClient:
         join_entries: List[rounds.FetchEntry] = []
         if pkfk_grp:
             join_jobs = [rounds.JoinJob(
-                s.plan.right, resolve_column(self.db, s.plan.on[0]),
+                s.plan.right, resolve_column(db, s.plan.on[0]),
                 resolve_column(s.plan.right, s.plan.on[1]), s.key, s.ledger)
                 for s in pkfk_grp]
-            join_entries = rounds.join_match_round(be, self._rel, join_jobs)
+            join_entries = rounds.join_match_round(be, rel, join_jobs)
 
         # -- the cross-group fetch: ONE ss_matmul for everything ------------
         if fetch_jobs or join_entries:
-            rows_list, extra_sh = rounds.fetch_fusion(be, self._rel,
+            rows_list, extra_sh = rounds.fetch_fusion(be, rel,
                                                       fetch_jobs,
                                                       join_entries)
             for (s, strat, a), r in zip(fetch_meta, rows_list):
@@ -494,7 +676,7 @@ class QueryClient:
                                              strategy=strat, rows=r,
                                              addresses=a)
             if pkfk_grp:
-                join_rows = rounds.join_emit_round(self.db, join_jobs,
+                join_rows = rounds.join_emit_round(db, join_jobs,
                                                    extra_sh)
                 for s, r in zip(pkfk_grp, join_rows):
                     results[s.idx] = QueryResult(plan=s.plan,
@@ -503,9 +685,9 @@ class QueryClient:
 
         # -- equijoins: phases fused across the group -----------------------
         if equi_grp:
-            equi_rows = rounds.equijoin_rounds(be, self._rel, [
+            equi_rows = rounds.equijoin_rounds(be, rel, [
                 rounds.EquiJob(
-                    s.plan.right, resolve_column(self.db, s.plan.on[0]),
+                    s.plan.right, resolve_column(db, s.plan.on[0]),
                     resolve_column(s.plan.right, s.plan.on[1]), s.key,
                     s.ledger, padded_values=s.plan.padding.values)
                 for s in equi_grp])
@@ -526,30 +708,38 @@ class QueryClient:
                 "applies to kind='equi' only")
 
     # -- conveniences (build the plan, run it) ------------------------------
-    def count(self, column: ColumnRef, pattern: str) -> QueryResult:
-        return self.run(Count(Eq(column, pattern)))
+    def count(self, column: ColumnRef, pattern: str, *,
+              relation: Optional[str] = None) -> QueryResult:
+        return self.run(Count(Eq(column, pattern)), relation=relation)
 
     def select(self, column: ColumnRef, pattern: str, *,
                strategy: str = AUTO, expected_matches: Optional[int] = None,
                padding: Padding = Padding.NONE,
-               branching: Optional[int] = None) -> QueryResult:
+               branching: Optional[int] = None,
+               relation: Optional[str] = None) -> QueryResult:
         return self.run(Select(Eq(column, pattern), strategy=strategy,
                                expected_matches=expected_matches,
-                               padding=padding, branching=branching))
+                               padding=padding, branching=branching),
+                        relation=relation)
 
     def range_count(self, column: ColumnRef, lo: int, hi: int, *,
-                    reduce_every: int = 0) -> QueryResult:
+                    reduce_every: int = 0,
+                    relation: Optional[str] = None) -> QueryResult:
         return self.run(RangeCount(Between(column, lo, hi),
-                                   reduce_every=reduce_every))
+                                   reduce_every=reduce_every),
+                        relation=relation)
 
     def range_select(self, column: ColumnRef, lo: int, hi: int, *,
                      reduce_every: int = 0,
-                     padding: Padding = Padding.NONE) -> QueryResult:
+                     padding: Padding = Padding.NONE,
+                     relation: Optional[str] = None) -> QueryResult:
         return self.run(RangeSelect(Between(column, lo, hi),
                                     reduce_every=reduce_every,
-                                    padding=padding))
+                                    padding=padding), relation=relation)
 
     def join(self, right: SecretSharedDB,
              on: Tuple[ColumnRef, ColumnRef], *, kind: str = "pkfk",
-             padding: Padding = Padding.NONE) -> QueryResult:
-        return self.run(Join(right=right, on=on, kind=kind, padding=padding))
+             padding: Padding = Padding.NONE,
+             relation: Optional[str] = None) -> QueryResult:
+        return self.run(Join(right=right, on=on, kind=kind, padding=padding),
+                        relation=relation)

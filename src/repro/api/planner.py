@@ -67,22 +67,28 @@ class DBStats:
     """The public statistics the planner works from (§2.3: the adversary —
     and hence the planner — may know n, m and the schema). ``shards`` is
     the attached dataplane's tuple-axis shard count (execution, not
-    protocol: it scales dispatch estimates, never bits or rounds)."""
+    protocol: it scales dispatch estimates, never bits or rounds).
+    ``relation`` names the registry entry these statistics describe — with
+    several relations attached, every estimate (and in particular its
+    ``dispatches``) is priced per *target* relation at that relation's own
+    n and shard count, never at a neighbour's."""
     n: int          # tuples
     m: int          # attributes
     c: int          # clouds / shares
     w: int          # word length
     a: int          # alphabet size
     shards: int = 1
+    relation: str = ""
 
     @classmethod
-    def of(cls, db, shards: Optional[int] = None) -> "DBStats":
+    def of(cls, db, shards: Optional[int] = None,
+           relation: str = "") -> "DBStats":
         if isinstance(db, ShardedRelation):
             shards = db.n_shards if shards is None else shards
             db = db.db
         return cls(n=db.n_tuples, m=db.n_attrs, c=db.n_shares,
                    w=db.codec.word_length, a=db.codec.alphabet_size,
-                   shards=shards or 1)
+                   shards=shards or 1, relation=relation)
 
 
 def _pattern_elems(s: DBStats) -> int:
@@ -313,6 +319,7 @@ class BatchExplanation:
     rounds: int
     dispatches: int
     shards: int
+    relation: str = ""
 
 
 def explain_batch_groups(stats: DBStats,
@@ -330,4 +337,5 @@ def explain_batch_groups(stats: DBStats,
         bits=sum(g.estimate.bits for g in groups),
         rounds=max((g.estimate.rounds for g in groups), default=0),
         dispatches=dispatches,
-        shards=S)
+        shards=S,
+        relation=stats.relation)

@@ -66,6 +66,13 @@ class ThreadedDispatcher(Dispatcher):
     Share-space cloud steps are pure, so concurrent execution is safe; the
     combine step (concat / mod-p sum) happens on the caller's thread in
     shard order, keeping results bit-identical to serial execution.
+
+    One pool can back many relations: :meth:`handle` returns a
+    :class:`PoolHandle` — a per-relation view that delegates to this pool
+    but whose ``close()`` only detaches the view. A multi-tenant server
+    hands each attached relation its own handle, so the global fan-out
+    stays bounded by ONE ``max_workers`` no matter how many dataplanes are
+    attached, and detaching one tenant never kills its neighbours' pool.
     """
 
     def __init__(self, max_workers: Optional[int] = None):
@@ -78,11 +85,36 @@ class ThreadedDispatcher(Dispatcher):
             return [t() for t in thunks]
         return list(self._pool.map(lambda t: t(), thunks))
 
+    def handle(self) -> "PoolHandle":
+        """A detachable per-relation view sharing this pool."""
+        return PoolHandle(self)
+
     def close(self) -> None:
         """Release the pool; later dispatches degrade to serial (correct,
         just unparallel) instead of raising on the shut-down executor."""
         self._closed = True
         self._pool.shutdown(wait=False)
+
+
+class PoolHandle(Dispatcher):
+    """Per-relation view of a shared :class:`ThreadedDispatcher` pool.
+
+    ``run_all`` delegates to the shared pool (global worker bound);
+    ``close()`` detaches only this handle — subsequent dispatches through
+    it run serial while the pool keeps serving its other handles.
+    """
+
+    def __init__(self, pool: ThreadedDispatcher):
+        self._shared_pool = pool
+        self._detached = False
+
+    def run_all(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
+        if self._detached:
+            return [t() for t in thunks]
+        return self._shared_pool.run_all(thunks)
+
+    def close(self) -> None:
+        self._detached = True
 
 
 # ---------------------------------------------------------------------------
@@ -162,7 +194,14 @@ class ShardedRelation:
         if isinstance(db, ShardedRelation):        # re-shard an existing plane
             db = db.db
         self.db = db
+        # ``split_bounds`` clamps the shard count to n and never returns an
+        # empty range, so ``shards > n_tuples`` degrades to one shard per
+        # tuple — a DispatchSet must never carry a zero-width shard (an
+        # empty slice would emit degenerate device dispatches and a
+        # zero-row concat block). Guarded here and regression-tested for
+        # n=1, S=4 in tests/test_dataplane.py.
         bounds = split_bounds(0, db.n_tuples, max(1, shards))
+        assert all(lo < hi for lo, hi in bounds), "empty shard bounds"
         self.shards: List[Shard] = [Shard(i, lo, hi)
                                     for i, (lo, hi) in enumerate(bounds)]
         self.dispatcher = dispatcher or SERIAL
@@ -220,7 +259,7 @@ class ShardedRelation:
 
     @property
     def max_shard_rows(self) -> int:
-        return max(s.n_tuples for s in self.shards)
+        return max((s.n_tuples for s in self.shards), default=0)
 
     def view(self, index: int) -> SecretSharedDB:
         """Shard ``index`` as a sliced SecretSharedDB (cached)."""

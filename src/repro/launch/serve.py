@@ -5,33 +5,43 @@ but real: fixed-capacity batch slots, greedy sampling, per-slot lengths,
 jitted prefill and decode steps. The decode step is the same function the
 dry-run lowers for the decode_32k / long_500k cells.
 
-``QueryServer`` — the paper-workload analog rebuilt as a *deadline-batched
-async scheduler over a sharded dataplane*: logical query plans
-(``repro.api.plans``) are enqueued with ``submit`` (thread-safe; each
-request carries a ``wait()``-able completion event); the background
-scheduler thread (``start``/``stop``) parks submissions up to
-``max_wait_ms`` to fill ``max_batch``, then closes the batch — by *fill*
-when the queue reaches ``max_batch``, by *deadline* when the oldest
-request's wait expires — and runs the whole group through
-``QueryClient.run_batch``, which groups compatible strategies and executes
-every protocol round once for the whole group — including range traffic
-(one fused SS-SUB ripple segment per degree-reduction interval per
-(bit-width, reduce_every) group) and join traffic (equal-size PK/FK match
-matrices stack into one batched dispatch and ride the batch's single
-cross-group fetch ``ss_matmul``; equijoins fuse per phase), so a mixed
-live queue pays one dispatch set per round, not one per request. With
-``shards=S`` the relation is attached as a ``ShardedRelation`` and every
-cloud step fans out S tuple-axis shard dispatches, executed concurrently
-on a thread pool (results stay bit-identical — mod-p reduction is exact).
+``QueryServer`` — the paper-workload analog rebuilt as a *multi-tenant
+deadline-batched async scheduler over sharded dataplanes*: ``attach(name,
+relation, shards=S)`` registers any number of secret-shared relations (the
+paper's owner distributes a *database* — plural relations — once; users
+then query any of them), each with its own dataplane, batching policy and
+per-relation query-key stream; logical query plans (``repro.api.plans``)
+are enqueued with ``submit(plan, relation=...)`` (thread-safe; each
+request carries a ``wait()``-able completion event) into the target
+relation's FIFO batch group. ONE background scheduler thread
+(``start``/``stop``) closes each relation's group independently — by
+*fill* when that queue reaches its ``max_batch``, by *deadline* when its
+oldest request's ``max_wait_ms`` expires — and runs the group through
+``QueryClient.run_batch(plans, relation=...)``, which groups compatible
+strategies and executes every protocol round once for the whole group —
+including range traffic (one fused SS-SUB ripple segment per
+degree-reduction interval per (bit-width, reduce_every) group) and join
+traffic (equal-size PK/FK match matrices stack into one batched dispatch
+and ride the batch's single cross-group fetch ``ss_matmul``; equijoins
+fuse per phase), so a mixed live queue pays one dispatch set per round,
+not one per request. With ``shards=S`` a relation is attached as a
+``ShardedRelation`` and every cloud step fans out S tuple-axis shard
+dispatches — all relations share ONE server-owned thread pool via
+detachable handles, so the global fan-out stays bounded (results stay
+bit-identical — mod-p reduction is exact, and batches never mix
+relations).
 
 Per-request latency (enqueue → result), queue-wait and batch-fill
 histograms, close-reason counters, batch/throughput counters and a
-per-family served breakdown are kept in ``ServeStats``. Per-request keys
-derive from the client's root key in pop order; an optional
-``MapReduceExecutor`` fans each cloud-side map phase (including the fused
-batch dispatch) out over fault-tolerant worker splits. The synchronous
-``pump``/``serve`` surface is unchanged — the scheduler thread is the same
-``pump`` driven by a deadline instead of by the caller.
+per-family served breakdown are kept in ``ServeStats``, both in aggregate
+and per relation; ``snapshot()`` reads it all consistently under the stats
+lock. Per-request keys derive from the target relation's root key in pop
+order (streams are per relation, so tenants never perturb each other's
+transcripts); an optional ``MapReduceExecutor`` fans each cloud-side map
+phase (including the fused batch dispatch) out over fault-tolerant worker
+splits. The synchronous ``pump``/``serve`` surface is unchanged — the
+scheduler thread is the same ``pump`` driven by deadlines instead of by
+the caller.
 """
 from __future__ import annotations
 
@@ -39,13 +49,14 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Deque, Dict, List, Optional, Sequence, Union
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..api import MapReduceExecutor, Plan, QueryClient, QueryResult
+from ..api import (DEFAULT_RELATION, MapReduceExecutor, Plan, QueryClient,
+                   QueryResult)
 from ..core.dataplane import (Dispatcher, ShardedRelation,
                               ThreadedDispatcher)
 from ..core.engine import SecretSharedDB
@@ -97,13 +108,24 @@ class BatchServer:
         return requests
 
 
+
 # ---------------------------------------------------------------------------
 # oblivious query serving (the paper's workload behind the same queue idiom)
 # ---------------------------------------------------------------------------
 
+class ServerStopped(RuntimeError):
+    """The server was stopped before this request could be served.
+
+    Raised by :meth:`QueryRequest.wait` when ``QueryServer.stop`` dropped
+    the still-queued request (``drain=False``) — a dropped submission must
+    fail loudly, never hang its waiter.
+    """
+
+
 @dataclasses.dataclass
 class QueryRequest:
     plan: Plan
+    relation: Optional[str] = None   # registry name; filled in by submit()
     result: Optional[QueryResult] = None
     error: Optional[Exception] = None
     latency_s: float = 0.0           # enqueue -> result available
@@ -116,9 +138,17 @@ class QueryRequest:
         return self._done.is_set()
 
     def wait(self, timeout: Optional[float] = None) -> "QueryRequest":
-        """Block until the scheduler finished this request (async mode)."""
+        """Block until the scheduler finished this request (async mode).
+
+        A request the server dropped on shutdown raises
+        :class:`ServerStopped`; protocol-level failures (bad cardinality
+        hint, invalid padding, …) stay on :attr:`error` for the caller to
+        inspect, exactly as before.
+        """
         if not self._done.wait(timeout):
             raise TimeoutError(f"request not served within {timeout}s")
+        if isinstance(self.error, ServerStopped):
+            raise self.error
         return self
 
 
@@ -142,23 +172,72 @@ def _quantile(xs, q: float) -> float:
     return s[min(len(s) - 1, int(q * len(s)))]
 
 
+def _window() -> "Deque[float]":
+    return collections.deque(maxlen=LATENCY_WINDOW)
+
+
+@dataclasses.dataclass
+class RelationStats:
+    """One relation's slice of the serving telemetry."""
+    served: int = 0
+    failed: int = 0
+    batches: int = 0
+    busy_s: float = 0.0
+    latencies_s: "Deque[float]" = dataclasses.field(default_factory=_window)
+    queue_waits_s: "Deque[float]" = dataclasses.field(
+        default_factory=_window)
+    batch_fill: Dict[int, int] = dataclasses.field(default_factory=dict)
+    closes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    served_by_family: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return dict(served=self.served, failed=self.failed,
+                    batches=self.batches, busy_s=self.busy_s,
+                    p50_latency_s=_quantile(list(self.latencies_s), 0.50),
+                    p95_latency_s=_quantile(list(self.latencies_s), 0.95),
+                    p50_queue_wait_s=_quantile(list(self.queue_waits_s),
+                                               0.50),
+                    p95_queue_wait_s=_quantile(list(self.queue_waits_s),
+                                               0.95),
+                    batch_fill=dict(self.batch_fill),
+                    closes=dict(self.closes),
+                    served_by_family=dict(self.served_by_family))
+
+
 @dataclasses.dataclass
 class ServeStats:
-    """Aggregate scheduling telemetry (reset with ``QueryServer.reset``)."""
+    """Aggregate scheduling telemetry (reset with ``QueryServer.reset``).
+
+    Top-level counters/histograms aggregate over every relation (the
+    pre-multi-tenant surface, unchanged); :attr:`relations` carries the
+    per-relation breakdown — served_by_family, queue-wait and batch-fill
+    histograms keyed by registry name.
+
+    Writers and readers run on different threads (scheduler vs monitoring
+    code), so every mutation goes through the ``note_*``/``record_batch``
+    helpers and every read that touches a histogram goes through
+    :meth:`snapshot`/the quantile helpers — all serialized on one internal
+    lock. Bare field reads of the integer counters stay safe (atomic
+    loads) and monotone.
+    """
     served: int = 0
     failed: int = 0
     batches: int = 0
     busy_s: float = 0.0              # wall time spent inside run_batch
-    latencies_s: "Deque[float]" = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+    latencies_s: "Deque[float]" = dataclasses.field(default_factory=_window)
     queue_waits_s: "Deque[float]" = dataclasses.field(
-        default_factory=lambda: collections.deque(maxlen=LATENCY_WINDOW))
+        default_factory=_window)
     batch_fill: Dict[int, int] = dataclasses.field(
         default_factory=dict)       # batch size -> how many batches
     closes: Dict[str, int] = dataclasses.field(
         default_factory=dict)       # why batches closed: full/deadline/...
     served_by_family: Dict[str, int] = dataclasses.field(
         default_factory=dict)       # which protocol groups the traffic hits
+    relations: Dict[str, RelationStats] = dataclasses.field(
+        default_factory=dict)       # per-relation breakdown
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     @property
     def mean_batch_size(self) -> float:
@@ -168,99 +247,352 @@ class ServeStats:
     def throughput_qps(self) -> float:
         return self.served / self.busy_s if self.busy_s > 0 else 0.0
 
-    def latency_quantile(self, q: float) -> float:
-        return _quantile(self.latencies_s, q)
+    def _rel_locked(self, relation: Optional[str]) -> RelationStats:
+        rs = self.relations.get(relation or "")
+        if rs is None:
+            rs = self.relations[relation or ""] = RelationStats()
+        return rs
 
-    def queue_wait_quantile(self, q: float) -> float:
-        return _quantile(self.queue_waits_s, q)
+    # -- locked writers (called from the pump, any thread) ------------------
+    def note_queue_wait(self, wait_s: float,
+                        relation: Optional[str] = None) -> None:
+        with self._lock:
+            self.queue_waits_s.append(wait_s)
+            if relation is not None:
+                self._rel_locked(relation).queue_waits_s.append(wait_s)
 
-    def record_batch(self, fill: int, reason: str) -> None:
-        self.batches += 1
-        self.batch_fill[fill] = self.batch_fill.get(fill, 0) + 1
-        self.closes[reason] = self.closes.get(reason, 0) + 1
+    def note_result(self, latency_s: float, family: Optional[str],
+                    relation: Optional[str] = None) -> None:
+        """One finished request: ``family`` is its plan family, or None
+        for a failure."""
+        with self._lock:
+            rs = (self._rel_locked(relation) if relation is not None
+                  else None)
+            self.latencies_s.append(latency_s)
+            if rs is not None:
+                rs.latencies_s.append(latency_s)
+            if family is None:
+                self.failed += 1
+                if rs is not None:
+                    rs.failed += 1
+                return
+            self.served += 1
+            self.served_by_family[family] = \
+                self.served_by_family.get(family, 0) + 1
+            if rs is not None:
+                rs.served += 1
+                rs.served_by_family[family] = \
+                    rs.served_by_family.get(family, 0) + 1
+
+    def note_dropped(self, relation: Optional[str] = None) -> None:
+        """A request dropped unserved on shutdown (counts as failed)."""
+        with self._lock:
+            self.failed += 1
+            if relation is not None:
+                self._rel_locked(relation).failed += 1
+
+    def record_batch(self, fill: int, reason: str,
+                     relation: Optional[str] = None,
+                     busy_s: float = 0.0) -> None:
+        with self._lock:
+            for st in ([self] if relation is None
+                       else [self, self._rel_locked(relation)]):
+                st.batches += 1
+                st.busy_s += busy_s
+                st.batch_fill[fill] = st.batch_fill.get(fill, 0) + 1
+                st.closes[reason] = st.closes.get(reason, 0) + 1
+
+    # -- locked readers -----------------------------------------------------
+    def latency_quantile(self, q: float,
+                         relation: Optional[str] = None) -> float:
+        with self._lock:
+            xs = (self.latencies_s if relation is None else
+                  self.relations.get(relation, _EMPTY_REL).latencies_s)
+            return _quantile(list(xs), q)
+
+    def queue_wait_quantile(self, q: float,
+                            relation: Optional[str] = None) -> float:
+        """Queue-wait quantile; an empty (or unknown-relation) histogram
+        is 0.0, never an error."""
+        with self._lock:
+            xs = (self.queue_waits_s if relation is None else
+                  self.relations.get(relation, _EMPTY_REL).queue_waits_s)
+            return _quantile(list(xs), q)
+
+    def snapshot(self) -> dict:
+        """A consistent deep copy of every counter and histogram.
+
+        Taken under the stats lock, so a monitoring thread never observes
+        a torn histogram (a deque mid-append, a dict mid-insert) while the
+        scheduler records a batch — the concurrent-submitter soak test
+        reads this under load.
+        """
+        with self._lock:
+            return dict(served=self.served, failed=self.failed,
+                        batches=self.batches,
+                        mean_batch_size=self.mean_batch_size,
+                        busy_s=self.busy_s,
+                        throughput_qps=self.throughput_qps,
+                        p50_latency_s=_quantile(list(self.latencies_s),
+                                                0.50),
+                        p95_latency_s=_quantile(list(self.latencies_s),
+                                                0.95),
+                        p50_queue_wait_s=_quantile(
+                            list(self.queue_waits_s), 0.50),
+                        p95_queue_wait_s=_quantile(
+                            list(self.queue_waits_s), 0.95),
+                        batch_fill=dict(self.batch_fill),
+                        closes=dict(self.closes),
+                        served_by_family=dict(self.served_by_family),
+                        relations={name: rs.as_dict()
+                                   for name, rs in self.relations.items()})
 
     def as_dict(self) -> dict:
-        return dict(served=self.served, failed=self.failed,
-                    batches=self.batches,
-                    mean_batch_size=self.mean_batch_size,
-                    busy_s=self.busy_s, throughput_qps=self.throughput_qps,
-                    p50_latency_s=self.latency_quantile(0.50),
-                    p95_latency_s=self.latency_quantile(0.95),
-                    p50_queue_wait_s=self.queue_wait_quantile(0.50),
-                    p95_queue_wait_s=self.queue_wait_quantile(0.95),
-                    batch_fill=dict(self.batch_fill),
-                    closes=dict(self.closes),
-                    served_by_family=dict(self.served_by_family))
+        return self.snapshot()
+
+
+_EMPTY_REL = RelationStats()
+
+
+@dataclasses.dataclass
+class _Tenant:
+    """Scheduler-side state of one attached relation."""
+    name: str
+    queue: "Deque[QueryRequest]"
+    max_batch: int
+    wait_s: float
 
 
 class QueryServer:
-    """Deadline-batched scheduler for query plans over one shared relation.
+    """Deadline-batched scheduler for query plans over attached relations.
+
+    The server is **multi-tenant**: :meth:`attach` registers any number of
+    relations (the paper's data owner shares a *database*; users then
+    query any relation without the owner), each with its own dataplane,
+    plan namespace and per-relation batching policy, all driven by ONE
+    scheduler thread. ``QueryServer(db, key)`` is the single-relation
+    surface — it attaches ``db`` under the default name and behaves
+    exactly as before.
 
     ``submit`` enqueues (thread-safe; the returned request is
-    ``wait()``-able); ``pump`` drains one micro-batch (≤ ``max_batch``)
-    through ``QueryClient.run_batch`` — the client groups compatible
-    strategies so each protocol round is issued once per group, not once
-    per request. Two driving modes:
+    ``wait()``-able) into the target relation's FIFO queue — pass a bare
+    plan plus ``relation="orders"``, or a :class:`QueryRequest`; ``pump``
+    drains one micro-batch (≤ the relation's ``max_batch``) through
+    ``QueryClient.run_batch(plans, relation=...)`` — the client groups
+    compatible strategies so each protocol round is issued once per group,
+    not once per request. Two driving modes:
 
       * synchronous — the caller pumps (``serve`` is the convenience loop:
-        enqueue everything, pump until the queue is dry);
-      * async — ``start()`` spawns the scheduler thread: submissions park
-        up to ``max_wait_ms`` to fill ``max_batch``, then the batch closes
-        (by *fill* or by *deadline* — counted in ``stats.closes``) and
-        runs. ``stop()`` drains and joins. The server is a context
-        manager: ``with QueryServer(..., max_wait_ms=5) as srv: ...``.
+        enqueue everything, pump until every queue is dry);
+      * async — ``start()`` spawns the scheduler thread: each relation's
+        submissions park up to its ``max_wait_ms`` to fill its
+        ``max_batch``, then that relation's batch closes (by *fill* or by
+        *deadline* — counted in ``stats.closes``, also per relation) and
+        runs. Relations close independently: a deep queue on "orders"
+        never delays a deadline on "users", and requests never batch
+        across relations. ``stop()`` drains every queue (closing a final
+        batch per relation) *before* the thread exits; ``stop(
+        drain=False)`` instead fails still-parked requests with
+        :class:`ServerStopped` so no waiter ever hangs. The server is a
+        context manager: ``with QueryServer(..., max_wait_ms=5) as srv``.
 
-    ``shards=S`` attaches the relation as a tuple-axis
-    :class:`ShardedRelation` whose per-shard cloud dispatches run
-    concurrently on a thread pool (pass ``dispatcher=`` to override the
-    placement policy, e.g. ``MapReduceExecutor.dispatcher()``). Sharding
-    and batching are both pure execution policy — results and ledgers are
-    bit-identical to a solo, unsharded client.
+    ``shards=S`` (per attach) partitions that relation as a tuple-axis
+    :class:`ShardedRelation`; all relations' shard dispatches share ONE
+    server-owned thread pool (``pool_workers`` bounds the global fan-out),
+    each through its own detachable :class:`~repro.core.dataplane.
+    PoolHandle` — pass ``dispatcher=`` to override placement per relation
+    (e.g. ``MapReduceExecutor.dispatcher()``). Sharding and batching are
+    both pure execution policy, and per-relation key streams are
+    independent, so every relation's rows and ledgers are bit-identical
+    to a solo single-relation server (the multi-tenant acceptance test).
     """
 
-    def __init__(self, db: Union[SecretSharedDB, ShardedRelation], key, *,
+    def __init__(self, db: Union[SecretSharedDB, ShardedRelation,
+                                 None] = None, key=None, *,
                  backend="jnp",
                  executor: Optional[MapReduceExecutor] = None,
                  max_batch: int = 32,
                  max_wait_ms: float = 20.0,
                  shards: int = 1,
-                 dispatcher: Optional[Dispatcher] = None):
-        self.client = QueryClient(db, key, backend=backend,
-                                  executor=executor)
-        self._owned_dispatcher: Optional[ThreadedDispatcher] = None
-        if shards > 1 or dispatcher is not None:
-            if dispatcher is None:
-                plane = self.client.dataplane
-                workers = max(shards, plane.n_shards if plane else 1)
-                dispatcher = self._owned_dispatcher = ThreadedDispatcher(
-                    max_workers=workers)
-            self.client.attach(shards=shards, dispatcher=dispatcher)
+                 dispatcher: Optional[Dispatcher] = None,
+                 pool_workers: Optional[int] = None):
         self.max_batch = max(1, max_batch)
         self.max_wait_ms = max(0.0, max_wait_ms)
+        self.client = QueryClient(db, 0 if key is None else key,
+                                  backend=backend, executor=executor)
+        self._owned_dispatcher: Optional[ThreadedDispatcher] = None
+        self._pool_workers = pool_workers
+        self._tenants: Dict[str, _Tenant] = {}
+        self._rr_last: Optional[str] = None     # round-robin pump cursor
         self.stats = ServeStats()
-        self._queue: Deque[QueryRequest] = collections.deque()
         self._cond = threading.Condition()
         self._pump_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self._stopping = False
+        self._drain_on_stop = True
+        self._rejecting = False     # stop(drain=False) .. next start()
+        if db is None and (shards > 1 or dispatcher is not None):
+            raise ValueError(
+                "shards=/dispatcher= are per-relation policies — with no "
+                "db to attach they would be silently dropped; pass them "
+                "to attach(name, relation, shards=..., dispatcher=...) "
+                "instead")
+        if db is not None:
+            if shards > 1 or dispatcher is not None:
+                if dispatcher is None:
+                    plane = self.client.dataplane
+                    workers = max(shards,
+                                  plane.n_shards if plane else 1)
+                    dispatcher = self._pool_handle(workers)
+                self.client.attach(shards=shards, dispatcher=dispatcher)
+            self._tenants[DEFAULT_RELATION] = _Tenant(
+                DEFAULT_RELATION, collections.deque(), self.max_batch,
+                self.max_wait_ms / 1e3)
+
+    # -- relation registry --------------------------------------------------
+    def _pool_handle(self, want_workers: int) -> Dispatcher:
+        """A per-relation handle on the ONE server-owned shard pool.
+
+        The pool is created on first demand, sized by ``pool_workers``
+        (falling back to the first requester's shard count), and shared by
+        every relation attached afterwards — the global dispatch fan-out
+        stays bounded no matter how many tenants are registered.
+        """
+        if self._owned_dispatcher is None:
+            self._owned_dispatcher = ThreadedDispatcher(
+                max_workers=self._pool_workers or max(1, want_workers))
+        return self._owned_dispatcher.handle()
+
+    def attach(self, name: str,
+               relation: Union[SecretSharedDB, ShardedRelation,
+                               None] = None, *,
+               shards: int = 1,
+               dispatcher: Optional[Dispatcher] = None,
+               key=None,
+               max_batch: Optional[int] = None,
+               max_wait_ms: Optional[float] = None) -> "QueryServer":
+        """Register (or re-shard) relation ``name`` on this server.
+
+        ``relation`` may be omitted to re-configure an already-attached
+        name. ``key`` seeds the relation's private query-key stream (so a
+        tenant replays a solo server bit-for-bit); ``max_batch`` /
+        ``max_wait_ms`` override the server defaults for this relation's
+        batch group only. With ``shards > 1`` and no explicit
+        ``dispatcher``, the relation's shard dispatches join the shared
+        server pool through their own detachable handle.
+        """
+        if shards > 1 and dispatcher is None:
+            dispatcher = self._pool_handle(shards)
+        self.client.attach(relation, name=name, shards=shards,
+                           dispatcher=dispatcher, key=key)
+        with self._cond:
+            t = self._tenants.get(name)
+            if t is None:
+                t = self._tenants[name] = _Tenant(
+                    name, collections.deque(), self.max_batch,
+                    self.max_wait_ms / 1e3)
+            if max_batch is not None:
+                t.max_batch = max(1, max_batch)
+            if max_wait_ms is not None:
+                t.wait_s = max(0.0, max_wait_ms) / 1e3
+            self._cond.notify_all()
+        return self
+
+    @property
+    def relations(self) -> Tuple[str, ...]:
+        """Attached relation names, in registration order."""
+        with self._cond:                # vs a racing live attach()
+            return tuple(self._tenants)
 
     @property
     def dataplane(self) -> Optional[ShardedRelation]:
         return self.client.dataplane
 
+    def dataplane_of(self, relation: str) -> Optional[ShardedRelation]:
+        return self.client.dataplane_of(relation)
+
+    def _tenant(self, relation: Optional[str]) -> _Tenant:
+        if relation is None:
+            t = self._tenants.get(DEFAULT_RELATION)
+            if t is not None:
+                return t
+            if len(self._tenants) == 1:
+                return next(iter(self._tenants.values()))
+            if not self._tenants:
+                raise ValueError("no relation attached — construct with a "
+                                 "db or call attach(name, db)")
+            raise ValueError(f"several relations attached "
+                             f"({list(self._tenants)}) — pass relation=")
+        try:
+            return self._tenants[relation]
+        except KeyError:
+            raise KeyError(f"unknown relation {relation!r}; attached: "
+                           f"{list(self._tenants)}") from None
+
     # -- scheduling ---------------------------------------------------------
-    def submit(self, request: QueryRequest) -> QueryRequest:
+    def submit(self, request: Union[QueryRequest, Plan],
+               relation: Optional[str] = None) -> QueryRequest:
+        """Enqueue one request (thread-safe) into its relation's queue.
+
+        Accepts a bare :class:`~repro.api.plans.Plan` for convenience;
+        ``relation`` (or ``request.relation``) routes it — omitted, the
+        default/sole relation takes it.
+
+        From the moment ``stop(drain=False)`` begins until the next
+        ``start()``, submissions are failed immediately with
+        :class:`ServerStopped` (their ``wait()`` raises) — a racer must
+        never be parked on a queue nothing will ever pump.
+        """
+        if isinstance(request, Plan):
+            request = QueryRequest(request)
+        tenant = self._tenant(relation if relation is not None
+                              else request.relation)
+        request.relation = tenant.name
         request.enqueued_at = time.time()
         with self._cond:
-            self._queue.append(request)
-            self._cond.notify_all()
+            if self._rejecting:
+                request.error = ServerStopped(
+                    f"QueryServer stopped (drain=False) — not accepting "
+                    f"submissions for relation {tenant.name!r} until "
+                    f"start()")
+                request._done.set()
+            else:
+                tenant.queue.append(request)
+                self._cond.notify_all()
+        if request.error is not None:
+            self.stats.note_dropped(tenant.name)
         return request
 
-    def pending(self) -> int:
-        return len(self._queue)
+    def pending(self, relation: Optional[str] = None) -> int:
+        with self._cond:                # vs a racing live attach()
+            if relation is not None:
+                return len(self._tenant(relation).queue)
+            return sum(len(t.queue) for t in self._tenants.values())
 
-    def pump(self, reason: str = "manual") -> List[QueryRequest]:
-        """Drain one micro-batch and execute it; returns finished requests.
+    def _rotation(self) -> List[str]:
+        """Tenant names rotated past the last-pumped one — the shared
+        round-robin order of the sync pump and the async scheduler scan
+        (so a chatty relation cannot starve its neighbours)."""
+        names = list(self._tenants)
+        start = (names.index(self._rr_last) + 1
+                 if self._rr_last in names else 0)
+        return names[start:] + names[:start]
+
+    def _next_tenant(self) -> Optional[_Tenant]:
+        for name in self._rotation():
+            if self._tenants[name].queue:
+                return self._tenants[name]
+        return None
+
+    def pump(self, reason: str = "manual",
+             relation: Optional[str] = None) -> List[QueryRequest]:
+        """Drain one relation's micro-batch and execute it.
+
+        ``relation`` picks the batch group; omitted, the round-robin
+        cursor finds the next relation with queued work. Batches NEVER mix
+        relations — each closes and runs against its own dataplane with
+        its own key stream, so per-relation results are independent of
+        neighbour traffic.
 
         Fault isolation: a plan that raises (bad cardinality hint, invalid
         padding, …) must not take its batch-mates down, so on a batch
@@ -269,40 +601,44 @@ class QueryServer:
         """
         with self._pump_lock:
             with self._cond:
+                tenant = (self._tenant(relation) if relation is not None
+                          else self._next_tenant())
+                if tenant is None:
+                    return []
+                self._rr_last = tenant.name
                 batch: List[QueryRequest] = []
-                while self._queue and len(batch) < self.max_batch:
-                    batch.append(self._queue.popleft())
+                while tenant.queue and len(batch) < tenant.max_batch:
+                    batch.append(tenant.queue.popleft())
             if not batch:
                 return []
             t0 = time.time()
             for r in batch:
                 r.queue_wait_s = t0 - (r.enqueued_at or t0)
-                self.stats.queue_waits_s.append(r.queue_wait_s)
+                self.stats.note_queue_wait(r.queue_wait_s, tenant.name)
             try:
-                outcomes = self.client.run_batch([r.plan for r in batch])
+                outcomes = self.client.run_batch(
+                    [r.plan for r in batch], relation=tenant.name)
             except Exception:  # noqa: BLE001 — isolate failing request(s)
                 outcomes = []
                 for r in batch:
                     try:
-                        outcomes.append(self.client.run_batch([r.plan])[0])
+                        outcomes.append(self.client.run_batch(
+                            [r.plan], relation=tenant.name)[0])
                     except Exception as e:  # noqa: BLE001
                         outcomes.append(e)
             t1 = time.time()
             for r, res in zip(batch, outcomes):
+                r.latency_s = t1 - (r.enqueued_at or t0)
                 if isinstance(res, Exception):
                     r.error = res
-                    self.stats.failed += 1
+                    self.stats.note_result(r.latency_s, None, tenant.name)
                 else:
                     r.result = res
-                    self.stats.served += 1
-                    fam = plan_family(r.plan)
-                    self.stats.served_by_family[fam] = \
-                        self.stats.served_by_family.get(fam, 0) + 1
-                r.latency_s = t1 - (r.enqueued_at or t0)
-                self.stats.latencies_s.append(r.latency_s)
+                    self.stats.note_result(r.latency_s,
+                                           plan_family(r.plan), tenant.name)
                 r._done.set()
-            self.stats.record_batch(len(batch), reason)
-            self.stats.busy_s += t1 - t0
+            self.stats.record_batch(len(batch), reason, tenant.name,
+                                    busy_s=t1 - t0)
             return batch
 
     # -- async driver -------------------------------------------------------
@@ -312,6 +648,8 @@ class QueryServer:
             if self._thread is not None:
                 return self
             self._stopping = False
+            self._drain_on_stop = True
+            self._rejecting = False
             self._thread = threading.Thread(target=self._scheduler_loop,
                                             name="query-server",
                                             daemon=True)
@@ -319,23 +657,54 @@ class QueryServer:
         return self
 
     def stop(self, drain: bool = True) -> None:
-        """Stop the scheduler thread; ``drain`` pumps the queue dry first."""
+        """Stop the scheduler thread.
+
+        ``drain=True`` (default): the scheduler closes a final batch per
+        relation — pending submissions are *served*, then the thread
+        joins; a late racer still in a queue after the join is pumped
+        inline. ``drain=False``: still-parked requests are failed with
+        :class:`ServerStopped` (their ``wait()`` raises instead of
+        hanging forever).
+        """
         with self._cond:
             thread = self._thread
             self._stopping = True
+            self._drain_on_stop = drain
+            if not drain:
+                # close the race window NOW: anything already queued is
+                # swept by _fail_pending below; anything submitted after
+                # this point fails fast inside submit().
+                self._rejecting = True
             self._cond.notify_all()
         if thread is not None:
             thread.join()
         with self._cond:
             self._thread = None
-        while drain and self._queue:
-            self.pump("drain")
+        if drain:
+            while self.pending():
+                self.pump("drain")
+        else:
+            self._fail_pending()
+
+    def _fail_pending(self) -> None:
+        """Drop every queued request with a loud ServerStopped error."""
+        with self._cond:
+            dropped = [(t.name, r) for t in self._tenants.values()
+                       for r in t.queue]
+            for t in self._tenants.values():
+                t.queue.clear()
+        for name, r in dropped:
+            r.error = ServerStopped(
+                f"QueryServer stopped (drain=False) before serving this "
+                f"request (relation {name!r})")
+            self.stats.note_dropped(name)
+            r._done.set()
 
     def close(self) -> None:
         """Stop the scheduler and release the server-owned shard pool.
 
-        Terminal: after ``close()`` the server's own ThreadedDispatcher
-        falls back to serial shard execution (still correct) if reused.
+        Terminal: after ``close()`` the shared pool's handles fall back to
+        serial shard execution (still correct) if reused.
         """
         self.stop()
         if self._owned_dispatcher is not None:
@@ -348,32 +717,53 @@ class QueryServer:
         self.close()
 
     def _scheduler_loop(self) -> None:
-        wait_s = self.max_wait_ms / 1e3
         while True:
+            todo: Optional[Tuple[str, str]] = None
             with self._cond:
-                while not self._queue and not self._stopping:
-                    self._cond.wait()       # submit()/stop() notify
+                while not self._stopping and not any(
+                        t.queue for t in self._tenants.values()):
+                    self._cond.wait()       # submit()/stop()/attach notify
                 if self._stopping:
-                    return
-                # park until the batch fills or the OLDEST submission's
-                # deadline expires — latency is bounded by max_wait_ms,
-                # fusion is bounded by max_batch.
-                deadline = self._queue[0].enqueued_at + wait_s
-                while (len(self._queue) < self.max_batch
-                       and not self._stopping):
-                    remaining = deadline - time.time()
-                    if remaining <= 0:
+                    break
+                # per-relation close decisions: a batch group closes by
+                # *fill* when its queue reaches the relation's max_batch,
+                # by *deadline* when its OLDEST submission's wait expires
+                # — latency is bounded per relation by max_wait_ms, fusion
+                # by max_batch; relations never delay one another. The
+                # scan ROTATES past the last-pumped tenant (same cursor as
+                # the sync pump) so a tenant kept permanently full by hot
+                # traffic cannot starve a neighbour's expired deadline.
+                now = time.time()
+                earliest: Optional[float] = None
+                for name in self._rotation():
+                    t = self._tenants[name]
+                    if not t.queue:
+                        continue
+                    if len(t.queue) >= t.max_batch:
+                        todo = (t.name, "full")
                         break
-                    self._cond.wait(remaining)
-                reason = ("full" if len(self._queue) >= self.max_batch
-                          else "deadline")
-            self.pump(reason)
+                    deadline = t.queue[0].enqueued_at + t.wait_s
+                    if deadline <= now:
+                        todo = (t.name, "deadline")
+                        break
+                    earliest = (deadline if earliest is None
+                                else min(earliest, deadline))
+                if todo is None:
+                    self._cond.wait(max(0.0, earliest - now))
+                    continue
+            self.pump(todo[1], relation=todo[0])
+        # drain-before-exit: close a final batch per relation so stop()
+        # never drops parked submissions on the floor (drain=False skips
+        # this — stop() then fails them loudly instead).
+        if self._drain_on_stop:
+            while self.pending():
+                self.pump("drain")
 
     def serve(self, requests: Sequence[QueryRequest]) -> List[QueryRequest]:
         """Enqueue ``requests`` and finish them all.
 
         With the scheduler running this blocks on the requests' completion
-        events; otherwise it pumps inline until the queue is dry.
+        events; otherwise it pumps inline until every queue is dry.
         """
         for r in requests:
             self.submit(r)
@@ -382,7 +772,7 @@ class QueryServer:
                 r.wait()
             return list(requests)
         done: List[QueryRequest] = []
-        while self._queue:
+        while self.pending():
             done += self.pump()
         return done
 

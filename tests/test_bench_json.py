@@ -15,6 +15,7 @@ import pytest
 _BENCHDIR = pathlib.Path(__file__).resolve().parent.parent / "benchmarks"
 _BENCH = _BENCHDIR / "bench_queries.py"
 _COMPARE = _BENCHDIR / "compare_bench.py"
+_PLOT = _BENCHDIR / "plot_history.py"
 
 
 def _load_module(path):
@@ -34,6 +35,11 @@ def cb():
     return _load_module(_COMPARE)
 
 
+@pytest.fixture(scope="module")
+def ph():
+    return _load_module(_PLOT)
+
+
 def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
     monkeypatch.setattr(bq, "ALL", [bq.bench_count])
     monkeypatch.setattr(bq, "SMOKE_SIZES", {"bench_count": (16,)})
@@ -45,6 +51,10 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
     monkeypatch.setattr(
         bq, "bench_sharded_dataplane",
         lambda **kw: real_sharded(n=16, batch=4, shard_counts=(1, 2)))
+    real_serving = bq.bench_multi_tenant_serving
+    monkeypatch.setattr(
+        bq, "bench_multi_tenant_serving",
+        lambda **kw: real_serving(n=16, queries=3))
     out = tmp_path / "BENCH_queries.json"
     bq.main(["--smoke", "--out", str(out)])
 
@@ -74,6 +84,13 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
     # the tiny sweep covers all three batched families
     names = {row["name"] for row in doc["batched"]}
     assert {"batched_range", "batched_join_pkfk"} <= names
+    # multi-tenant serving sweep: one server over 2 relations == solo
+    assert doc["serving"]
+    for row in doc["serving"]:
+        assert {"name", "n", "relations", "queries", "rounds", "comm_bits",
+                "served_by_relation", "ledger_equal"} <= set(row)
+        assert row["ledger_equal"] is True and row["relations"] == 2
+        assert sum(row["served_by_relation"].values()) == row["queries"]
 
 
 # ---------------------------------------------------------------------------
@@ -233,3 +250,125 @@ def test_history_requires_baseline_or_history_flag(cb, tmp_path):
     new = _write(tmp_path, "solo.json", _doc())
     with _pytest.raises(SystemExit):
         cb.main([new])
+
+
+# ---------------------------------------------------------------------------
+# serving (multi-tenant) section gating
+# ---------------------------------------------------------------------------
+
+def _serving_doc():
+    doc = _sharded_doc()
+    doc["serving"] = [
+        {"name": "multi_tenant_mixed", "n": 16, "relations": 2,
+         "queries": 6, "wall_us": 10, "rounds": 12, "comm_bits": 60000,
+         "served_by_relation": {"alpha": 3, "beta": 3},
+         "ledger_equal": True},
+    ]
+    return doc
+
+
+def test_compare_bench_gates_serving_costs(cb, tmp_path):
+    new = _write(tmp_path, "mt_new.json", _serving_doc())
+    old = _write(tmp_path, "mt_old.json", _serving_doc())
+    assert cb.main([new, old]) == 0
+    doc = _serving_doc()
+    doc["serving"][0]["rounds"] += 1
+    assert cb.main([_write(tmp_path, "mt_up.json", doc), old]) == 1
+    # multi-tenant != solo-server ledger is a regression
+    doc = _serving_doc()
+    doc["serving"][0]["ledger_equal"] = False
+    assert cb.main([_write(tmp_path, "mt_bad.json", doc), old]) == 1
+    # an OLD baseline without the section is not a "vanished config"
+    assert cb.main([new, _write(tmp_path, "mt_v1.json",
+                                _sharded_doc())]) == 0
+    # the history entry carries the serving costs too
+    hist = tmp_path / "mt_history.json"
+    assert cb.main([new, "--append-history", str(hist)]) == 0
+    h = json.loads(hist.read_text())
+    assert h["runs"][0]["serving"]["multi_tenant_mixed/2/16"] == {
+        "rounds": 12, "comm_bits": 60000}
+
+
+# ---------------------------------------------------------------------------
+# plot_history.py: per-config trend tables over the time series
+# ---------------------------------------------------------------------------
+
+def _history(tmp_path, cb, docs_labels):
+    hist = tmp_path / "trend_history.json"
+    for i, (doc, label) in enumerate(docs_labels):
+        p = _write(tmp_path, f"trend_{i}.json", doc)
+        assert cb.main([p, "--append-history", str(hist),
+                        "--history-label", label]) == 0
+    return str(hist)
+
+
+def test_plot_history_flat_series(ph, cb, tmp_path, capsys):
+    hist = _history(tmp_path, cb, [(_serving_doc(), "pr-4"),
+                                   (_serving_doc(), "pr-5")])
+    assert ph.main([hist]) == 0
+    out = capsys.readouterr().out
+    # one row per (config, metric), every run's value, flat verdict
+    assert "bench_count/count_3.1/16" in out
+    assert "sharded_batch/2/16" in out
+    assert "multi_tenant_mixed/2/16" in out
+    assert "pr-4" in out and "pr-5" in out
+    assert "REGRESSED" not in out
+
+
+def test_plot_history_flags_regression_and_improvement(ph, cb, tmp_path,
+                                                       capsys):
+    worse = _serving_doc()
+    worse["results"][1]["rounds"] += 2          # cost crept up over time
+    better = _serving_doc()
+    better["batched"][0]["comm_bits"] -= 31
+    hist = _history(tmp_path, cb, [(_serving_doc(), "pr-4"),
+                                   (worse, "pr-5")])
+    assert ph.main([hist]) == 1                 # trend regression -> fail
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out
+    hist2 = _history(tmp_path, cb, [(_serving_doc(), "a"), (better, "b")])
+    assert ph.main([hist2]) == 0
+    assert "improved" in capsys.readouterr().out
+
+
+def test_plot_history_gate_recovers_after_accepted_increase(ph, cb,
+                                                            tmp_path,
+                                                            capsys):
+    """The trend gate flags an increase ONCE (on the step that introduced
+    it), then the series carries the new level — later runs must pass, or
+    a single accepted increase would fail CI forever."""
+    worse = _serving_doc()
+    worse["results"][1]["rounds"] += 2
+    hist = _history(tmp_path, cb, [(_serving_doc(), "r1"), (worse, "r2"),
+                                   (worse, "r3")])
+    assert ph.main([hist]) == 0
+    assert "REGRESSED" not in capsys.readouterr().out
+
+
+def test_plot_history_sections_filters_and_new_configs(ph, cb, tmp_path,
+                                                       capsys):
+    grown = _serving_doc()
+    grown["results"].append(dict(grown["results"][0], name="new_query"))
+    hist = _history(tmp_path, cb, [(_sharded_doc(), "old"),
+                                   (grown, "new")])
+    # a config absent from early runs shows "-" and doesn't crash
+    assert ph.main([hist]) == 0
+    out = capsys.readouterr().out
+    assert "new_query" in out and "-" in out
+    # section/metric filters narrow the table
+    assert ph.main([hist, "--section", "batched", "--metric", "rounds",
+                    "--format", "tsv"]) == 0
+    out = capsys.readouterr().out
+    assert "batched_range/4/16" in out
+    assert "table" not in out.splitlines()[1]
+    assert "comm_bits" not in out
+
+
+def test_plot_history_rejects_malformed(ph, tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": "nope", "runs": []}))
+    assert ph.main([str(bad)]) == 2
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"schema": "bench_history/v1", "runs": []}))
+    assert ph.main([str(empty)]) == 2
+    assert ph.main([str(tmp_path / "missing.json")]) == 2

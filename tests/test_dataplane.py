@@ -101,6 +101,32 @@ def test_sharded_relation_partitions_cover_and_clamp(range_db):
     assert as_dataplane(plane) is plane
 
 
+def test_oversharded_tiny_relation_regression():
+    """Regression (n=1, S=4): more shards than tuples must clamp to n
+    non-empty shards — never emit zero-width shard dispatches — and the
+    oversharded plane must still answer queries correctly end to end."""
+    from repro.core.partition import split_bounds
+    assert split_bounds(0, 1, 4) == [(0, 1)]      # clamp, no empties
+    one = [["E1", "Ada", "Byron", "900", "Math"]]
+    db1 = outsource(jax.random.PRNGKey(3), one,
+                    column_names=["Id", "First", "Last", "Sal", "Dept"],
+                    codec=CODEC, n_shares=20, degree=1)
+    plane = ShardedRelation(db1, shards=4)
+    assert plane.n_shards == 1
+    assert all(s.n_tuples > 0 for s in plane.shards)
+    assert plane.max_shard_rows == 1
+    client = QueryClient(plane, key=9)
+    assert client.stats().shards == 1              # planner sees the clamp
+    res = client.run(Count(Eq("First", "Ada")))
+    assert res.count == 1
+    sel = client.run(Select(Eq("First", "Ada"), strategy="one_round"))
+    assert sel.rows == [one[0]]
+    # through attach too: an explicit shards=4 on a 1-tuple relation
+    via_attach = QueryClient(db1, key=9)
+    assert via_attach.attach(shards=4).n_shards == 1
+    assert via_attach.run(Count(Eq("First", "Ada"))).count == 1
+
+
 # ---------------------------------------------------------------------------
 # S ∈ {1,2,4}: sharded batch == unsharded sequential, all five families
 # ---------------------------------------------------------------------------
@@ -383,6 +409,39 @@ def test_explain_batch_predicts_run_batch_ledger(range_db, child_db):
     assert exp4.shards == 4
     assert exp4.bits == exp.bits and exp4.rounds == exp.rounds
     assert exp4.dispatches > exp.dispatches
+
+
+def test_reattach_invalidates_cached_explanations(range_db, child_db):
+    """Regression: attach(shards=S) after explain() left stale
+    ``CostEstimate.dispatches`` (priced at the OLD shard count) in cached
+    BatchExplanations — re-attaching must invalidate the cache."""
+    _, db = range_db
+    plans = _all_family_plans(child_db)
+    client = QueryClient(db, key=1)
+    exp1 = client.explain(plans)
+    assert client.explain(plans) is exp1            # cached while valid
+    client.attach(shards=4)
+    exp4 = client.explain(plans)
+    assert exp4 is not exp1                         # invalidated
+    assert exp4.shards == 4 and exp4.dispatches > exp1.dispatches
+    # fresh-client parity: the recomputed estimate IS the sharded truth
+    fresh = QueryClient(db, key=1)
+    fresh.attach(shards=4)
+    assert fresh.explain(plans) == exp4
+    # per-relation namespaces cache (and label) independently
+    multi = QueryClient(db, key=1)
+    multi.attach(child_db, name="tasks")
+    exp_default = multi.explain(
+        [Select(Eq("Name", "nm1"), strategy="one_round")])
+    exp_tasks = multi.explain(
+        [Select(Eq("Task", "t1"), strategy="one_round")], relation="tasks")
+    assert exp_default.relation == "default"
+    assert exp_tasks.relation == "tasks"
+    assert exp_tasks.bits != exp_default.bits       # priced per target n
+    multi.attach(shards=2, name="tasks")
+    assert multi.explain(
+        [Select(Eq("Task", "t1"), strategy="one_round")],
+        relation="tasks").dispatches > exp_tasks.dispatches
 
 
 def test_explain_batch_select_group_matches_group_estimate(range_db):

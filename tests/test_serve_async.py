@@ -14,7 +14,8 @@ import pytest
 from repro.api import Count, Eq, Select
 from repro.core import Codec, outsource
 from repro.core.queries import CardinalityError
-from repro.launch.serve import QueryRequest, QueryServer
+from repro.launch.serve import (QueryRequest, QueryServer, ServeStats,
+                                ServerStopped)
 
 CODEC = Codec(word_length=8)
 COLUMNS = ["EmployeeId", "FirstName", "LastName", "Salary", "Department"]
@@ -142,6 +143,104 @@ def test_stop_drains_queue(employee_db):
     server.stop()
     assert all(r.done() and r.result.count == 1 for r in reqs)
     assert server.stats.closes.get("drain", 0) >= 1
+
+
+def test_stop_with_scheduler_serves_parked_requests(employee_db):
+    """Regression: requests parked in the queue when stop() is called must
+    be SERVED (a final drain batch closes inside the scheduler thread),
+    not silently dropped."""
+    server = QueryServer(employee_db, key=29, max_batch=64,
+                         max_wait_ms=60_000)      # deadline far away
+    server.start()
+    reqs = [server.submit(QueryRequest(Count(Eq("FirstName", "John"))))
+            for _ in range(3)]
+    server.stop()                                # parked: deadline not due
+    assert all(r.done() and r.result.count == 2 for r in reqs)
+    assert server.stats.closes.get("drain", 0) >= 1
+
+
+def test_stop_without_drain_raises_server_stopped(employee_db):
+    """Regression: stop(drain=False) used to leave parked requests undone
+    forever — wait() must raise ServerStopped, never hang."""
+    server = QueryServer(employee_db, key=31, max_batch=64,
+                         max_wait_ms=60_000)
+    server.start()
+    reqs = [server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+            for _ in range(2)]
+    server.stop(drain=False)
+    for r in reqs:
+        assert r.done()
+        assert isinstance(r.error, ServerStopped)
+        with pytest.raises(ServerStopped):
+            r.wait(timeout=1)
+    assert server.stats.failed == 2
+    # a racer submitting AFTER stop(drain=False) fails fast too — it must
+    # never be parked on a queue nothing will pump...
+    late = server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+    assert late.done()
+    with pytest.raises(ServerStopped):
+        late.wait(timeout=1)
+    # ...and start() lifts the rejection (the server stays restartable):
+    # the new submission parks normally (deadline is 60 s out) and the
+    # draining stop() serves it
+    server.start()
+    again = server.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+    assert again.error is None and not again.done()
+    server.stop()
+    assert again.wait(timeout=1).result.count == 1
+    # sync mode too: no scheduler thread, queued work still fails loudly
+    server2 = QueryServer(employee_db, key=32)
+    r2 = server2.submit(QueryRequest(Count(Eq("FirstName", "Eve"))))
+    server2.stop(drain=False)
+    with pytest.raises(ServerStopped):
+        r2.wait(timeout=1)
+
+
+def test_stats_snapshot_consistent_under_concurrent_pumps(employee_db):
+    """Regression: snapshot()/quantiles used to read the histograms with
+    no lock — a reader racing the scheduler could see a torn deque
+    (RuntimeError mid-sort). Hammer both sides."""
+    server = QueryServer(employee_db, key=33, max_batch=2, max_wait_ms=2)
+    server.start()
+    stop_reading = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop_reading.is_set():
+            try:
+                snap = server.stats.snapshot()
+                assert snap["served"] >= 0
+                server.stats.queue_wait_quantile(0.5)
+                server.stats.latency_quantile(0.95)
+            except Exception as e:  # noqa: BLE001 — the regression signal
+                errors.append(e)
+                return
+
+    t = threading.Thread(target=reader)
+    t.start()
+    reqs = [server.submit(QueryRequest(Count(Eq("FirstName", "John"))))
+            for _ in range(30)]
+    for r in reqs:
+        r.wait(timeout=60)
+    stop_reading.set()
+    t.join()
+    server.stop()
+    assert errors == []
+    snap = server.stats.snapshot()
+    assert snap["served"] == 30
+    assert sum(snap["batch_fill"].values()) == snap["batches"]
+
+
+def test_empty_and_unknown_histograms_quantile_zero():
+    """queue_wait_quantile on an empty deque (or an unknown relation) is
+    0.0, never an exception."""
+    stats = ServeStats()
+    assert stats.queue_wait_quantile(0.5) == 0.0
+    assert stats.latency_quantile(0.95) == 0.0
+    assert stats.queue_wait_quantile(0.5, relation="nope") == 0.0
+    assert stats.latency_quantile(0.5, relation="nope") == 0.0
+    snap = stats.snapshot()
+    assert snap["p50_queue_wait_s"] == 0.0 and snap["relations"] == {}
 
 
 def test_start_is_idempotent_and_restartable(employee_db):
