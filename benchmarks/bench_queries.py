@@ -37,8 +37,9 @@ from typing import List, Optional, Sequence
 
 import jax
 
-from repro.api import Between, Count, DBStats, Join, QueryClient, \
-    RangeCount, RangeSelect, Select, Eq, Padding, choose_select_strategy
+from repro.api import Aggregate, Between, Count, DBStats, Join, \
+    QueryClient, RangeCount, RangeSelect, Select, Eq, Padding, \
+    choose_select_strategy
 from repro.core import outsource, Codec
 from repro.data import synthetic_relation
 
@@ -404,6 +405,64 @@ def bench_multi_tenant_serving(*, n: int = 64, queries: int = 6
                  ledger_equal=ledger_equal)]
 
 
+def bench_aggregation(*, n: int = 64) -> List[dict]:
+    """The private-analytics acceptance sweep: verified secret-shared
+    SUM/AVG/MIN-MAX (OBSCURE-style) through ``run_batch``. Per op it
+    records rounds and comm bits, asserts batched == sequential ledger
+    equality AND a plaintext-oracle match, and prices verification by
+    measuring the same plan verify-on vs verify-off (the overhead the
+    planner promises: one round + c checksum elements per opened tensor).
+
+    Salary is outsourced at 15 bits here: conditional MIN/MAX mask
+    non-matching rows to the ±(2^(t-2)-1) sentinel, so values (≤ 7999)
+    must fit one headroom bit below the column width.
+    """
+    import statistics
+
+    rows = synthetic_relation(n, seed=14, skew=0.3)
+    db = outsource(jax.random.PRNGKey(14), rows, column_names=COLUMNS,
+                   codec=CODEC, n_shares=20, degree=1,
+                   numeric_columns={3: 15})
+    sal = [int(r[3]) for r in rows]
+    johns = [s for s, r in zip(sal, rows) if r[1] == "John"]
+    specs = [
+        ("agg_sum", Aggregate("sum", "Salary"), sum(sal)),
+        ("agg_sum_cond", Aggregate("sum", "Salary",
+                                   where=Eq("FirstName", "John")),
+         sum(johns)),
+        ("agg_avg_cond", Aggregate("avg", "Salary",
+                                   where=Eq("FirstName", "John")),
+         statistics.mean(johns)),
+        ("agg_min_cond", Aggregate("min", "Salary",
+                                   where=Eq("FirstName", "John"),
+                                   reduce_every=2), min(johns)),
+        ("agg_max", Aggregate("max", "Salary", reduce_every=2), max(sal)),
+    ]
+    out: List[dict] = []
+    plans = [p for _, p, _ in specs]
+    seq = [QueryClient(db, key=41).run(p) for p in plans]
+    t0 = time.time()
+    bat = QueryClient(db, key=41).run_batch(plans)
+    bat_us = (time.time() - t0) * 1e6
+    for (name, plan, want), a, b in zip(specs, seq, bat):
+        ledger_equal = (a.ledger == b.ledger and a.value == b.value)
+        assert ledger_equal, f"{name}: batch != sequential"
+        got = b.value
+        assert (abs(got - want) < 1e-9), (name, got, want)
+        ver = QueryClient(db, key=41).run(
+            Aggregate(plan.op, plan.column, where=plan.where, verify=True,
+                      reduce_every=plan.reduce_every))
+        assert ver.value == a.value    # verification never moves the value
+        out.append(dict(
+            name=name, n=n, batch=len(plans),
+            rounds=b.ledger.rounds, comm_bits=b.ledger.communication_bits,
+            verify_rounds=ver.ledger.rounds - a.ledger.rounds,
+            verify_comm_bits=(ver.ledger.communication_bits
+                              - a.ledger.communication_bits),
+            batch_us=round(bat_us), ledger_equal=ledger_equal))
+    return out
+
+
 ALL = [bench_count, bench_select_single, bench_select_one_round,
        bench_select_tree, bench_planner_auto, bench_join, bench_range,
        bench_scaling_verification]
@@ -439,9 +498,10 @@ def collect(*, smoke: bool = False) -> dict:
                                       batch=6 if smoke else 8)
     serving = bench_multi_tenant_serving(n=32 if smoke else 64,
                                          queries=4 if smoke else 6)
+    aggregation = bench_aggregation(n=32 if smoke else 64)
     return dict(schema="bench_queries/v1", smoke=smoke,
                 results=results, batched=batched, sharded=sharded,
-                serving=serving)
+                serving=serving, aggregation=aggregation)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -472,6 +532,11 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
               f"{s['queries']} queries served by one scheduler "
               f"{s['served_by_relation']} "
               f"(ledger_equal={s['ledger_equal']})", file=sys.stderr)
+    for a in doc["aggregation"]:
+        print(f"  {a['name']} n={a['n']}: rounds={a['rounds']} "
+              f"comm={a['comm_bits']}b, verify +{a['verify_rounds']}r "
+              f"+{a['verify_comm_bits']}b "
+              f"(ledger_equal={a['ledger_equal']})", file=sys.stderr)
 
 
 if __name__ == "__main__":

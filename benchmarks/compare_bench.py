@@ -70,6 +70,12 @@ def index_serving(doc: dict) -> Dict[Tuple[str, int, int], dict]:
             for r in doc.get("serving", [])}
 
 
+def index_aggregation(doc: dict) -> Dict[Tuple[str, int, int], dict]:
+    # "aggregation" (SUM/AVG/MIN-MAX + verification) post-dates "serving".
+    return {(r["name"], r["batch"], r["n"]): r
+            for r in doc.get("aggregation", [])}
+
+
 def compare(new: dict, old: dict, *, allow_missing: bool = False
             ) -> Tuple[List[str], List[str]]:
     """-> (regressions, notes). Empty regressions == gate passes."""
@@ -105,6 +111,8 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
               GATED_KEYS)
     diff_rows("serving", index_serving(new), index_serving(old),
               GATED_KEYS)
+    diff_rows("aggregation", index_aggregation(new), index_aggregation(old),
+              GATED_KEYS + ("verify_rounds", "verify_comm_bits"))
     for key, row in index_batched(new).items():
         if not row.get("ledger_equal", False):
             regressions.append(
@@ -122,6 +130,12 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
                 f"serving {'/'.join(str(k) for k in key)}: "
                 f"multi-tenant != solo-server ledger (cross-relation "
                 f"routing broke tenant isolation)")
+    for key, row in index_aggregation(new).items():
+        if not row.get("ledger_equal", False):
+            regressions.append(
+                f"aggregation {'/'.join(str(k) for k in key)}: "
+                f"batch != sequential ledger (aggregate fusion broke "
+                f"cost identity)")
     return regressions, notes
 
 
@@ -144,7 +158,8 @@ def history_entry(doc: dict, label: str) -> dict:
                 table=costs(index_results(doc)),
                 batched=costs(index_batched(doc)),
                 sharded=costs(index_sharded(doc)),
-                serving=costs(index_serving(doc)))
+                serving=costs(index_serving(doc)),
+                aggregation=costs(index_aggregation(doc)))
 
 
 def append_history(doc: dict, history: Optional[dict], label: str) -> dict:
@@ -167,8 +182,12 @@ def validate_history(history: dict) -> None:
     for run in runs:
         if "label" not in run:
             raise ValueError("history run without a label")
-        for section in ("table", "batched", "sharded", "serving"):
-            for cfg, costs in run.get(section, {}).items():
+        for section in ("table", "batched", "sharded", "serving",
+                        "aggregation"):
+            costs_by_cfg = run.get(section)
+            if not isinstance(costs_by_cfg, dict):
+                continue     # absent / experimental payload: not ours to gate
+            for cfg, costs in costs_by_cfg.items():
                 missing = [f for f in GATED_KEYS if f not in costs]
                 if missing:
                     raise ValueError(
@@ -238,7 +257,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               f"({len(index_results(new))} table rows, "
               f"{len(index_batched(new))} batched rows, "
               f"{len(index_sharded(new))} sharded rows, "
-              f"{len(index_serving(new))} serving rows checked)")
+              f"{len(index_serving(new))} serving rows, "
+              f"{len(index_aggregation(new))} aggregation rows checked)")
     return 0
 
 

@@ -25,7 +25,8 @@ bench-smoke lane runs this right after chaining the history.
 Usage::
 
   PYTHONPATH=src python benchmarks/plot_history.py BENCH_history.json
-      [--section table|batched|sharded|serving]   # default: all sections
+      [--section table|batched|sharded|serving|aggregation]
+                                           # default: all sections
       [--metric rounds|comm_bits]          # default: both gated metrics
       [--format table|tsv]                 # tsv for spreadsheet import
 """
@@ -40,7 +41,28 @@ from typing import Dict, List, Optional, Sequence, Tuple
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import compare_bench  # noqa: E402  (sibling module, shares the schema)
 
-SECTIONS = ("table", "batched", "sharded", "serving")
+SECTIONS = ("table", "batched", "sharded", "serving", "aggregation")
+
+#: per-run keys that are metadata, not cost sections.
+_META_KEYS = ("label", "smoke")
+
+
+def _section(run: dict, section: str) -> dict:
+    """A run's cost mapping for ``section`` — {} unless it is a dict.
+
+    Histories are append-only across PRs, so entries written by a newer
+    ``compare_bench.py`` may carry sections (or experimental non-dict
+    payloads) this tool does not know; those must degrade to "absent",
+    never to a crash.
+    """
+    value = run.get(section)
+    return value if isinstance(value, dict) else {}
+
+
+def unknown_sections(history: dict) -> List[str]:
+    """Section names present in some run but unknown to this tool."""
+    return sorted({key for run in history["runs"] for key in run
+                   if key not in SECTIONS and key not in _META_KEYS})
 
 
 def trend_rows(history: dict, *, sections: Sequence[str] = SECTIONS,
@@ -56,11 +78,11 @@ def trend_rows(history: dict, *, sections: Sequence[str] = SECTIONS,
     rows: List[dict] = []
     for section in sections:
         configs = sorted({cfg for run in runs
-                          for cfg in run.get(section, {})})
+                          for cfg in _section(run, section)})
         for cfg in configs:
             for metric in metrics:
                 series: List[Optional[int]] = [
-                    run.get(section, {}).get(cfg, {}).get(metric)
+                    _section(run, section).get(cfg, {}).get(metric)
                     for run in runs]
                 seen = [v for v in series if v is not None]
                 if not seen:
@@ -113,6 +135,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         compare_bench.validate_history(history)
         if not history["runs"]:
             raise ValueError("history has no runs to plot")
+        for section in unknown_sections(history):
+            # entries appended by a newer compare_bench — skip, don't fail.
+            print(f"note: skipping unknown history section "
+                  f"{section!r} (written by a newer tool?)",
+                  file=sys.stderr)
         rows = trend_rows(
             history,
             sections=(args.section,) if args.section else SECTIONS,

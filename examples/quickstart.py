@@ -13,7 +13,7 @@ root key; the cost-based planner picks the paper-optimal selection strategy.
 import jax
 import numpy as np
 
-from repro.api import Eq, Padding, QueryClient, Select
+from repro.api import Aggregate, Eq, Padding, QueryClient, Select
 from repro.core import outsource, Codec
 
 EMPLOYEE = [
@@ -77,6 +77,25 @@ def main():
     cnt = client.range_count("Salary", 1000, 2000, reduce_every=2)
     sel = client.range_select("Salary", 1000, 2000, reduce_every=2)
     print(f"  -> count {cnt.count}; rows {[r[0] for r in sel.rows]}\n")
+
+    print("== AGGREGATE: verified AVG(Salary) WHERE FirstName='John' ==")
+    # verify=True buys an OBSCURE-style check: each cloud returns extra
+    # redundant shares of the opened sum and the client cross-checks them
+    # against the interpolating polynomial — a tampered share raises
+    # VerificationError instead of a silently wrong average. explain()
+    # prices the overhead (one extra round + c checksum elements) before
+    # any share moves.
+    plan = Aggregate("avg", "Salary", where=Eq("FirstName", "John"),
+                     verify=True)
+    est = client.explain([plan]).groups[0].estimate
+    print(f"  planner: ~{est.bits} bits, {est.rounds} rounds "
+          f"(verification included)")
+    res = client.run(plan)
+    print(f"  -> AVG = {res.value} over {res.count} matching rows, "
+          f"verified  [rounds={res.ledger.rounds}]")
+    lo = client.run(Aggregate("min", "Salary", reduce_every=2))
+    print(f"  -> MIN(Salary) = {lo.value} via the ripple-comparator "
+          f"tournament\n")
 
     print("== PK/FK JOIN (§3.3.1): X(A,B) |x| Y(B,C) ==")
     codec6 = Codec(word_length=6)

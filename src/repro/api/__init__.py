@@ -18,20 +18,22 @@ deprecated wrappers; new code should go through this package.
 """
 from ..core.dataplane import (Dispatcher, PoolHandle, ShardedRelation,
                               ThreadedDispatcher)
+from ..core.queries import VerificationError
 from .backends import (Backend, available_backends, batched_match_matrix,
                        batched_matcher, get_backend, register_backend,
                        ripple_segmenter, ripple_stepper)
 from .client import DEFAULT_RELATION, AttachedRelation, QueryClient
 from .executor import MapReduceDispatcher, MapReduceExecutor
 from .planner import (DEFAULT_ELL, BatchExplanation, CostEstimate, DBStats,
-                      GroupEstimate, candidate_estimates,
-                      choose_select_strategy, estimate_batch_group_cost,
-                      estimate_count_cost, estimate_equijoin_cost,
-                      estimate_pkfk_cost, estimate_range_cost,
-                      estimate_select_cost, explain_batch_groups)
-from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
-                    QueryResult, RangeCount, RangeSelect, Select,
-                    resolve_column)
+                      GroupEstimate, PlanNotSupported, candidate_estimates,
+                      choose_select_strategy, estimate_aggregate_cost,
+                      estimate_batch_group_cost, estimate_count_cost,
+                      estimate_equijoin_cost, estimate_pkfk_cost,
+                      estimate_range_cost, estimate_select_cost,
+                      explain_batch_groups)
+from .plans import (AUTO, Aggregate, Between, ColumnRef, Count, Eq, Join,
+                    Padding, Plan, QueryResult, RangeCount, RangeSelect,
+                    Select, resolve_column)
 
 __all__ = [
     "Backend", "available_backends", "batched_matcher",
@@ -41,10 +43,12 @@ __all__ = [
     "MapReduceDispatcher", "MapReduceExecutor",
     "Dispatcher", "PoolHandle", "ShardedRelation", "ThreadedDispatcher",
     "DEFAULT_ELL", "BatchExplanation", "CostEstimate", "DBStats",
-    "GroupEstimate", "candidate_estimates", "choose_select_strategy",
+    "GroupEstimate", "PlanNotSupported", "candidate_estimates",
+    "choose_select_strategy", "estimate_aggregate_cost",
     "estimate_batch_group_cost", "estimate_count_cost",
     "estimate_equijoin_cost", "estimate_pkfk_cost", "estimate_range_cost",
     "estimate_select_cost", "explain_batch_groups",
-    "AUTO", "Between", "ColumnRef", "Count", "Eq", "Join", "Padding", "Plan",
-    "QueryResult", "RangeCount", "RangeSelect", "Select", "resolve_column",
+    "AUTO", "Aggregate", "Between", "ColumnRef", "Count", "Eq", "Join",
+    "Padding", "Plan", "QueryResult", "RangeCount", "RangeSelect", "Select",
+    "VerificationError", "resolve_column",
 ]

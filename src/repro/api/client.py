@@ -42,13 +42,13 @@ import jax
 from ..core.costs import CostLedger
 from ..core.dataplane import Dispatcher, ShardedRelation
 from ..core.engine import SecretSharedDB
-from ..core.queries import CardinalityError, rounds
+from ..core.queries import CardinalityError, aggregate, rounds
 from . import planner as _planner
 from .backends import BackendLike, get_backend
 from .executor import MapReduceExecutor
-from .plans import (AUTO, Between, ColumnRef, Count, Eq, Join, Padding, Plan,
-                    QueryResult, RangeCount, RangeSelect, Select,
-                    resolve_column)
+from .plans import (AUTO, Aggregate, Between, ColumnRef, Count, Eq, Join,
+                    Padding, Plan, QueryResult, RangeCount, RangeSelect,
+                    Select, resolve_column)
 
 #: registry name a bare ``QueryClient(db, key)`` attaches its relation
 #: under; single-relation callers never need to spell it.
@@ -89,6 +89,10 @@ def _plan_signature(plan: Plan) -> tuple:
     if isinstance(plan, Join):
         return ("Join", id(plan.right), tuple(plan.on), plan.kind,
                 plan.padding.rows, plan.padding.values)
+    if not dataclasses.is_dataclass(plan):
+        # unknown plan classes fail HERE with the clear error, not with
+        # dataclasses.fields' opaque TypeError
+        raise _planner.PlanNotSupported(plan)
     return (type(plan).__name__,) + tuple(
         getattr(plan, f.name) for f in dataclasses.fields(plan))
 
@@ -103,6 +107,7 @@ class _Slot:
     strategy: str = ""
     known_count: Optional[int] = None
     column: int = -1
+    pred_column: Optional[int] = None
     fetch_key: Optional[jax.Array] = None
 
 
@@ -292,7 +297,9 @@ class QueryClient:
         """Planner predictions without touching shares.
 
         One ``Select`` -> its eligible strategy estimates, cheapest first
-        (each carries bits, rounds and per-shard dispatches).
+        (each carries bits, rounds and per-shard dispatches). Any other
+        single plan -> its batch-of-one :class:`~.planner.BatchExplanation`
+        (those families have one strategy each — nothing to rank).
 
         A *sequence of plans* -> a :class:`~.planner.BatchExplanation`: the
         plans are grouped exactly as :meth:`run_batch` would group them and
@@ -303,14 +310,21 @@ class QueryClient:
         invalidated by :meth:`attach` — a re-shard re-prices dispatches.
         """
         ent = self._entry(relation)
-        if isinstance(plan, Plan):
+        if isinstance(plan, Select):
             cands = _planner.candidate_estimates(
                 self.stats(ent.name), ell=plan.expected_matches,
                 padded_rows=plan.padding.rows)
             return sorted(cands,
                           key=lambda e: (e.score(self.round_cost_bits),
                                          e.rounds))
-        plans = list(plan)
+        if isinstance(plan, Plan):
+            # single-strategy families: the batch-of-one prediction
+            return self.explain([plan], relation=ent.name)
+        try:
+            plans = list(plan)
+        except TypeError:
+            raise _planner.PlanNotSupported(
+                plan, "explain() argument") from None
         sig = (ent.name, tuple(_plan_signature(p) for p in plans))
         hit = self._explanations.get(sig)
         if hit is not None:
@@ -341,6 +355,7 @@ class QueryClient:
         range_grps: Dict[Tuple[int, int], List[Tuple[bool, Optional[int],
                                                      Optional[int]]]] = {}
         joins: Dict[str, List[Plan]] = {"pkfk": [], "equi": []}
+        agg_grps: Dict[tuple, List[_planner.CostEstimate]] = {}
         auto_plans: List[Select] = []
 
         def add_select(plan: Select, strategy: str) -> None:
@@ -373,11 +388,26 @@ class QueryClient:
                 want = isinstance(plan, RangeSelect)
                 range_grps.setdefault(gk, []).append(
                     (want, None, plan.padding.rows if want else None))
+            elif isinstance(plan, Aggregate):
+                col = resolve_column(db, plan.column)
+                if col not in db.numeric_bits:   # as the agg phases would
+                    raise ValueError(f"column {col} was not outsourced in "
+                                     f"binary form")
+                t_bits = db.numeric_bits[col]
+                est = _planner.estimate_aggregate_cost(
+                    stats, plan.op, t_bits=t_bits,
+                    conditional=plan.where is not None,
+                    verify=plan.verify, reduce_every=plan.reduce_every)
+                # mirror run_batch grouping: SUM/AVG fuse per bit-width,
+                # MIN/MAX per (bit-width, reduce_every)
+                gk = (("agg_sum", t_bits) if plan.op in ("sum", "avg")
+                      else ("agg_minmax", t_bits, plan.reduce_every))
+                agg_grps.setdefault(gk, []).append(est)
             elif isinstance(plan, Join):
                 self._validate_join(plan)
                 joins[plan.kind].append(plan)
             else:
-                raise TypeError(f"not a logical plan: {plan!r}")
+                raise _planner.PlanNotSupported(plan)
         for plan in auto_plans:
             chosen = _planner.choose_select_strategy(
                 stats, ell=plan.expected_matches,
@@ -410,6 +440,12 @@ class QueryClient:
             groups.append(_planner.GroupEstimate(
                 family, len(members), _planner.CostEstimate(
                     family, bits=sum(e.bits for e in ests),
+                    rounds=max(e.rounds for e in ests),
+                    dispatches=max(e.dispatches for e in ests))))
+        for ests in agg_grps.values():
+            groups.append(_planner.GroupEstimate(
+                "aggregate", len(ests), _planner.CostEstimate(
+                    "aggregate", bits=sum(e.bits for e in ests),
                     rounds=max(e.rounds for e in ests),
                     dispatches=max(e.dispatches for e in ests))))
         if joins["pkfk"]:       # one fused group: batched match matrices
@@ -466,6 +502,10 @@ class QueryClient:
         * Equijoins fuse per phase: one column-open interpolation, one
           X-side layer-1 matmul for the group, Y-side per distinct right
           relation.
+        * Aggregates fuse per family: SUM/AVG numerators share ONE masked
+          contraction per bit-width (conditional AVG denominators ride the
+          batch's count phase), MIN/MAX tournaments march in lockstep per
+          (bit-width, ``reduce_every``) group.
 
         Results come back in plan order; each query's rows and
         ``CostLedger`` are bit-identical to running it sequentially (ledgers
@@ -484,6 +524,8 @@ class QueryClient:
         sel_grp: Dict[str, List[_Slot]] = {"one_tuple": [], "one_round": [],
                                            "tree": []}
         range_grps: Dict[Tuple[int, int], List[_Slot]] = {}
+        agg_sum_grps: Dict[int, List[_Slot]] = {}
+        agg_mm_grps: Dict[Tuple[int, int], List[_Slot]] = {}
         pkfk_grp: List[_Slot] = []
         equi_grp: List[_Slot] = []
         auto_slots: List[_Slot] = []
@@ -527,11 +569,21 @@ class QueryClient:
                 gk = (db.numeric_bits.get(slot.column, -1),
                       plan.reduce_every)
                 range_grps.setdefault(gk, []).append(slot)
+            elif isinstance(plan, Aggregate):
+                slot.column = resolve_column(db, plan.column)
+                if plan.where is not None:
+                    slot.pred_column = resolve_column(db, plan.where.column)
+                t_bits = db.numeric_bits.get(slot.column, -1)
+                if plan.op in ("sum", "avg"):
+                    agg_sum_grps.setdefault(t_bits, []).append(slot)
+                else:
+                    agg_mm_grps.setdefault((t_bits, plan.reduce_every),
+                                           []).append(slot)
             elif isinstance(plan, Join):
                 self._validate_join(plan)
                 (pkfk_grp if plan.kind == "pkfk" else equi_grp).append(slot)
             else:
-                raise TypeError(f"not a logical plan: {plan!r}")
+                raise _planner.PlanNotSupported(plan)
 
         # AUTO selections plan against the batch's live group sizes and
         # depths (riding a non-empty group costs only the rounds the rider
@@ -550,13 +602,67 @@ class QueryClient:
         fetch_jobs: List[rounds.FetchJob] = []
         fetch_meta: List[Tuple[_Slot, str, List[int]]] = []
 
-        if count_grp:
+        # conditional AVG denominators ride the batch's §3.1 count phase:
+        # their MatchJobs fuse into the same dispatch as explicit Counts.
+        avg_cnt_slots: List[_Slot] = []
+        for group in agg_sum_grps.values():
+            for s in group:
+                if s.plan.op == "avg" and s.plan.where is not None:
+                    s.key, s.fetch_key = jax.random.split(s.key)
+                    avg_cnt_slots.append(s)
+
+        if count_grp or avg_cnt_slots:
             counts = rounds.count_phase(be, rel, [
                 rounds.MatchJob(s.column, s.plan.where.pattern, s.key,
-                                s.ledger) for s in count_grp])
+                                s.ledger) for s in count_grp] + [
+                rounds.MatchJob(s.pred_column, s.plan.where.pattern,
+                                s.fetch_key, s.ledger)
+                for s in avg_cnt_slots])
             for s, cnt in zip(count_grp, counts):
                 results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
                                              strategy="count", count=cnt)
+            for s, cnt in zip(avg_cnt_slots, counts[len(count_grp):]):
+                s.known_count = cnt
+
+        # -- aggregation: SUM/AVG numerators fuse per bit-width, MIN/MAX
+        # tournaments per (bit-width, reduce_every) ------------------------
+        for group in agg_sum_grps.values():
+            sums = aggregate.agg_sum_phase(be, rel, [
+                aggregate.SumJob(
+                    value_column=s.column, key=s.key, ledger=s.ledger,
+                    pred_column=s.pred_column,
+                    pattern=(s.plan.where.pattern if s.plan.where is not None
+                             else None),
+                    verify=s.plan.verify) for s in group])
+            for s, total in zip(group, sums):
+                if s.plan.op == "sum":
+                    results[s.idx] = QueryResult(
+                        plan=s.plan, ledger=s.ledger, strategy="agg_sum",
+                        value=total)
+                elif s.plan.where is not None:
+                    results[s.idx] = QueryResult(
+                        plan=s.plan, ledger=s.ledger, strategy="agg_avg",
+                        value=(total / s.known_count
+                               if s.known_count else None),
+                        count=s.known_count)
+                else:                   # denominator is the public n
+                    results[s.idx] = QueryResult(
+                        plan=s.plan, ledger=s.ledger, strategy="agg_avg",
+                        value=(total / db.n_tuples if db.n_tuples
+                               else None))
+        for (_, reduce_every), group in agg_mm_grps.items():
+            outs = aggregate.agg_minmax_rounds(be, rel, [
+                aggregate.MinMaxJob(
+                    value_column=s.column, key=s.key, ledger=s.ledger,
+                    pred_column=s.pred_column,
+                    pattern=(s.plan.where.pattern if s.plan.where is not None
+                             else None),
+                    verify=s.plan.verify, op=s.plan.op,
+                    reduce_every=reduce_every) for s in group])
+            for s, (val, cnt) in zip(group, outs):
+                results[s.idx] = QueryResult(
+                    plan=s.plan, ledger=s.ledger,
+                    strategy=f"agg_{s.plan.op}", value=val, count=cnt)
 
         # -- one_tuple: batched count phase, then the Alg 3 map round -------
         if sel_grp["one_tuple"]:
@@ -736,6 +842,14 @@ class QueryClient:
         return self.run(RangeSelect(Between(column, lo, hi),
                                     reduce_every=reduce_every,
                                     padding=padding), relation=relation)
+
+    def aggregate(self, op: str, column: ColumnRef, *,
+                  where: Optional[Eq] = None, verify: bool = False,
+                  reduce_every: int = 0,
+                  relation: Optional[str] = None) -> QueryResult:
+        return self.run(Aggregate(op, column, where=where, verify=verify,
+                                  reduce_every=reduce_every),
+                        relation=relation)
 
     def join(self, right: SecretSharedDB,
              on: Tuple[ColumnRef, ColumnRef], *, kind: str = "pkfk",

@@ -49,6 +49,21 @@ from ..core.engine import SecretSharedDB
 DEFAULT_ELL = 2
 
 
+class PlanNotSupported(TypeError):
+    """A plan object no estimator/executor knows how to price or run.
+
+    Subclasses TypeError so existing ``except TypeError`` callers keep
+    working, but carries the offending plan's type name instead of the
+    opaque ``KeyError``/``AttributeError`` an unknown class used to hit.
+    """
+
+    def __init__(self, plan, context: str = "plan"):
+        self.plan = plan
+        super().__init__(
+            f"unsupported {context}: {type(plan).__name__!r} "
+            f"({plan!r}) is not a known logical plan class")
+
+
 @dataclasses.dataclass(frozen=True)
 class CostEstimate:
     """Planner-side (bits, rounds, per-shard dispatches) prediction."""
@@ -184,6 +199,59 @@ def estimate_range_cost(stats: DBStats, *, t_bits: int,
         name = "range_count"
     return CostEstimate(name, elems * WORD_BITS, rounds=rounds,
                         dispatches=dispatches)
+
+
+def estimate_aggregate_cost(stats: DBStats, op: str, *, t_bits: int,
+                            conditional: bool = False, verify: bool = False,
+                            reduce_every: int = 0) -> CostEstimate:
+    """OBSCURE-style aggregation over a t-bit numeric column.
+
+    sum:     one contraction round — pattern up (conditional only), the
+             scalar sum share back from each cloud.
+    avg:     the sum plus (conditional only) the §3.1 count round for the
+             denominator; an unconditional AVG divides by the public n.
+    min/max: knockout tournament of ⌈log₂ n⌉ SS-SUB comparator levels —
+             each level pays its ``reduce_every`` carry reductions (one c²
+             re-share round each) and every level but the last one
+             inter-level re-share; conditional jobs add the sentinel-mask
+             re-share round and open the match count alongside the value.
+    verify:  +1 round and c checksum elements per opened tensor
+             (value, and the count for a conditional min/max).
+
+    Bits mirror the measured ledger exactly in ``CostLedger`` units.
+    """
+    s = stats
+    S = max(1, min(s.shards, max(s.n, 1)))
+    if op in ("sum", "avg"):
+        elems = s.c + (s.c * s.w * s.a if conditional else 0)
+        rounds, dispatches = 1, S
+        if op == "avg" and conditional:
+            elems += _count_elems(s)
+            rounds += 1
+            dispatches += S
+        if verify:
+            rounds += 1
+            elems += s.c
+        return CostEstimate(f"agg_{op}", elems * WORD_BITS, rounds=rounds,
+                            dispatches=dispatches)
+    if op in ("min", "max"):
+        levels = math.ceil(math.log2(s.n)) if s.n > 1 else 0
+        n_red = (t_bits - 1) // reduce_every if reduce_every > 0 else 0
+        elems = (levels * n_red * s.c * s.c          # carry reductions
+                 + max(levels - 1, 0) * s.c * s.c    # inter-level re-shares
+                 + s.c * t_bits)                     # final value opening
+        rounds = 1 + levels * n_red + max(levels - 1, 0)
+        dispatches = levels * (n_red + 1)
+        if conditional:
+            elems += s.c * s.w * s.a + s.c * s.c + s.c
+            rounds += 1
+            dispatches += S
+        if verify:
+            rounds += 1
+            elems += s.c * (2 if conditional else 1)
+        return CostEstimate(f"agg_{op}", elems * WORD_BITS, rounds=rounds,
+                            dispatches=dispatches)
+    raise ValueError(f"unknown aggregate op {op!r}")
 
 
 def estimate_pkfk_cost(stats: DBStats, right: DBStats) -> CostEstimate:

@@ -24,6 +24,7 @@ ColumnRef = Union[str, int]
 AUTO = "auto"
 SELECT_STRATEGIES = ("one_tuple", "one_round", "tree")
 JOIN_KINDS = ("pkfk", "equi")
+AGG_OPS = ("sum", "avg", "min", "max")
 
 
 def resolve_column(db: SecretSharedDB, column: ColumnRef) -> int:
@@ -186,6 +187,38 @@ class Join(Plan):
             raise ValueError("Join.on must be a (left, right) column pair")
 
 
+@dataclasses.dataclass(frozen=True)
+class Aggregate(Plan):
+    """SUM/AVG/MIN/MAX(column) [WHERE col = pattern] (OBSCURE-style).
+
+    column: the numeric value column (must have been outsourced in binary
+            form via ``numeric_columns``).
+    where:  optional equality predicate restricting the aggregate to the
+            matching tuples (None = whole relation).
+    verify: run the OBSCURE-style consistency round on every opened
+            aggregate tensor and raise ``VerificationError`` if a cloud's
+            response share is inconsistent. Needs c >= degree + 2 clouds;
+            the extra round/bits are priced in ``explain()``.
+    reduce_every: MIN/MAX only — insert a degree-reduction round every
+            this many comparator bit positions (same knob as range plans).
+    """
+    op: str
+    column: ColumnRef
+    where: Optional[Eq] = None
+    verify: bool = False
+    reduce_every: int = 0
+
+    def __post_init__(self):
+        if self.op not in AGG_OPS:
+            raise ValueError(f"unknown aggregate op {self.op!r}; choose "
+                             f"from {AGG_OPS}")
+        if self.reduce_every < 0:
+            raise ValueError("reduce_every must be >= 0")
+        if self.reduce_every and self.op in ("sum", "avg"):
+            raise ValueError("reduce_every is a MIN/MAX comparator knob; "
+                             "SUM/AVG run in one contraction round")
+
+
 # ---------------------------------------------------------------------------
 # result
 # ---------------------------------------------------------------------------
@@ -197,7 +230,9 @@ class QueryResult:
     rows/addresses are None for pure counting queries; count is the number
     of satisfying tuples whenever it is known. ``strategy`` echoes the
     executed algorithm (planner-chosen or forced) and ``plan`` echoes the
-    logical plan for logging/replay.
+    logical plan for logging/replay. ``value`` carries an aggregation
+    plan's opened scalar (int for SUM/MIN/MAX, float for AVG; None when a
+    conditional MIN/MAX/AVG matched no tuples).
     """
     plan: Plan
     ledger: CostLedger
@@ -205,6 +240,7 @@ class QueryResult:
     rows: Optional[List[List[str]]] = None
     count: Optional[int] = None
     addresses: Optional[List[int]] = None
+    value: Optional[float] = None
 
     def __post_init__(self):
         if self.count is None and self.rows is not None:

@@ -55,6 +55,9 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
     monkeypatch.setattr(
         bq, "bench_multi_tenant_serving",
         lambda **kw: real_serving(n=16, queries=3))
+    real_agg = bq.bench_aggregation
+    monkeypatch.setattr(
+        bq, "bench_aggregation", lambda **kw: real_agg(n=16))
     out = tmp_path / "BENCH_queries.json"
     bq.main(["--smoke", "--out", str(out)])
 
@@ -91,6 +94,17 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
                 "served_by_relation", "ledger_equal"} <= set(row)
         assert row["ledger_equal"] is True and row["relations"] == 2
         assert sum(row["served_by_relation"].values()) == row["queries"]
+    # private-analytics sweep: every op priced, verification overhead > 0
+    assert doc["aggregation"]
+    agg_names = {row["name"] for row in doc["aggregation"]}
+    assert {"agg_sum", "agg_avg_cond", "agg_min_cond",
+            "agg_max"} <= agg_names
+    for row in doc["aggregation"]:
+        assert {"name", "n", "batch", "rounds", "comm_bits",
+                "verify_rounds", "verify_comm_bits",
+                "ledger_equal"} <= set(row)
+        assert row["ledger_equal"] is True
+        assert row["verify_rounds"] >= 1 and row["verify_comm_bits"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -290,6 +304,47 @@ def test_compare_bench_gates_serving_costs(cb, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# aggregation (private analytics) section gating
+# ---------------------------------------------------------------------------
+
+def _aggregation_doc():
+    doc = _serving_doc()
+    doc["aggregation"] = [
+        {"name": "agg_min_cond", "n": 16, "batch": 5, "rounds": 29,
+         "comm_bits": 613180, "verify_rounds": 1, "verify_comm_bits": 1240,
+         "batch_us": 10, "ledger_equal": True},
+    ]
+    return doc
+
+
+def test_compare_bench_gates_aggregation_costs(cb, tmp_path):
+    new = _write(tmp_path, "ag_new.json", _aggregation_doc())
+    old = _write(tmp_path, "ag_old.json", _aggregation_doc())
+    assert cb.main([new, old]) == 0
+    # cost increases — including the *verification* overhead — regress
+    for field in ("rounds", "comm_bits", "verify_rounds",
+                  "verify_comm_bits"):
+        doc = _aggregation_doc()
+        doc["aggregation"][0][field] += 1
+        assert cb.main([_write(tmp_path, f"ag_{field}.json", doc),
+                        old]) == 1
+    # batched != sequential ledger is a regression
+    doc = _aggregation_doc()
+    doc["aggregation"][0]["ledger_equal"] = False
+    assert cb.main([_write(tmp_path, "ag_bad.json", doc), old]) == 1
+    # an OLD baseline without the section is not a "vanished config"
+    assert cb.main([new, _write(tmp_path, "ag_v1.json",
+                                _serving_doc())]) == 0
+    # the history entry carries the aggregation costs too
+    hist = tmp_path / "ag_history.json"
+    assert cb.main([new, "--append-history", str(hist)]) == 0
+    h = json.loads(hist.read_text())
+    assert h["runs"][0]["aggregation"]["agg_min_cond/5/16"] == {
+        "rounds": 29, "comm_bits": 613180}
+    cb.validate_history(h)
+
+
+# ---------------------------------------------------------------------------
 # plot_history.py: per-config trend tables over the time series
 # ---------------------------------------------------------------------------
 
@@ -372,3 +427,38 @@ def test_plot_history_rejects_malformed(ph, tmp_path):
     empty.write_text(json.dumps({"schema": "bench_history/v1", "runs": []}))
     assert ph.main([str(empty)]) == 2
     assert ph.main([str(tmp_path / "missing.json")]) == 2
+
+
+def test_plot_history_renders_aggregation_section(ph, cb, tmp_path,
+                                                  capsys):
+    hist = _history(tmp_path, cb, [(_aggregation_doc(), "pr-5"),
+                                   (_aggregation_doc(), "pr-6")])
+    assert ph.main([hist, "--section", "aggregation"]) == 0
+    out = capsys.readouterr().out
+    assert "agg_min_cond/5/16" in out
+    assert "REGRESSED" not in out
+
+
+def test_plot_history_tolerates_unknown_sections(ph, cb, tmp_path, capsys):
+    """History entries written by a NEWER compare_bench may carry section
+    names this tool has never heard of (exactly how 'sharded', 'serving'
+    and 'aggregation' themselves arrived). Unknown sections are skipped
+    with a note — never a crash, never a silent verdict change."""
+    hist = _history(tmp_path, cb, [(_serving_doc(), "pr-4"),
+                                   (_serving_doc(), "pr-5")])
+    h = json.loads(open(hist).read())
+    h["runs"][-1]["quantum_oblivious"] = {           # future section
+        "qo_thing/1/16": {"rounds": 3, "comm_bits": 42}}
+    h["runs"][-1]["weird_payload"] = [1, 2, 3]       # non-dict payload
+    open(hist, "w").write(json.dumps(h))
+    assert ph.main([hist]) == 0
+    captured = capsys.readouterr()
+    assert "skipping unknown history section" in captured.err
+    assert "quantum_oblivious" in captured.err
+    assert "weird_payload" in captured.err
+    assert "qo_thing" not in captured.out            # skipped, not rendered
+    # a known section holding a non-dict degrades to "absent", not a crash
+    h["runs"][-1]["batched"] = "oops"
+    open(hist, "w").write(json.dumps(h))
+    assert ph.main([hist]) == 0
+    assert "batched_range/4/16" in capsys.readouterr().out

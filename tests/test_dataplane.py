@@ -12,8 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import (Backend, Between, Count, Eq, Join, Padding,
-                       QueryClient, RangeCount, RangeSelect, Select,
+from repro.api import (Aggregate, Backend, Between, Count, Eq, Join,
+                       Padding, QueryClient, RangeCount, RangeSelect, Select,
                        ShardedRelation, ThreadedDispatcher,
                        MapReduceDispatcher, batched_match_matrix,
                        batched_matcher, get_backend, ripple_segmenter,
@@ -56,6 +56,16 @@ def _all_family_plans(child):
         Join(right=child, on=("Id", "Id"), kind="equi",
              padding=Padding.fake_values(1)),
         Select(Eq("Name", "zzz"), strategy="one_round"),    # zero match
+        # aggregation: per-shard partial sums reduce exactly mod p; the
+        # MIN/MAX tournament runs on the gathered relation — either way S
+        # must stay invisible in values and ledgers. (Conditional MAX is
+        # absent by design: range_db values reach 4747 > 2^(t-2)-1 = 4095,
+        # outside the sentinel-masking headroom the comparator requires.)
+        Aggregate("sum", "Val"),
+        Aggregate("sum", "Val", where=Eq("Name", "nm1"), verify=True),
+        Aggregate("avg", "Val", where=Eq("Name", "nm2")),
+        Aggregate("min", "Val", where=Eq("Name", "nm1"), reduce_every=2),
+        Aggregate("max", "Val", reduce_every=2),
     ]
 
 
@@ -64,6 +74,7 @@ def _assert_results_equal(a, b):
     assert a.rows == b.rows
     assert a.addresses == b.addresses
     assert a.count == b.count
+    assert a.value == b.value
     assert a.ledger == b.ledger
 
 
@@ -146,6 +157,28 @@ def test_sharded_batch_equals_unsharded_sequential(range_db, child_db,
     # fan-out accounting: every sharded cloud step emitted exactly one
     # dispatch per shard
     assert plane.stats.dispatches == plane.stats.steps * plane.n_shards
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_sharded_aggregation_matches_plaintext_oracle(range_db, shards):
+    """SUM/AVG/MIN-MAX open the exact plaintext answer at every S: the
+    per-shard partial sums combine additively mod p, the tournament's
+    candidates are shard-order-independent by construction."""
+    rows, db = range_db
+    vals = np.array([int(r[2]) for r in rows])
+    names = np.array([r[1] for r in rows])
+    client = QueryClient(db, key=42)
+    client.attach(shards=shards)
+    res = client.run_batch([
+        Aggregate("sum", "Val"),
+        Aggregate("avg", "Val", where=Eq("Name", "nm2")),
+        Aggregate("min", "Val", where=Eq("Name", "nm1"), reduce_every=2),
+        Aggregate("max", "Val", reduce_every=2, verify=True),
+    ])
+    assert res[0].value == int(vals.sum())
+    assert res[1].value == pytest.approx(vals[names == "nm2"].mean())
+    assert res[2].value == int(vals[names == "nm1"].min())
+    assert res[3].value == int(vals.max())
 
 
 def test_shard_count_never_changes_step_count(range_db, child_db):
@@ -401,7 +434,7 @@ def test_explain_batch_predicts_run_batch_ledger(range_db, child_db):
     # range group, reported under range_select because a member fetches
     assert {g.family for g in exp.groups} == {
         "count", "one_round", "tree", "one_tuple", "range_select",
-        "pkfk", "equi"}
+        "pkfk", "equi", "aggregate"}
     # bits/rounds are protocol: invariant to S; dispatches scale with it
     sharded = QueryClient(db, key=1)
     sharded.attach(shards=4)
