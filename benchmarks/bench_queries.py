@@ -463,6 +463,78 @@ def bench_aggregation(*, n: int = 64) -> List[dict]:
     return out
 
 
+def bench_mesh_dispatcher(*, n: int = 64, shards: int = 4) -> List[dict]:
+    """The hardware-placement acceptance sweep: one query family at a time
+    through a device-resident ``MeshDispatcher`` (shard_map SPMD reduce,
+    donated share buffers) vs the host ``SerialDispatcher``. Per family it
+    records the measured steady-state wall time (second batch: placement
+    and compilation already paid) AND the HLO-predicted cost of the
+    compiled on-device reduction programs — FLOPs, HBM bytes, collective
+    bytes — so ``compare_bench.py`` can gate mesh speed regressions
+    against the prediction-anchored baseline. Transcript identity with the
+    serial path is asserted, and the transfer telemetry must stay at the
+    one-time placement after the warm batch (device residency).
+    """
+    from repro.api import MeshDispatcher
+    from repro.launch.mesh import make_dispatch_mesh
+
+    rows, db = _db(n, seed=9, skew=0.25, numeric=True)
+    patterns = sorted({r[1] for r in rows})
+    child = [[rows[i % n][0], f"t{i}"] for i in range(8)]
+    db_child = outsource(jax.random.PRNGKey(9), child,
+                         column_names=["EmployeeId", "Task"], codec=CODEC,
+                         n_shares=20, degree=1)
+    families = [
+        ("mesh_count", Count(Eq("FirstName", patterns[0]))),
+        ("mesh_select", Select(Eq("FirstName", patterns[1 % len(patterns)]),
+                               strategy="one_round")),
+        ("mesh_range", RangeCount(Between("Salary", 500, 4000),
+                                  reduce_every=2)),
+        ("mesh_join", Join(right=db_child, on=("EmployeeId", "EmployeeId"),
+                           kind="pkfk")),
+        ("mesh_aggregate", Aggregate("sum", "Salary",
+                                     where=Eq("FirstName", patterns[0]),
+                                     verify=True)),
+    ]
+    mesh = make_dispatch_mesh()
+    devices = int(mesh.shape["data"] * mesh.shape["model"])
+    out: List[dict] = []
+    for name, plan in families:
+        serial = QueryClient(db, key=37)
+        serial.attach(shards=shards)
+        ref, serial_us = _timed(serial.run_batch, [plan])
+
+        client = QueryClient(db, key=37)
+        disp = MeshDispatcher(mesh)
+        plane = client.attach(shards=shards, dispatcher=disp)
+        got, _warm_us = _timed(client.run_batch, [plan])   # placement+compile
+        placed = plane.stats.transfer_bytes
+        _, wall_us = _timed(client.run_batch, [plan])      # steady state
+        assert plane.stats.transfer_bytes == placed, \
+            f"{name}: share buffers left the device after placement"
+
+        ledger_equal = all(
+            a.rows == b.rows and a.count == b.count and a.value == b.value
+            and a.addresses == b.addresses and a.ledger == b.ledger
+            for a, b in zip(ref, got))
+        assert ledger_equal, f"{name}: mesh != serial (rows or ledgers)"
+        cost = disp.predicted_cost()
+        # families whose combine is a concat (range planes) compile no
+        # on-device reduction — their predicted cost is legitimately zero
+        out.append(dict(name=name, n=n, shards=shards, devices=devices,
+                        wall_us=round(wall_us), serial_us=round(serial_us),
+                        predicted_flops=int(cost["flops"]),
+                        predicted_hbm_bytes=int(cost["hbm_bytes"]),
+                        predicted_collective_bytes=int(
+                            cost["collective_bytes"]),
+                        programs=int(cost["programs"]),
+                        placed_bytes=placed,
+                        rounds=ref[0].ledger.rounds,
+                        comm_bits=ref[0].ledger.communication_bits,
+                        ledger_equal=ledger_equal))
+    return out
+
+
 ALL = [bench_count, bench_select_single, bench_select_one_round,
        bench_select_tree, bench_planner_auto, bench_join, bench_range,
        bench_scaling_verification]
@@ -499,9 +571,11 @@ def collect(*, smoke: bool = False) -> dict:
     serving = bench_multi_tenant_serving(n=32 if smoke else 64,
                                          queries=4 if smoke else 6)
     aggregation = bench_aggregation(n=32 if smoke else 64)
+    mesh = bench_mesh_dispatcher(n=32 if smoke else 64,
+                                 shards=2 if smoke else 4)
     return dict(schema="bench_queries/v1", smoke=smoke,
                 results=results, batched=batched, sharded=sharded,
-                serving=serving, aggregation=aggregation)
+                serving=serving, aggregation=aggregation, mesh=mesh)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -537,6 +611,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
               f"comm={a['comm_bits']}b, verify +{a['verify_rounds']}r "
               f"+{a['verify_comm_bits']}b "
               f"(ledger_equal={a['ledger_equal']})", file=sys.stderr)
+    for m in doc["mesh"]:
+        print(f"  {m['name']} S={m['shards']} devices={m['devices']} "
+              f"n={m['n']}: {m['wall_us']}us (serial {m['serial_us']}us), "
+              f"predicted {m['predicted_flops']} flops / "
+              f"{m['predicted_hbm_bytes']} hbm B / "
+              f"{m['predicted_collective_bytes']} coll B "
+              f"(ledger_equal={m['ledger_equal']})", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -4,7 +4,12 @@ Diffs a fresh ``BENCH_queries.json`` against a previous run's artifact (the
 CI bench-smoke lane uploads one per PR). Protocol costs — communication
 rounds and bits per (bench, name, n) configuration — are *deterministic*
 functions of the protocol, so any increase is a real regression, not noise;
-wall-times are reported but never gated (they jitter with the runner).
+wall-times are reported but never gated (they jitter with the runner) —
+with one carve-out: the ``mesh`` section's steady-state wall time is gated
+behind a generous tolerance factor (``MESH_WALL_TOLERANCE``), because the
+device-resident dispatcher exists *for* speed and its HLO-predicted costs
+(FLOPs / HBM bytes / collective bytes, also gated, fully deterministic)
+anchor what the wall time should be.
 
 Exit status: 0 = no protocol-cost regressions, 1 = regression(s) found,
 2 = the artifacts could not be loaded/compared.
@@ -39,6 +44,14 @@ GATED_KEYS = ("rounds", "comm_bits")
 #: deterministic cloud/user work — drift is surfaced but not fatal (a PR
 #: may legitimately trade cloud work for communication).
 INFO_KEYS = ("cloud_bits", "user_bits")
+#: mesh section: deterministic HLO-predicted costs gate like protocol
+#: costs; the measured wall time gates behind this tolerance factor
+#: (fresh wall > baseline wall x tolerance == regression — generous
+#: enough to absorb runner jitter, tight enough to catch a lost
+#: device-residency or fusion).
+MESH_PREDICTED_KEYS = ("predicted_flops", "predicted_hbm_bytes",
+                       "predicted_collective_bytes")
+MESH_WALL_TOLERANCE = 2.0
 
 
 def _load(path: str) -> dict:
@@ -74,6 +87,12 @@ def index_aggregation(doc: dict) -> Dict[Tuple[str, int, int], dict]:
     # "aggregation" (SUM/AVG/MIN-MAX + verification) post-dates "serving".
     return {(r["name"], r["batch"], r["n"]): r
             for r in doc.get("aggregation", [])}
+
+
+def index_mesh(doc: dict) -> Dict[Tuple[str, int, int], dict]:
+    # "mesh" (device-resident dispatcher) post-dates "aggregation".
+    return {(r["name"], r["shards"], r["n"]): r
+            for r in doc.get("mesh", [])}
 
 
 def compare(new: dict, old: dict, *, allow_missing: bool = False
@@ -113,6 +132,32 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
               GATED_KEYS)
     diff_rows("aggregation", index_aggregation(new), index_aggregation(old),
               GATED_KEYS + ("verify_rounds", "verify_comm_bits"))
+    diff_rows("mesh", index_mesh(new), index_mesh(old), GATED_KEYS)
+    # mesh speed gate: predicted costs are deterministic per device count,
+    # wall time gets the tolerance factor — both only comparable when the
+    # runs saw the same device mesh.
+    new_mesh, old_mesh = index_mesh(new), index_mesh(old)
+    for key, old_row in old_mesh.items():
+        new_row = new_mesh.get(key)
+        if new_row is None:
+            continue                       # vanishing handled by diff_rows
+        tag = f"mesh {'/'.join(str(k) for k in key)}"
+        if new_row.get("devices") != old_row.get("devices"):
+            notes.append(f"{tag}: device count changed "
+                         f"({old_row.get('devices')} -> "
+                         f"{new_row.get('devices')}), speed gate skipped")
+            continue
+        for field in MESH_PREDICTED_KEYS:
+            if new_row[field] > old_row[field]:
+                regressions.append(
+                    f"{tag}: {field} {old_row[field]} -> {new_row[field]} "
+                    f"(+{new_row[field] - old_row[field]})")
+        limit = old_row["wall_us"] * MESH_WALL_TOLERANCE
+        if new_row["wall_us"] > limit:
+            regressions.append(
+                f"{tag}: wall_us {old_row['wall_us']} -> "
+                f"{new_row['wall_us']} (> {MESH_WALL_TOLERANCE}x baseline "
+                f"— device-resident path slowed down)")
     for key, row in index_batched(new).items():
         if not row.get("ledger_equal", False):
             regressions.append(
@@ -136,6 +181,12 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
                 f"aggregation {'/'.join(str(k) for k in key)}: "
                 f"batch != sequential ledger (aggregate fusion broke "
                 f"cost identity)")
+    for key, row in index_mesh(new).items():
+        if not row.get("ledger_equal", False):
+            regressions.append(
+                f"mesh {'/'.join(str(k) for k in key)}: "
+                f"mesh != serial ledger (device placement broke the "
+                f"transcript identity)")
     return regressions, notes
 
 
@@ -149,9 +200,9 @@ HISTORY_SCHEMA = "bench_history/v1"
 def history_entry(doc: dict, label: str) -> dict:
     """One run's gated protocol costs, keyed like the comparator."""
 
-    def costs(idx):
+    def costs(idx, fields=GATED_KEYS):
         return {"/".join(str(k) for k in key):
-                {f: row[f] for f in GATED_KEYS}
+                {f: row[f] for f in fields}
                 for key, row in sorted(idx.items(), key=str)}
 
     return dict(label=label, smoke=bool(doc.get("smoke")),
@@ -159,7 +210,10 @@ def history_entry(doc: dict, label: str) -> dict:
                 batched=costs(index_batched(doc)),
                 sharded=costs(index_sharded(doc)),
                 serving=costs(index_serving(doc)),
-                aggregation=costs(index_aggregation(doc)))
+                aggregation=costs(index_aggregation(doc)),
+                mesh=costs(index_mesh(doc),
+                           GATED_KEYS + MESH_PREDICTED_KEYS
+                           + ("wall_us", "devices")))
 
 
 def append_history(doc: dict, history: Optional[dict], label: str) -> dict:
@@ -183,7 +237,7 @@ def validate_history(history: dict) -> None:
         if "label" not in run:
             raise ValueError("history run without a label")
         for section in ("table", "batched", "sharded", "serving",
-                        "aggregation"):
+                        "aggregation", "mesh"):
             costs_by_cfg = run.get(section)
             if not isinstance(costs_by_cfg, dict):
                 continue     # absent / experimental payload: not ours to gate
@@ -258,7 +312,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               f"{len(index_batched(new))} batched rows, "
               f"{len(index_sharded(new))} sharded rows, "
               f"{len(index_serving(new))} serving rows, "
-              f"{len(index_aggregation(new))} aggregation rows checked)")
+              f"{len(index_aggregation(new))} aggregation rows, "
+              f"{len(index_mesh(new))} mesh rows checked)")
     return 0
 
 

@@ -25,7 +25,7 @@ bench-smoke lane runs this right after chaining the history.
 Usage::
 
   PYTHONPATH=src python benchmarks/plot_history.py BENCH_history.json
-      [--section table|batched|sharded|serving|aggregation]
+      [--section table|batched|sharded|serving|aggregation|mesh]
                                            # default: all sections
       [--metric rounds|comm_bits]          # default: both gated metrics
       [--format table|tsv]                 # tsv for spreadsheet import
@@ -41,7 +41,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import compare_bench  # noqa: E402  (sibling module, shares the schema)
 
-SECTIONS = ("table", "batched", "sharded", "serving", "aggregation")
+SECTIONS = ("table", "batched", "sharded", "serving", "aggregation",
+            "mesh")
 
 #: per-run keys that are metadata, not cost sections.
 _META_KEYS = ("label", "smoke")

@@ -35,8 +35,18 @@ def render(results: dict) -> str:
 
 
 def main():
-    with open(os.path.join(ROOT, "dryrun_results.json")) as f:
-        results = json.load(f)
+    src = os.path.join(ROOT, "dryrun_results.json")
+    try:
+        with open(src) as f:
+            results = json.load(f)
+    except FileNotFoundError:
+        sys.exit(
+            f"roofline_table: {src} not found — generate it with "
+            f"`PYTHONPATH=src python -m repro.launch.dryrun` first. (For measured query "
+            f"costs — HLO-predicted FLOPs/HBM/collective bytes of the "
+            f"device-resident dispatcher — run `PYTHONPATH=src python "
+            f"benchmarks/bench_queries.py` and read the `mesh` section "
+            f"of BENCH_queries.json instead.)")
     path = os.path.join(ROOT, "EXPERIMENTS.md")
     with open(path) as f:
         doc = f.read()

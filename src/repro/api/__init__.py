@@ -18,6 +18,7 @@ deprecated wrappers; new code should go through this package.
 """
 from ..core.dataplane import (Dispatcher, PoolHandle, ShardedRelation,
                               ThreadedDispatcher)
+from ..core.mesh_dispatch import MeshDispatcher
 from ..core.queries import VerificationError
 from .backends import (Backend, available_backends, batched_match_matrix,
                        batched_matcher, get_backend, register_backend,
@@ -40,7 +41,7 @@ __all__ = [
     "batched_match_matrix", "get_backend", "register_backend",
     "ripple_segmenter", "ripple_stepper", "QueryClient",
     "DEFAULT_RELATION", "AttachedRelation",
-    "MapReduceDispatcher", "MapReduceExecutor",
+    "MapReduceDispatcher", "MapReduceExecutor", "MeshDispatcher",
     "Dispatcher", "PoolHandle", "ShardedRelation", "ThreadedDispatcher",
     "DEFAULT_ELL", "BatchExplanation", "CostEstimate", "DBStats",
     "GroupEstimate", "PlanNotSupported", "candidate_estimates",

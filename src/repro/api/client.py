@@ -251,6 +251,12 @@ class QueryClient:
         else:
             plane = ShardedRelation(rel, shards=shards,
                                     dispatcher=dispatcher)
+        # a device-resident dispatcher (MeshDispatcher) pre-places the
+        # share arrays on its mesh at attach time — before the entry below
+        # captures plane.db — so every subsequent round runs zero-copy
+        bind = getattr(plane.dispatcher, "bind_plane", None)
+        if bind is not None:
+            bind(plane)
         if ent is None:
             if key is not None:
                 root = _as_key(key)

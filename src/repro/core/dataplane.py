@@ -35,9 +35,11 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
 
+import jax
 import jax.numpy as jnp
 
 from . import field
@@ -46,15 +48,50 @@ from .partition import split_bounds
 from .shamir import Shares
 
 
+def _tree_nbytes(part: Any) -> int:
+    """Bytes of every array leaf in one shard result (tuples included)."""
+    return sum(getattr(leaf, "nbytes", 0)
+               for leaf in jax.tree_util.tree_leaves(part))
+
+
 # ---------------------------------------------------------------------------
 # placement policies
 # ---------------------------------------------------------------------------
 
 class Dispatcher:
-    """Placement policy for one round's shard dispatches (serial default)."""
+    """Placement policy for one round's shard dispatches (serial default).
+
+    Two seams, two levels of control:
+
+    * :meth:`run_all` — run a list of opaque shard thunks; host dispatchers
+      (serial / thread pool / MapReduce) override only this.
+    * :meth:`run_set` — run one whole :class:`DispatchSet` against its
+      :class:`ShardedRelation` and reduce it. The default implementation is
+      ``run_all`` + host-side :meth:`DispatchSet.combine`; a device-resident
+      dispatcher (``repro.core.mesh_dispatch.MeshDispatcher``) overrides it
+      to keep the per-shard partials on device and reduce them there.
+
+    ``device_resident`` tells the telemetry layer how to account transfer
+    bytes: host dispatchers stage every shard partial through the combine
+    (bytes = the parts), device-resident ones only pay the initial
+    placement.
+    """
+
+    device_resident = False
 
     def run_all(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
         return [t() for t in thunks]
+
+    def run_set(self, plane: "ShardedRelation", ds: "DispatchSet"):
+        """Execute + reduce one cloud step, recording telemetry."""
+        t0 = time.perf_counter()
+        parts = self.run_all([d.run for d in ds.dispatches])
+        out = ds.combine(parts)
+        plane.stats.record(len(ds.dispatches),
+                           wall_s=time.perf_counter() - t0,
+                           transfer_bytes=sum(_tree_nbytes(p)
+                                              for p in parts))
+        return out
 
 
 SERIAL = Dispatcher()
@@ -164,13 +201,27 @@ class DispatchSet:
 
 @dataclasses.dataclass
 class DispatchStats:
-    """Execution-side telemetry (never part of the protocol transcript)."""
+    """Execution-side telemetry (never part of the protocol transcript).
+
+    ``dispatch_s`` accumulates the wall-time of every cloud step (dispatch
+    fan-out + reduce, as seen by the dispatcher — jax async dispatch means
+    this is *submission* time unless the policy blocks). ``transfer_bytes``
+    accumulates staged bytes: for host dispatchers, every shard partial
+    that round-trips through the combine; for a device-resident dispatcher,
+    only the initial host→device placement (zero afterwards — the
+    device-residency invariant, asserted in tests/test_mesh_dispatch.py).
+    """
     dispatches: int = 0             # shard dispatches executed
     steps: int = 0                  # cloud steps (DispatchSets) executed
+    dispatch_s: float = 0.0         # cumulative cloud-step wall-time
+    transfer_bytes: int = 0         # staged bytes (see above)
 
-    def record(self, n_dispatches: int) -> None:
+    def record(self, n_dispatches: int, wall_s: float = 0.0,
+               transfer_bytes: int = 0) -> None:
         self.dispatches += n_dispatches
         self.steps += 1
+        self.dispatch_s += wall_s
+        self.transfer_bytes += transfer_bytes
 
 
 # ---------------------------------------------------------------------------
@@ -291,9 +342,7 @@ class ShardedRelation:
 
     def execute(self, ds: DispatchSet):
         """Run one step through the placement policy and reduce it."""
-        self.stats.record(len(ds.dispatches))
-        parts = self.dispatcher.run_all([d.run for d in ds.dispatches])
-        return ds.combine(parts)
+        return self.dispatcher.run_set(self, ds)
 
     def run_concat(self, build, *, axis: int = -1):
         return self.execute(self.dispatch_set(build, reduce="concat",

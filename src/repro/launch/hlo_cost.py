@@ -41,9 +41,15 @@ _ELEMENTWISE = {
     "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
     "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
     "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
-    "cosine", "sine", "logistic", "expm1", "log1p", "atan2", "remainder",
-    "shift-left", "shift-right-logical", "shift-right-arithmetic", "and",
-    "or", "xor", "not", "compare", "select", "clamp", "convert",
+    "cosine", "sine", "logistic", "expm1", "log1p", "atan2",
+    # integer ALU ops of the mod-p share arithmetic: the Mersenne fold is
+    # and + shifts, ``field.sum_`` keeps a real ``remainder``, comparisons
+    # and selects carry the borrow logic. Counted as FLOPs like any other
+    # elementwise op — verified against real lowered kernels in
+    # tests/test_hlo_cost_field.py.
+    "remainder", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "and", "or", "xor", "not", "popcnt",
+    "count-leading-zeros", "compare", "select", "clamp", "convert",
 }
 
 _NO_TRAFFIC = {

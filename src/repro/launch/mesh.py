@@ -24,3 +24,17 @@ def make_mesh(shape, axes):
 def make_host_mesh():
     """Single-device mesh for smoke tests."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_dispatch_mesh(n_model: int = 1):
+    """All visible devices as a ``("data", "model")`` mesh for the
+    device-resident query dispatcher (``repro.core.mesh_dispatch``):
+    tuple-axis shards spread over ``data``, the c Shamir share planes over
+    ``model``. ``n_model`` must divide the device count; the default keeps
+    every device on the data axis (the CI smoke lane forces 8 host devices
+    via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    n = jax.device_count()
+    if n % n_model != 0:
+        raise ValueError(f"n_model={n_model} does not divide the "
+                         f"{n}-device platform")
+    return jax.make_mesh((n // n_model, n_model), ("data", "model"))

@@ -180,11 +180,21 @@ def _window() -> "Deque[float]":
 
 @dataclasses.dataclass
 class RelationStats:
-    """One relation's slice of the serving telemetry."""
+    """One relation's slice of the serving telemetry.
+
+    ``dispatches`` / ``dispatch_s`` / ``transfer_bytes`` mirror the
+    relation dataplane's :class:`~repro.core.dataplane.DispatchStats`
+    deltas, accumulated per served batch — so the measured cloud-step
+    wall-time and staged bytes (zero after placement for a device-resident
+    dispatcher) are visible to monitoring code, not only dispatch counts.
+    """
     served: int = 0
     failed: int = 0
     batches: int = 0
     busy_s: float = 0.0
+    dispatches: int = 0
+    dispatch_s: float = 0.0
+    transfer_bytes: int = 0
     latencies_s: "Deque[float]" = dataclasses.field(default_factory=_window)
     queue_waits_s: "Deque[float]" = dataclasses.field(
         default_factory=_window)
@@ -196,6 +206,9 @@ class RelationStats:
     def as_dict(self) -> dict:
         return dict(served=self.served, failed=self.failed,
                     batches=self.batches, busy_s=self.busy_s,
+                    dispatches=self.dispatches,
+                    dispatch_s=self.dispatch_s,
+                    transfer_bytes=self.transfer_bytes,
                     p50_latency_s=_quantile(list(self.latencies_s), 0.50),
                     p95_latency_s=_quantile(list(self.latencies_s), 0.95),
                     p50_queue_wait_s=_quantile(list(self.queue_waits_s),
@@ -227,6 +240,9 @@ class ServeStats:
     failed: int = 0
     batches: int = 0
     busy_s: float = 0.0              # wall time spent inside run_batch
+    dispatches: int = 0              # shard dispatches (dataplane deltas)
+    dispatch_s: float = 0.0          # cloud-step wall-time (dataplane)
+    transfer_bytes: int = 0          # staged bytes (dataplane)
     latencies_s: "Deque[float]" = dataclasses.field(default_factory=_window)
     queue_waits_s: "Deque[float]" = dataclasses.field(
         default_factory=_window)
@@ -295,7 +311,9 @@ class ServeStats:
 
     def record_batch(self, fill: int, reason: str,
                      relation: Optional[str] = None,
-                     busy_s: float = 0.0) -> None:
+                     busy_s: float = 0.0, dispatches: int = 0,
+                     dispatch_s: float = 0.0,
+                     transfer_bytes: int = 0) -> None:
         with self._lock:
             for st in ([self] if relation is None
                        else [self, self._rel_locked(relation)]):
@@ -303,6 +321,9 @@ class ServeStats:
                 st.busy_s += busy_s
                 st.batch_fill[fill] = st.batch_fill.get(fill, 0) + 1
                 st.closes[reason] = st.closes.get(reason, 0) + 1
+                st.dispatches += dispatches
+                st.dispatch_s += dispatch_s
+                st.transfer_bytes += transfer_bytes
 
     # -- locked readers -----------------------------------------------------
     def latency_quantile(self, q: float,
@@ -334,6 +355,9 @@ class ServeStats:
                         batches=self.batches,
                         mean_batch_size=self.mean_batch_size,
                         busy_s=self.busy_s,
+                        dispatches=self.dispatches,
+                        dispatch_s=self.dispatch_s,
+                        transfer_bytes=self.transfer_bytes,
                         throughput_qps=self.throughput_qps,
                         p50_latency_s=_quantile(list(self.latencies_s),
                                                 0.50),
@@ -617,6 +641,8 @@ class QueryServer:
             for r in batch:
                 r.queue_wait_s = t0 - (r.enqueued_at or t0)
                 self.stats.note_queue_wait(r.queue_wait_s, tenant.name)
+            plane = self.client.dataplane_of(tenant.name)
+            d0 = dataclasses.replace(plane.stats) if plane else None
             try:
                 outcomes = self.client.run_batch(
                     [r.plan for r in batch], relation=tenant.name)
@@ -639,8 +665,13 @@ class QueryServer:
                     self.stats.note_result(r.latency_s,
                                            plan_family(r.plan), tenant.name)
                 r._done.set()
-            self.stats.record_batch(len(batch), reason, tenant.name,
-                                    busy_s=t1 - t0)
+            d = plane.stats if plane else None
+            self.stats.record_batch(
+                len(batch), reason, tenant.name, busy_s=t1 - t0,
+                dispatches=(d.dispatches - d0.dispatches) if d else 0,
+                dispatch_s=(d.dispatch_s - d0.dispatch_s) if d else 0.0,
+                transfer_bytes=(d.transfer_bytes - d0.transfer_bytes)
+                if d else 0)
             return batch
 
     # -- async driver -------------------------------------------------------

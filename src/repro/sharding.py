@@ -209,6 +209,28 @@ def cache_spec(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> Any:
     return cache
 
 
+# ---------------------------------------------------------------------------
+# secret-shared relations (repro.core.mesh_dispatch)
+# ---------------------------------------------------------------------------
+
+def share_spec(mesh: Mesh, shape: Tuple[int, ...]) -> P:
+    """Spec for a raw share array ``(c, n, ...)`` of an outsourced relation.
+
+    The cloud axis (the c Shamir shares — the paper's non-communicating
+    clouds) spreads over ``model``; the tuple axis spreads over the data
+    axes exactly like a batch. A non-divisible axis replicates — placement
+    is pure layout and must never constrain relation or share-count shapes.
+    Trailing word/bit axes always replicate (they ride inside one cloud's
+    slice of one tuple).
+    """
+    c_ax = ("model" if ("model" in mesh.axis_names
+                        and shape[0] % model_size(mesh) == 0) else None)
+    if len(shape) <= 1:
+        return P(c_ax)
+    t_ax = dp_axes(mesh) if shape[1] % dp_size(mesh) == 0 else None
+    return P(c_ax, t_ax)
+
+
 def logits_spec(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig) -> P:
     dp = dp_axes(mesh)
     div = Divisibility(cfg, mesh)

@@ -1,0 +1,182 @@
+"""launch.hlo_cost must price the mod-p field ops the query kernels emit.
+
+Two layers:
+
+* a captured-HLO **fixture** with hand-countable instructions — exact
+  FLOP / HBM-byte / collective-byte totals, so a parser or accounting
+  regression shows up as a number, not a vibe;
+* **real lowered HLO** from the field/kernels hot ops (``field.mul``,
+  ``field.sum_``, the fused ripple segment, ``kernels.ops.ss_matmul``) —
+  every integer ALU opcode XLA emits for the share arithmetic
+  (``remainder``, ``and``, ``shift-*``, …) must be in the elementwise set,
+  never falling through to the traffic-only default branch.
+"""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import field
+from repro.launch import hlo_cost
+
+# --------------------------------------------------------------------------
+# fixture: every instruction hand-countable
+# --------------------------------------------------------------------------
+
+FIXTURE_HLO = """
+HloModule jit_mod_p_fold
+
+%body_comp (bp: (s32[], u32[16])) -> (s32[], u32[16]) {
+  %bp = (s32[], u32[16]) parameter(0)
+  %i = s32[] get-tuple-element(%bp), index=0
+  %v = u32[16]{0} get-tuple-element(%bp), index=1
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  %vv = u32[16]{0} multiply(%v, %v)
+  ROOT %t = (s32[], u32[16]) tuple(%ip, %vv)
+}
+
+%cond_comp (cp: (s32[], u32[16])) -> pred[] {
+  %cp = (s32[], u32[16]) parameter(0)
+  %ci = s32[] get-tuple-element(%cp), index=0
+  %lim = s32[] constant(5)
+  ROOT %lt = pred[] compare(%ci, %lim), direction=LT
+}
+
+ENTRY %main (p0: u32[8,16], p1: u32[8,16], v0: u32[16]) -> u32[8,16] {
+  %p0 = u32[8,16]{1,0} parameter(0)
+  %p1 = u32[8,16]{1,0} parameter(1)
+  %v0 = u32[16]{0} parameter(2)
+  %lo = u32[8,16]{1,0} and(%p0, %p1)
+  %hi = u32[8,16]{1,0} shift-right-logical(%p0, %p1)
+  %sl = u32[8,16]{1,0} shift-left(%hi, %p1)
+  %s = u32[8,16]{1,0} add(%lo, %sl)
+  %w64 = u64[8,16]{1,0} convert(%s)
+  %r = u64[8,16]{1,0} remainder(%w64, %w64)
+  %ar = u64[8,16]{1,0} all-reduce(%r), to_apply=%sum_u64
+  %out = u32[8,16]{1,0} convert(%ar)
+  %d = u32[8,8]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %zero = s32[] constant(0)
+  %init = (s32[], u32[16]) tuple(%zero, %v0)
+  %wh = (s32[], u32[16]) while(%init), condition=%cond_comp, body=%body_comp
+  ROOT %res = u32[8,16]{1,0} add(%out, %out)
+}
+"""
+
+# hand counts (128 = 8*16 elems; u32 4 B, u64 8 B):
+#   elementwise entry: and + srl + sl + add + convert + remainder + convert
+#     + final add = 8 ops x 128 elems                    -> 1024 flops
+#   dot: 2 * |out|(64) * K(16)                           -> 2048 flops
+#   while: 5 trips x (add[1] + multiply[16] + cond compare[1]) -> 90 flops
+_FIX_FLOPS = 8 * 128 + 2048 + 90
+#   hbm: and/srl/sl/add (4 x (512 out + 2*512 in)) + convert u64 (1024+512)
+#     + remainder (1024 + 2*1024) + all-reduce io (1024+1024)
+#     + convert back (512+1024) + dot (256 + 512 + 512)
+#     + while body 5 x (add 12 + multiply 192) + final add (512 + 2*512)
+_FIX_HBM = (4 * 1536 + 1536 + 3072 + 2048 + 1536 + 1280 + 5 * 204 + 1536)
+_FIX_COLL = 8 * 16 * 8      # the u64 all-reduce output
+
+
+def test_fixture_exact_flop_and_byte_counts():
+    cost = hlo_cost.analyze_text(FIXTURE_HLO)
+    assert cost.flops == _FIX_FLOPS
+    assert cost.hbm_bytes == _FIX_HBM
+    assert cost.collectives["all-reduce"] == _FIX_COLL
+    assert cost.collective_bytes == _FIX_COLL
+
+
+def test_fixture_mod_p_opcodes_are_elementwise():
+    # the regression this file exists for: any of these dropping out of
+    # the elementwise set silently zeroes the field-arithmetic FLOPs
+    for op in ("remainder", "and", "shift-left", "shift-right-logical",
+               "shift-right-arithmetic", "xor", "or", "not", "convert",
+               "compare", "select"):
+        assert op in hlo_cost._ELEMENTWISE, op
+
+
+# --------------------------------------------------------------------------
+# real lowered HLO from the kernels
+# --------------------------------------------------------------------------
+
+_OPCODE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+?)\s+([\w\-]+)\(")
+
+#: structural / control ops the walker prices through dedicated branches;
+#: anything else it meets must be _ELEMENTWISE, _NO_TRAFFIC, or a pure
+#: data-movement op (priced as traffic, zero flops).
+_STRUCTURAL = {
+    "dot", "convolution", "reduce", "reduce-window", "sort", "while",
+    "fusion", "call", "async-start", "async-update", "async-done",
+    "custom-call", "conditional", "dynamic-slice", "slice", "gather",
+    "dynamic-update-slice", "broadcast", "iota",
+} | set(hlo_cost._COLLECTIVES)
+_DATA_MOVEMENT = {"copy", "copy-start", "copy-done", "pad", "reshape",
+                  "transpose", "concatenate", "reverse", "scatter",
+                  "reduce-precision", "rng", "rng-bit-generator"}
+
+
+def _opcodes(text):
+    ops = set()
+    for line in text.splitlines():
+        m = _OPCODE.match(line)
+        if m:
+            ops.add(m.group(1))
+    return ops
+
+
+def _lowered(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_field_mul_fold_ops_counted():
+    a = jnp.asarray(np.arange(24, dtype=np.uint32).reshape(2, 3, 4)
+                    % field.P)
+    text = _lowered(field.mul, a, a)
+    ops = _opcodes(text)
+    # the Mersenne fold is and + shifts — they must be priced as flops
+    assert "and" in ops and "shift-right-logical" in ops
+    emitted = ops & {"remainder", "and", "shift-left",
+                     "shift-right-logical", "shift-right-arithmetic"}
+    assert emitted <= hlo_cost._ELEMENTWISE
+    assert hlo_cost.analyze_text(text).flops > 0
+
+
+def test_field_sum_remainder_counted():
+    a = jnp.asarray(np.arange(120, dtype=np.uint32).reshape(2, 5, 12)
+                    % field.P)
+    text = _lowered(lambda x: field.sum_(x, axis=1), a)
+    ops = _opcodes(text)
+    assert "remainder" in ops          # the single fold of the uint64 sum
+    assert "remainder" in hlo_cost._ELEMENTWISE
+    cost = hlo_cost.analyze_text(text)
+    assert cost.flops >= a.size        # at least the reduce itself
+
+
+def test_ripple_segment_ops_counted():
+    from repro.api.backends import jnp_ripple_segment
+    a = jnp.asarray(np.arange(36, dtype=np.uint32).reshape(2, 2, 3, 3)
+                    % field.P)
+    text = _lowered(lambda x, y: jnp_ripple_segment(x, y, None), a, a)
+    ops = _opcodes(text)
+    assert ops & {"and", "shift-right-logical", "multiply"}
+    assert hlo_cost.analyze_text(text).flops > 0
+
+
+def test_no_kernel_opcode_falls_through_unpriced():
+    """Every opcode the real kernels emit is known to the cost model —
+    elementwise (flops), structural (dedicated branch), no-traffic, or an
+    explicit data-movement op. An unknown ALU op would silently price as
+    bytes-only."""
+    from repro.kernels import ops as kops
+    a = jnp.asarray(np.arange(2 * 4 * 6, dtype=np.uint32).reshape(2, 4, 6)
+                    % field.P)
+    b = jnp.asarray(np.arange(2 * 6 * 3, dtype=np.uint32).reshape(2, 6, 3)
+                    % field.P)
+    texts = [_lowered(kops.ss_matmul, a, b),
+             _lowered(field.matmul, a, b)]
+    known = (hlo_cost._ELEMENTWISE | hlo_cost._NO_TRAFFIC | _STRUCTURAL
+             | _DATA_MOVEMENT)
+    for text in texts:
+        unknown = _opcodes(text) - known
+        assert not unknown, f"unpriced opcodes: {sorted(unknown)}"
