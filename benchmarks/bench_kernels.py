@@ -53,6 +53,62 @@ def bench_ss_matmul() -> List[tuple]:
     return out
 
 
+def bench_ss_matmul_modes() -> List[tuple]:
+    """Both interpret modes of the matmul kernel (satellite of the embedding
+    fast path): ``interpret=None`` auto-detects the platform (compiled on a
+    real TPU, interpret elsewhere) and ``interpret=True`` forces the
+    interpreter — the two must agree exactly with the jnp oracle. Also
+    covers the tall-skinny tiling (small M = tokens, huge K = vocab), the
+    routed shape the embedding contraction dispatches."""
+    from repro.kernels.ss_matmul import (is_tall_skinny, ss_matmul_pallas,
+                                         ss_matmul_tall_pallas)
+    out = []
+    a, b = _rand((64, 128)), _rand((128, 64))
+    want = ref.ss_matmul(a, b)
+    got_auto, us_auto = _time(
+        lambda x, y: ss_matmul_pallas(x, y), a, b)          # interpret=None
+    got_forced, us_forced = _time(
+        lambda x, y: ss_matmul_pallas(x, y, interpret=True), a, b)
+    assert np.array_equal(np.asarray(got_auto), np.asarray(want))
+    assert np.array_equal(np.asarray(got_forced), np.asarray(want))
+    backend = jax.default_backend()
+    out.append(("ss_matmul_interp_auto", f"64x128x64 [{backend}]", us_auto,
+                64 * 128 * 64, 0, 0, 0, "exact vs oracle"))
+    out.append(("ss_matmul_interp_forced", "64x128x64", us_forced,
+                64 * 128 * 64, 0, 0, 0, "exact vs oracle"))
+    m, k, n = 32, 2048, 64                       # the embedding shape class
+    assert is_tall_skinny(m, k, n)
+    a, b = _rand((m, k)), _rand((k, n))
+    want = ref.ss_matmul(a, b)
+    got_tall, us_tall = _time(
+        lambda x, y: ss_matmul_tall_pallas(x, y), a, b)
+    assert np.array_equal(np.asarray(got_tall), np.asarray(want))
+    out.append(("ss_matmul_tall_pallas", f"{m}x{k}x{n}", us_tall,
+                m * k * n, 0, 0, 0, "exact vs oracle (tall-skinny tiles)"))
+    return out
+
+
+def bench_share_onehot() -> List[tuple]:
+    """Fused one-hot share generation vs the jnp reference program — the
+    two halves of ``share_tokens``'s backend seam must be bit-identical
+    given the same per-token coefficients."""
+    from repro.core.queries.embed import share_tokens, token_coeffs
+    from repro.kernels.ss_matmul import share_onehot_pallas
+    out = []
+    for m, v in ((64, 512), (256, 2048)):
+        key = jax.random.PRNGKey(3)
+        toks = jnp.asarray(RNG.integers(0, v, size=(m,)), jnp.int32)
+        a1 = token_coeffs(key, toks, vocab=v)
+        want = share_tokens(key, toks, vocab=v, n_shares=4).values
+        got, us = _time(lambda t, a: share_onehot_pallas(t, a, n_shares=4,
+                                                         interpret=True),
+                        toks, a1)
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+        out.append(("share_onehot_pallas", f"M={m},V={v}", us, 4 * m * v,
+                    0, 0, 0, "bit-identical vs jnp share program"))
+    return out
+
+
 def bench_aa_match() -> List[tuple]:
     out = []
     for n in (256, 1024):
@@ -84,4 +140,5 @@ def bench_private_embed() -> List[tuple]:
     return out
 
 
-ALL = [bench_ss_matmul, bench_aa_match, bench_private_embed]
+ALL = [bench_ss_matmul, bench_ss_matmul_modes, bench_share_onehot,
+       bench_aa_match, bench_private_embed]

@@ -14,7 +14,12 @@ ledger equality while measuring the fusion speedup;
 rows/ledgers, dispatch fan-out = steps × S over ceil(n/S)-tuple blocks,
 zero added rounds; ``bench_multi_tenant_serving`` routes a mixed workload
 over two relations through ONE multi-tenant ``QueryServer`` and asserts
-it matches two solo single-relation servers bit for bit.
+it matches two solo single-relation servers bit for bit;
+``bench_embedding`` sweeps the §3.2.1 oblivious embedding fast path (one
+``EmbedLookup`` = one fused ``ss_matmul`` per shard against the
+device-resident quantized table) and asserts the acceptance shape:
+>= 5x tokens/sec over the per-call baseline at 256 tokens, S dispatches
+per step, zero post-placement transfer, batched == sequential ledgers.
 
 Each table function returns rows of
   (name, n, us_per_call, comm_bits, rounds, cloud_bits, user_bits, claim)
@@ -535,6 +540,117 @@ def bench_mesh_dispatcher(*, n: int = 64, shards: int = 4) -> List[dict]:
     return out
 
 
+def bench_embedding(*, vocab: int = 2048, d_model: int = 64,
+                    n_tokens: int = 256,
+                    shard_counts: Sequence[int] = (1, 2)) -> List[dict]:
+    """The embedding fast path acceptance sweep (§3.2.1 at serving scale).
+
+    One decode step = ONE ``EmbedLookup`` of ``n_tokens`` ids: all one-hots
+    share in one jitted program and contract in one ``ss_matmul`` per shard
+    against the device-resident quantized table. Per shard count it asserts
+    the acceptance shape — exactly S dispatches per step (ONE fused
+    ss_matmul each), zero post-placement transfer bytes (residency),
+    batched == sequential ledgers, opened values exactly equal to the
+    per-token ``private_lookup`` oracle — and measures tokens/sec against
+    the per-call baseline (the pre-fast-path serving shape), which must
+    trail by >= 5x at n_tokens >= 256.
+    """
+    import numpy as np
+
+    from repro.api import EmbedLookup, MeshDispatcher
+    from repro.models import private_embed as pe
+
+    key = jax.random.PRNGKey(13)
+    rng = np.random.default_rng(13)
+    table = rng.uniform(-1.0, 1.0, (vocab, d_model)).astype(np.float32)
+    table_sh = pe.setup_private_embed(jax.random.fold_in(key, 0), table,
+                                      n_shares=4)
+    tokens = tuple(int(t) for t in rng.integers(0, vocab, n_tokens))
+
+    # per-call baseline: one eager private_lookup per token (warm first)
+    pe.private_lookup(jax.random.fold_in(key, 1), table_sh,
+                      jax.numpy.asarray([tokens[0]]))
+    n_base = min(n_tokens, 32)
+    t0 = time.time()
+    for i in range(n_base):
+        pe.private_lookup(jax.random.fold_in(key, 2 + i), table_sh,
+                          jax.numpy.asarray([tokens[i]]))
+    base_tps = n_base / max(time.time() - t0, 1e-9)
+
+    # exactness oracle for a prefix of the batch
+    oracle = np.concatenate([
+        np.asarray(pe.private_lookup(jax.random.fold_in(key, 2 + i),
+                                     table_sh,
+                                     jax.numpy.asarray([tokens[i]])))
+        for i in range(8)])
+
+    out: List[dict] = []
+    for s_count in shard_counts:
+        client = QueryClient(key=11)
+        plane = client.attach(pe.as_embed_relation(table_sh),
+                              name="embeddings", shards=s_count,
+                              dispatcher=MeshDispatcher())
+        plan = EmbedLookup(tokens=tokens)
+        base = client.run(plan, relation="embeddings")  # placement+compile
+        placed = plane.stats.transfer_bytes
+        d0 = plane.stats.dispatches
+        got, wall_us = _timed(client.run, plan, relation="embeddings")
+        assert plane.stats.transfer_bytes == placed, \
+            f"S={s_count}: table shares left the device after placement"
+        dispatches = plane.stats.dispatches - d0
+        assert dispatches == s_count, \
+            f"S={s_count}: {dispatches} dispatches per step (want one " \
+            f"fused ss_matmul per shard)"
+        assert np.array_equal(np.asarray(got.embeddings)[:8], oracle), \
+            f"S={s_count}: batched path != per-token private_lookup"
+        tps = n_tokens / max(wall_us / 1e6, 1e-9)
+        speedup = tps / base_tps
+        if n_tokens >= 256:
+            assert speedup >= 5.0, \
+                f"S={s_count}: batched path only {speedup:.1f}x over the " \
+                f"per-call baseline (acceptance floor 5x)"
+
+        # batched == sequential ledgers (two half-step jobs vs run_batch)
+        halves = [EmbedLookup(tokens=tokens[:n_tokens // 2]),
+                  EmbedLookup(tokens=tokens[n_tokens // 2:])]
+        seq_client = QueryClient(key=11)
+        seq_client.attach(pe.as_embed_relation(table_sh), name="embeddings",
+                          shards=s_count, dispatcher=MeshDispatcher())
+        seq = [seq_client.run(p, relation="embeddings") for p in halves]
+        bat_client = QueryClient(key=11)
+        bat_client.attach(pe.as_embed_relation(table_sh), name="embeddings",
+                          shards=s_count, dispatcher=MeshDispatcher())
+        bat = bat_client.run_batch(halves, relation="embeddings")
+        ledger_equal = all(
+            a.ledger == b.ledger
+            and np.array_equal(np.asarray(a.embeddings),
+                               np.asarray(b.embeddings))
+            for a, b in zip(seq, bat))
+        assert ledger_equal, f"S={s_count}: batched != sequential"
+
+        # OBSCURE-style verification overhead (value must not move)
+        ver = client.run(EmbedLookup(tokens=tokens, verify=True),
+                         relation="embeddings")
+        assert np.array_equal(np.asarray(ver.embeddings),
+                              np.asarray(got.embeddings))
+
+        out.append(dict(
+            name=f"embed_s{s_count}", vocab=vocab, d_model=d_model,
+            n_tokens=n_tokens, shards=s_count,
+            tokens_per_sec=round(tps, 1),
+            baseline_tokens_per_sec=round(base_tps, 1),
+            speedup=round(speedup, 2),
+            dispatches_per_step=int(dispatches),
+            per_token_bits=round(base.ledger.communication_bits / n_tokens),
+            rounds=base.ledger.rounds,
+            comm_bits=base.ledger.communication_bits,
+            verify_rounds=ver.ledger.rounds - base.ledger.rounds,
+            verify_comm_bits=(ver.ledger.communication_bits
+                              - base.ledger.communication_bits),
+            placed_bytes=placed, ledger_equal=ledger_equal))
+    return out
+
+
 ALL = [bench_count, bench_select_single, bench_select_one_round,
        bench_select_tree, bench_planner_auto, bench_join, bench_range,
        bench_scaling_verification]
@@ -573,9 +689,16 @@ def collect(*, smoke: bool = False) -> dict:
     aggregation = bench_aggregation(n=32 if smoke else 64)
     mesh = bench_mesh_dispatcher(n=32 if smoke else 64,
                                  shards=2 if smoke else 4)
+    # acceptance needs batch×seq >= 256 tokens even in smoke; smoke shrinks
+    # the table (vocab × d_model), not the token batch
+    embedding = bench_embedding(vocab=512 if smoke else 2048,
+                                d_model=32 if smoke else 64,
+                                n_tokens=256,
+                                shard_counts=(1, 2) if smoke else (1, 2, 4))
     return dict(schema="bench_queries/v1", smoke=smoke,
                 results=results, batched=batched, sharded=sharded,
-                serving=serving, aggregation=aggregation, mesh=mesh)
+                serving=serving, aggregation=aggregation, mesh=mesh,
+                embedding=embedding)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> None:
@@ -618,6 +741,14 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
               f"{m['predicted_hbm_bytes']} hbm B / "
               f"{m['predicted_collective_bytes']} coll B "
               f"(ledger_equal={m['ledger_equal']})", file=sys.stderr)
+    for e in doc["embedding"]:
+        print(f"  {e['name']} V={e['vocab']} D={e['d_model']} "
+              f"tok={e['n_tokens']}: {e['tokens_per_sec']} tok/s "
+              f"({e['speedup']}x over per-call "
+              f"{e['baseline_tokens_per_sec']} tok/s), "
+              f"{e['dispatches_per_step']} dispatch/step, "
+              f"{e['per_token_bits']} bits/tok "
+              f"(ledger_equal={e['ledger_equal']})", file=sys.stderr)
 
 
 if __name__ == "__main__":

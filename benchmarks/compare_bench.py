@@ -95,6 +95,18 @@ def index_mesh(doc: dict) -> Dict[Tuple[str, int, int], dict]:
             for r in doc.get("mesh", [])}
 
 
+def index_embedding(doc: dict) -> Dict[Tuple[str, int, int], dict]:
+    # "embedding" (oblivious embedding fast path) post-dates "mesh".
+    return {(r["name"], r["shards"], r["n_tokens"]): r
+            for r in doc.get("embedding", [])}
+
+
+#: embedding section: tokens/sec over the per-call baseline must stay at or
+#: above the acceptance floor — the fast path exists *for* this ratio, and
+#: the baseline runs on the same machine so runner speed divides out.
+EMBED_SPEEDUP_FLOOR = 5.0
+
+
 def compare(new: dict, old: dict, *, allow_missing: bool = False
             ) -> Tuple[List[str], List[str]]:
     """-> (regressions, notes). Empty regressions == gate passes."""
@@ -133,6 +145,9 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
     diff_rows("aggregation", index_aggregation(new), index_aggregation(old),
               GATED_KEYS + ("verify_rounds", "verify_comm_bits"))
     diff_rows("mesh", index_mesh(new), index_mesh(old), GATED_KEYS)
+    diff_rows("embedding", index_embedding(new), index_embedding(old),
+              GATED_KEYS + ("verify_rounds", "verify_comm_bits",
+                            "per_token_bits", "dispatches_per_step"))
     # mesh speed gate: predicted costs are deterministic per device count,
     # wall time gets the tolerance factor — both only comparable when the
     # runs saw the same device mesh.
@@ -187,6 +202,22 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
                 f"mesh {'/'.join(str(k) for k in key)}: "
                 f"mesh != serial ledger (device placement broke the "
                 f"transcript identity)")
+    for key, row in index_embedding(new).items():
+        tag = f"embedding {'/'.join(str(k) for k in key)}"
+        if not row.get("ledger_equal", False):
+            regressions.append(
+                f"{tag}: batched != sequential ledger (lookup fusion "
+                f"broke cost identity)")
+        if row.get("speedup", 0.0) < EMBED_SPEEDUP_FLOOR:
+            regressions.append(
+                f"{tag}: speedup {row.get('speedup')} fell below the "
+                f"{EMBED_SPEEDUP_FLOOR}x acceptance floor over the "
+                f"per-call baseline")
+        if row.get("dispatches_per_step") != row.get("shards"):
+            regressions.append(
+                f"{tag}: {row.get('dispatches_per_step')} dispatches per "
+                f"decode step with {row.get('shards')} shards (want ONE "
+                f"fused ss_matmul per shard)")
     return regressions, notes
 
 
@@ -213,7 +244,11 @@ def history_entry(doc: dict, label: str) -> dict:
                 aggregation=costs(index_aggregation(doc)),
                 mesh=costs(index_mesh(doc),
                            GATED_KEYS + MESH_PREDICTED_KEYS
-                           + ("wall_us", "devices")))
+                           + ("wall_us", "devices")),
+                embedding=costs(index_embedding(doc),
+                                GATED_KEYS + ("per_token_bits",
+                                              "dispatches_per_step",
+                                              "tokens_per_sec", "speedup")))
 
 
 def append_history(doc: dict, history: Optional[dict], label: str) -> dict:
@@ -237,7 +272,7 @@ def validate_history(history: dict) -> None:
         if "label" not in run:
             raise ValueError("history run without a label")
         for section in ("table", "batched", "sharded", "serving",
-                        "aggregation", "mesh"):
+                        "aggregation", "mesh", "embedding"):
             costs_by_cfg = run.get(section)
             if not isinstance(costs_by_cfg, dict):
                 continue     # absent / experimental payload: not ours to gate
@@ -313,7 +348,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               f"{len(index_sharded(new))} sharded rows, "
               f"{len(index_serving(new))} serving rows, "
               f"{len(index_aggregation(new))} aggregation rows, "
-              f"{len(index_mesh(new))} mesh rows checked)")
+              f"{len(index_mesh(new))} mesh rows, "
+              f"{len(index_embedding(new))} embedding rows checked)")
     return 0
 
 

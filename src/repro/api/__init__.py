@@ -29,12 +29,12 @@ from .planner import (DEFAULT_ELL, BatchExplanation, CostEstimate, DBStats,
                       GroupEstimate, PlanNotSupported, candidate_estimates,
                       choose_select_strategy, estimate_aggregate_cost,
                       estimate_batch_group_cost, estimate_count_cost,
-                      estimate_equijoin_cost, estimate_pkfk_cost,
-                      estimate_range_cost, estimate_select_cost,
-                      explain_batch_groups)
-from .plans import (AUTO, Aggregate, Between, ColumnRef, Count, Eq, Join,
-                    Padding, Plan, QueryResult, RangeCount, RangeSelect,
-                    Select, resolve_column)
+                      estimate_embed_cost, estimate_equijoin_cost,
+                      estimate_pkfk_cost, estimate_range_cost,
+                      estimate_select_cost, explain_batch_groups)
+from .plans import (AUTO, Aggregate, Between, ColumnRef, Count, EmbedLookup,
+                    Eq, Join, Padding, Plan, QueryResult, RangeCount,
+                    RangeSelect, Select, resolve_column)
 
 __all__ = [
     "Backend", "available_backends", "batched_matcher",
@@ -47,9 +47,9 @@ __all__ = [
     "GroupEstimate", "PlanNotSupported", "candidate_estimates",
     "choose_select_strategy", "estimate_aggregate_cost",
     "estimate_batch_group_cost", "estimate_count_cost",
-    "estimate_equijoin_cost", "estimate_pkfk_cost", "estimate_range_cost",
-    "estimate_select_cost", "explain_batch_groups",
-    "AUTO", "Aggregate", "Between", "ColumnRef", "Count", "Eq", "Join",
-    "Padding", "Plan", "QueryResult", "RangeCount", "RangeSelect", "Select",
-    "VerificationError", "resolve_column",
+    "estimate_embed_cost", "estimate_equijoin_cost", "estimate_pkfk_cost",
+    "estimate_range_cost", "estimate_select_cost", "explain_batch_groups",
+    "AUTO", "Aggregate", "Between", "ColumnRef", "Count", "EmbedLookup",
+    "Eq", "Join", "Padding", "Plan", "QueryResult", "RangeCount",
+    "RangeSelect", "Select", "VerificationError", "resolve_column",
 ]

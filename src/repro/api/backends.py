@@ -69,6 +69,9 @@ class Backend:
     ripple_carry:   (c, S, n), (c, S, n), carry|None -> (rb, carry')
     ripple_segment: (c, S, n, k), (c, S, n, k), carry|None -> (rb, carry')
     match_matrix_batch: (c, B, nx, W, A), (c, B, ny, W, A) -> (c, B, nx, ny)
+    share_onehot:   tokens (M,) int32, a1 (M, V), n_shares= -> (c, M, V)
+                    fused one-hot share generation (embedding fast path);
+                    None falls back to the jnp reference program.
     """
     name: str
     aa_match: _Op
@@ -78,6 +81,7 @@ class Backend:
     ripple_carry: Optional[_RippleOp] = None
     ripple_segment: Optional[_RippleOp] = None
     match_matrix_batch: Optional[_Op] = None
+    share_onehot: Optional[Callable[..., Array]] = None
 
 
 def batched_matcher(backend: Backend) -> _Op:

@@ -43,12 +43,13 @@ from ..core.costs import CostLedger
 from ..core.dataplane import Dispatcher, ShardedRelation
 from ..core.engine import SecretSharedDB
 from ..core.queries import CardinalityError, aggregate, rounds
+from ..core.queries import embed as embed_q
 from . import planner as _planner
 from .backends import BackendLike, get_backend
 from .executor import MapReduceExecutor
-from .plans import (AUTO, Aggregate, Between, ColumnRef, Count, Eq, Join,
-                    Padding, Plan, QueryResult, RangeCount, RangeSelect,
-                    Select, resolve_column)
+from .plans import (AUTO, Aggregate, Between, ColumnRef, Count, EmbedLookup,
+                    Eq, Join, Padding, Plan, QueryResult, RangeCount,
+                    RangeSelect, Select, resolve_column)
 
 #: registry name a bare ``QueryClient(db, key)`` attaches its relation
 #: under; single-relation callers never need to spell it.
@@ -362,6 +363,7 @@ class QueryClient:
                                                      Optional[int]]]] = {}
         joins: Dict[str, List[Plan]] = {"pkfk": [], "equi": []}
         agg_grps: Dict[tuple, List[_planner.CostEstimate]] = {}
+        embed_ests: List[_planner.CostEstimate] = []
         auto_plans: List[Select] = []
 
         def add_select(plan: Select, strategy: str) -> None:
@@ -409,6 +411,9 @@ class QueryClient:
                 gk = (("agg_sum", t_bits) if plan.op in ("sum", "avg")
                       else ("agg_minmax", t_bits, plan.reduce_every))
                 agg_grps.setdefault(gk, []).append(est)
+            elif isinstance(plan, EmbedLookup):
+                embed_ests.append(_planner.estimate_embed_cost(
+                    stats, n_tokens=len(plan.tokens), verify=plan.verify))
             elif isinstance(plan, Join):
                 self._validate_join(plan)
                 joins[plan.kind].append(plan)
@@ -454,6 +459,12 @@ class QueryClient:
                     "aggregate", bits=sum(e.bits for e in ests),
                     rounds=max(e.rounds for e in ests),
                     dispatches=max(e.dispatches for e in ests))))
+        if embed_ests:      # one fused contraction: dispatches don't stack
+            groups.append(_planner.GroupEstimate(
+                "embed", len(embed_ests), _planner.CostEstimate(
+                    "embed", bits=sum(e.bits for e in embed_ests),
+                    rounds=max(e.rounds for e in embed_ests),
+                    dispatches=max(e.dispatches for e in embed_ests))))
         if joins["pkfk"]:       # one fused group: batched match matrices
             ests = [_planner.estimate_pkfk_cost(
                 stats, _planner.DBStats.of(p.right))
@@ -532,6 +543,7 @@ class QueryClient:
         range_grps: Dict[Tuple[int, int], List[_Slot]] = {}
         agg_sum_grps: Dict[int, List[_Slot]] = {}
         agg_mm_grps: Dict[Tuple[int, int], List[_Slot]] = {}
+        embed_grp: List[_Slot] = []
         pkfk_grp: List[_Slot] = []
         equi_grp: List[_Slot] = []
         auto_slots: List[_Slot] = []
@@ -585,6 +597,8 @@ class QueryClient:
                 else:
                     agg_mm_grps.setdefault((t_bits, plan.reduce_every),
                                            []).append(slot)
+            elif isinstance(plan, EmbedLookup):
+                embed_grp.append(slot)
             elif isinstance(plan, Join):
                 self._validate_join(plan)
                 (pkfk_grp if plan.kind == "pkfk" else equi_grp).append(slot)
@@ -629,6 +643,18 @@ class QueryClient:
                                              strategy="count", count=cnt)
             for s, cnt in zip(avg_cnt_slots, counts[len(count_grp):]):
                 s.known_count = cnt
+
+        # -- embedding lookups: every job's one-hots share in one program
+        # and the whole group contracts in ONE ss_matmul per shard ---------
+        if embed_grp:
+            embs = embed_q.embed_phase(be, rel, [
+                embed_q.EmbedJob(tokens=s.plan.tokens, key=s.key,
+                                 ledger=s.ledger, verify=s.plan.verify)
+                for s in embed_grp])
+            for s, emb in zip(embed_grp, embs):
+                results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
+                                             strategy="embed",
+                                             embeddings=emb)
 
         # -- aggregation: SUM/AVG numerators fuse per bit-width, MIN/MAX
         # tournaments per (bit-width, reduce_every) ------------------------

@@ -254,6 +254,29 @@ def estimate_aggregate_cost(stats: DBStats, op: str, *, t_bits: int,
     raise ValueError(f"unknown aggregate op {op!r}")
 
 
+def estimate_embed_cost(stats: DBStats, *, n_tokens: int,
+                        verify: bool = False) -> CostEstimate:
+    """§3.2.1 as the LM embedding layer: one fused lookup round.
+
+    The relation is the shared ``(c, V, D)`` table (``n`` = V vocab rows,
+    ``m`` = D model dims). The step's ``n_tokens`` shared one-hots go up
+    (c·n_tok·V), the picked embedding share rows come down (c·n_tok·D),
+    all in ONE contraction — dispatches = S (one ``ss_matmul`` per shard).
+    ``verify=`` adds the OBSCURE consistency round and c checksum elements.
+
+    Bits mirror the measured ledger exactly in ``CostLedger`` units.
+    """
+    s = stats
+    S = max(1, min(s.shards, max(s.n, 1)))
+    elems = s.c * n_tokens * s.n + s.c * n_tokens * s.m
+    rounds = 1
+    if verify:
+        rounds += 1
+        elems += s.c
+    return CostEstimate("embed", elems * WORD_BITS, rounds=rounds,
+                        dispatches=S)
+
+
 def estimate_pkfk_cost(stats: DBStats, right: DBStats) -> CostEstimate:
     """§3.3.1: match-matrix step (per shard) + the shared fetch + one round
     shipping every reducer's (parent ⊕ child) concatenation."""

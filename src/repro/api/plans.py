@@ -219,6 +219,29 @@ class Aggregate(Plan):
                              "SUM/AVG run in one contraction round")
 
 
+@dataclasses.dataclass(frozen=True)
+class EmbedLookup(Plan):
+    """Oblivious embedding lookup of a step's token ids (§3.2.1 as an LM
+    layer; the embedding-table relation is attached via
+    ``models.private_embed.as_embed_relation``).
+
+    tokens: the step's token ids (batch×seq, flattened to a tuple — plans
+            are plain hashable data; the result keeps the flat order).
+    verify: OBSCURE-style consistency round over the opened embeddings
+            (needs c >= degree+3 clouds); priced in ``explain()``.
+    """
+    tokens: Tuple[int, ...]
+    verify: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "tokens",
+                           tuple(int(t) for t in self.tokens))
+        if not self.tokens:
+            raise ValueError("EmbedLookup needs at least one token id")
+        if min(self.tokens) < 0:
+            raise ValueError("token ids must be >= 0")
+
+
 # ---------------------------------------------------------------------------
 # result
 # ---------------------------------------------------------------------------
@@ -232,7 +255,8 @@ class QueryResult:
     executed algorithm (planner-chosen or forced) and ``plan`` echoes the
     logical plan for logging/replay. ``value`` carries an aggregation
     plan's opened scalar (int for SUM/MIN/MAX, float for AVG; None when a
-    conditional MIN/MAX/AVG matched no tuples).
+    conditional MIN/MAX/AVG matched no tuples). ``embeddings`` carries an
+    ``EmbedLookup``'s opened float32 ``(n_tokens, D)`` matrix.
     """
     plan: Plan
     ledger: CostLedger
@@ -241,6 +265,8 @@ class QueryResult:
     count: Optional[int] = None
     addresses: Optional[List[int]] = None
     value: Optional[float] = None
+    embeddings: Optional[object] = None     # np.ndarray; typed loosely to
+    #                                         keep plans free of numpy
 
     def __post_init__(self):
         if self.count is None and self.rows is not None:

@@ -10,8 +10,9 @@ should use ``repro.api.QueryClient`` — one facade with logical plans,
 name-based columns, automatic key derivation, a cost-based selection
 planner, and the backend registry replacing the old ``impl=`` strings.
 """
-from . import aggregate, rounds
+from . import aggregate, embed, rounds
 from .aggregate import VerificationError
+from .embed import EmbedJob, embed_phase
 from .count import count_query
 from .select import (CardinalityError, select_one_tuple, select_one_round,
                      select_tree)
@@ -19,7 +20,8 @@ from .join import pkfk_join, equijoin
 from .range_query import ss_sub, range_count, range_select
 
 __all__ = [
-    "CardinalityError", "VerificationError", "aggregate", "rounds",
-    "count_query", "select_one_tuple", "select_one_round", "select_tree",
-    "pkfk_join", "equijoin", "ss_sub", "range_count", "range_select",
+    "CardinalityError", "VerificationError", "aggregate", "embed", "rounds",
+    "EmbedJob", "embed_phase", "count_query", "select_one_tuple",
+    "select_one_round", "select_tree", "pkfk_join", "equijoin", "ss_sub",
+    "range_count", "range_select",
 ]

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from .aa_match import aa_match_batch_pallas, aa_match_pallas
 from .ripple import ripple_carry_pallas, ripple_segment_pallas
-from .ss_matmul import ss_matmul_pallas
+from .ss_matmul import (is_tall_skinny, share_onehot_pallas, ss_matmul_pallas,
+                        ss_matmul_tall_pallas)
 
 
 def _interpret() -> bool:
@@ -23,9 +24,20 @@ def _interpret() -> bool:
 
 @jax.jit
 def ss_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Batched mod-p matmul. a: ([c,] M, K), b: ([c,] K, N) uint32."""
+    """Batched mod-p matmul. a: ([c,] M, K), b: ([c,] K, N) uint32.
+
+    Tall-skinny operands (small M = tokens, huge K = vocab — the embedding
+    contraction) route to the shape-tuned tiling; everything else takes the
+    square 128³ tiles. Both are the same kernel body, so results are
+    bit-identical either way.
+    """
     interp = _interpret()
-    fn = functools.partial(ss_matmul_pallas, interpret=interp)
+
+    def fn(x, y):
+        if is_tall_skinny(x.shape[0], x.shape[1], y.shape[1]):
+            return ss_matmul_tall_pallas(x, y, interpret=interp)
+        return ss_matmul_pallas(x, y, interpret=interp)
+
     if a.ndim == 2 and b.ndim == 2:
         return fn(a, b)
     if a.ndim == 3 and b.ndim == 3:
@@ -33,6 +45,15 @@ def ss_matmul(a: jax.Array, b: jax.Array) -> jax.Array:
     if a.ndim == 3 and b.ndim == 2:
         return jax.vmap(lambda x: fn(x, b))(a)
     raise ValueError(f"unsupported ranks: {a.shape} @ {b.shape}")
+
+
+def share_onehot(tokens: jax.Array, a1: jax.Array, *,
+                 n_shares: int) -> jax.Array:
+    """Fused degree-1 one-hot share generation (embedding fast path):
+    tokens (M,) int32 + per-token coefficients a1 (M, V) uint32 ->
+    share tensor (n_shares, M, V), never materializing the one-hot."""
+    return share_onehot_pallas(tokens, a1, n_shares=n_shares,
+                               interpret=_interpret())
 
 
 @jax.jit
@@ -175,4 +196,5 @@ def as_backend():
                    match_matrix=match_matrix, aa_match_batch=aa_match_batch,
                    ripple_carry=ripple_carry,
                    ripple_segment=ripple_segment,
-                   match_matrix_batch=match_matrix_batch)
+                   match_matrix_batch=match_matrix_batch,
+                   share_onehot=share_onehot)

@@ -159,12 +159,12 @@ LATENCY_WINDOW = 4096
 
 def plan_family(plan: Plan) -> str:
     """Telemetry bucket for a logical plan (count/select/range_*/join/
-    aggregate)."""
+    aggregate/embed)."""
     name = type(plan).__name__
     return {"Count": "count", "Select": "select",
             "RangeCount": "range_count", "RangeSelect": "range_select",
-            "Join": "join", "Aggregate": "aggregate"}.get(name,
-                                                          name.lower())
+            "Join": "join", "Aggregate": "aggregate",
+            "EmbedLookup": "embed"}.get(name, name.lower())
 
 
 def _quantile(xs, q: float) -> float:

@@ -224,8 +224,15 @@ def _run_blocks(cfg: ModelConfig, blocks: dict, x: Array, *,
 # embedding / head
 # ---------------------------------------------------------------------------
 
-def _embed_tokens(params: dict, cfg: ModelConfig, tokens: Array) -> Array:
-    if cfg.private_embed:
+def _embed_tokens(params: dict, cfg: ModelConfig, tokens: Array,
+                  *, embeds: Optional[Array] = None) -> Array:
+    """Token embeddings, three sources: precomputed ``embeds`` (a serving
+    frontend already ran the lookups — e.g. obliviously, through the
+    ``EmbedLookup`` query family), the in-graph private path
+    (``cfg.private_embed``), or the plaintext table."""
+    if embeds is not None:
+        x = embeds.astype(_dtype(cfg))
+    elif cfg.private_embed:
         from .private_embed import private_lookup_inline
         x = private_lookup_inline(params, cfg, tokens)
     else:
@@ -237,7 +244,8 @@ def _embed_tokens(params: dict, cfg: ModelConfig, tokens: Array) -> Array:
 
 def _prefix_inputs(params: dict, cfg: ModelConfig, batch: dict) -> Array:
     """Assemble the input sequence: [modality prefix] + token embeddings."""
-    x = _embed_tokens(params, cfg, batch["tokens"])
+    x = _embed_tokens(params, cfg, batch["tokens"],
+                      embeds=batch.get("embeds"))
     if cfg.frontend == "vit" and "patches" in batch:
         pre = (batch["patches"].astype(_dtype(cfg))
                @ params["frontend_proj"])
@@ -356,8 +364,13 @@ def prefill(params: dict, cfg: ModelConfig, batch: dict, *,
 
 def decode_step(params: dict, cfg: ModelConfig, cache: dict, cache_len,
                 batch: dict) -> Tuple[Array, dict]:
-    """One-token autoregressive step against a filled cache."""
-    x = _embed_tokens(params, cfg, batch["tokens"])
+    """One-token autoregressive step against a filled cache.
+
+    ``batch["embeds"]``, when present, carries this step's already-computed
+    token embeddings (e.g. an oblivious ``EmbedLookup`` served off-graph);
+    otherwise the embeddings come from ``batch["tokens"]`` as usual."""
+    x = _embed_tokens(params, cfg, batch["tokens"],
+                      embeds=batch.get("embeds"))
     positions = (jnp.asarray(cache_len)[None, None]
                  + jnp.arange(x.shape[1])[None, :])
     x, new_caches = _run_blocks(cfg, params["blocks"], x,

@@ -8,33 +8,46 @@ hold Shamir shares of the fixed-point-quantized embedding table at each
 hotspot). The serving cloud learns neither the token id (access-pattern
 hidden: every vocab row is touched identically) nor the embedding row.
 
+Two paths:
+
+* :func:`private_lookup` — the per-call reference: one ``shamir.share`` +
+  one contraction per invocation. Kept as the correctness oracle and the
+  bench baseline.
+* :func:`private_lookup_batched` — the serving fast path on the batched
+  engine (``core.queries.embed``): all batch×seq one-hots share in ONE
+  jitted program (vectorized degree-1 evaluation from fold_in-derived
+  per-token keys) and contract in ONE ``ss_matmul`` of shape
+  ``(c, B·n, V)·(c, V, D)``, with opt-in OBSCURE-style ``verify=``.
+
+:func:`as_embed_relation` wraps the shared table as a relation so it
+attaches to a ``QueryClient``/``QueryServer`` like any other tenant —
+sharded over the vocab axis, device-resident under ``MeshDispatcher``.
+
 Fixed-point: values quantized at scale 2¹², range ±2¹⁸ ≪ p/2, so signed
-round-trip through F_p is exact. Degree after lookup = 2 ⇒ 3 clouds suffice.
+round-trip through F_p is exact (out-of-range tables raise). Degree after
+lookup = 2 ⇒ 3 clouds suffice (4 with ``verify=``).
 """
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+import itertools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from ..core import field, shamir
+from ..core import encoding, shamir
+from ..core.engine import SecretSharedDB
+from ..core.queries.embed import (QUANT_RANGE, QUANT_SCALE,
+                                  dequantize_from_field, quantize_to_field,
+                                  share_tokens)
 from ..core.shamir import Shares
 from .config import ModelConfig
 
-QUANT_SCALE = 4096.0  # 2**12
-
-
-def quantize_to_field(x: jax.Array) -> jax.Array:
-    """float -> fixed-point F_p element (signed values wrap mod p)."""
-    q = jnp.round(x.astype(jnp.float32) * QUANT_SCALE).astype(jnp.int64)
-    return (q % jnp.int64(int(field.P))).astype(field.DTYPE)
-
-
-def dequantize_from_field(x: jax.Array) -> jax.Array:
-    return field.from_signed(x).astype(jnp.float32) / QUANT_SCALE
+__all__ = [
+    "QUANT_SCALE", "QUANT_RANGE", "quantize_to_field",
+    "dequantize_from_field", "setup_private_embed", "as_embed_relation",
+    "private_lookup", "private_lookup_batched", "private_lookup_inline",
+]
 
 
 def setup_private_embed(key, embed: jax.Array, *, n_shares: int = 4,
@@ -44,13 +57,28 @@ def setup_private_embed(key, embed: jax.Array, *, n_shares: int = 4,
                         degree=degree)
 
 
+def as_embed_relation(embed_shares: Shares) -> SecretSharedDB:
+    """Wrap a shared ``(c, V, D)`` table so it attaches like any relation.
+
+    ``n_tuples = V`` (the axis ``ShardedRelation`` splits — vocab shards),
+    ``n_attrs = D``. The codec is a placeholder: embedding relations carry
+    no encoded string columns, only the raw share tensor participates.
+    """
+    if embed_shares.values.ndim != 3:
+        raise ValueError(f"expected a (c, V, D) share tensor, got shape "
+                         f"{tuple(embed_shares.values.shape)}")
+    return SecretSharedDB(relation=embed_shares, codec=encoding.Codec(),
+                          column_names=(), numeric={}, numeric_bits={},
+                          base_degree=embed_shares.degree)
+
+
 def private_lookup(key, embed_shares: Shares, tokens: jax.Array,
                    *, backend="jnp") -> jax.Array:
-    """Oblivious lookup of ``tokens`` (any shape) -> float32 embeddings.
+    """Per-call reference lookup of ``tokens`` (any shape) -> float32.
 
-    The share-space matmul goes through the backend registry
-    (``repro.api.backends``), so the serving stack picks kernels the same
-    way the query suite does.
+    One ``shamir.share`` and one contraction per invocation — the
+    correctness oracle the batched fast path is held bit-identical to
+    (post-dequantize), and the bench baseline it is measured against.
     """
     from ..api.backends import get_backend  # deferred: api sits above models
     be = get_backend(backend)
@@ -65,18 +93,75 @@ def private_lookup(key, embed_shares: Shares, tokens: jax.Array,
     return dequantize_from_field(out).reshape(*tokens.shape, -1)
 
 
-def private_lookup_inline(params: dict, cfg: ModelConfig, tokens: jax.Array
-                          ) -> jax.Array:
+def private_lookup_batched(key, embed_shares: Shares, tokens: jax.Array,
+                           *, backend="jnp", verify: bool = False
+                           ) -> jax.Array:
+    """Serving fast path: ONE share program + ONE ``ss_matmul``.
+
+    All one-hots of ``tokens`` (any shape) share in a single jitted
+    program — per-token fold_in keys, vectorized degree-1 polynomial
+    evaluation — then contract against the table in one share-space
+    matmul. ``verify=True`` cross-checks the redundant shares of the
+    opened result (needs ``n_shares >= degree+3`` clouds) and raises
+    ``core.queries.VerificationError`` on inconsistency.
+
+    For the sharded / device-resident / billed path, attach the table via
+    :func:`as_embed_relation` and issue ``plans.EmbedLookup`` through a
+    ``QueryClient`` — this standalone entry point serves in-process use
+    (e.g. ``private_lookup_inline``).
+    """
+    from ..api.backends import get_backend  # deferred: api sits above models
+    be = get_backend(backend)
+    tokens = jnp.asarray(tokens)
+    v = embed_shares.shape[0]
+    q_sh = share_tokens(key, tokens, vocab=v,
+                        n_shares=embed_shares.n_shares)       # (c, N, V)
+    picked = be.ss_matmul(q_sh.values, embed_shares.values)   # (c, N, D)
+    out_sh = Shares(picked, q_sh.degree + embed_shares.degree)
+    if verify:
+        from ..core.queries.aggregate import VerificationError
+        import numpy as np
+        ok = np.asarray(shamir.verify_consistency(out_sh))
+        if not bool(ok.all()):
+            raise VerificationError(
+                f"embedding lookup verification failed: "
+                f"{int((~ok).sum())}/{ok.size} openings inconsistent")
+    out = dequantize_from_field(shamir.interpolate(out_sh))
+    return out.reshape(*tokens.shape, -1)
+
+
+# Eager in-graph calls derive a fresh key per call from this counter; no two
+# lookups ever reuse sharing polynomials (the §2.1 frequency-attack defence).
+_INLINE_CALLS = itertools.count()
+
+
+def _next_inline_key(params: dict) -> jax.Array:
+    base = params.get("embed_key")
+    if base is None:
+        base = jax.random.PRNGKey(0)
+    return jax.random.fold_in(base, next(_INLINE_CALLS))
+
+
+def private_lookup_inline(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                          *, key: Optional[jax.Array] = None) -> jax.Array:
     """In-graph variant used when ``cfg.private_embed`` is set.
 
     If the params carry pre-shared tables (``embed_shares``), use them;
     otherwise quantize+share the plaintext table on the fly (test path).
     The lookup result matches ``take(embed)`` to quantization error (2⁻¹²).
+
+    Sharing randomness: each call folds a fresh counter value into the base
+    key (``params["embed_key"]`` when present), so no two eager calls emit
+    identical share tensors. Under ``jit`` the Python counter is baked at
+    trace time — jitted callers must thread ``key=`` (or a per-step
+    ``params["embed_key"]``) themselves for fresh per-call polynomials.
     """
-    key = jax.random.PRNGKey(0)  # fresh per-call keys come from the server
+    if key is None:
+        key = _next_inline_key(params)
     if "embed_shares" in params:
         sh = Shares(params["embed_shares"], 1)
     else:
-        sh = setup_private_embed(key, params["embed"], n_shares=4)
-    out = private_lookup(jax.random.fold_in(key, 1), sh, tokens)
+        sh = setup_private_embed(jax.random.fold_in(key, 0),
+                                 params["embed"], n_shares=4)
+    out = private_lookup_batched(jax.random.fold_in(key, 1), sh, tokens)
     return jax.lax.stop_gradient(out).astype(jnp.dtype(cfg.dtype))

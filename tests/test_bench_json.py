@@ -58,6 +58,11 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
     real_agg = bq.bench_aggregation
     monkeypatch.setattr(
         bq, "bench_aggregation", lambda **kw: real_agg(n=16))
+    real_embed = bq.bench_embedding
+    monkeypatch.setattr(
+        bq, "bench_embedding",
+        lambda **kw: real_embed(vocab=128, d_model=16, n_tokens=256,
+                                shard_counts=(1,)))
     out = tmp_path / "BENCH_queries.json"
     bq.main(["--smoke", "--out", str(out)])
 
@@ -105,6 +110,17 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
                 "ledger_equal"} <= set(row)
         assert row["ledger_equal"] is True
         assert row["verify_rounds"] >= 1 and row["verify_comm_bits"] > 0
+    # embedding fast path: the acceptance shape survives the real sweep
+    assert doc["embedding"]
+    for row in doc["embedding"]:
+        assert {"name", "vocab", "d_model", "n_tokens", "shards",
+                "tokens_per_sec", "baseline_tokens_per_sec", "speedup",
+                "dispatches_per_step", "per_token_bits", "rounds",
+                "comm_bits", "verify_rounds", "verify_comm_bits",
+                "placed_bytes", "ledger_equal"} <= set(row)
+        assert row["ledger_equal"] is True
+        assert row["dispatches_per_step"] == row["shards"]
+        assert row["speedup"] >= 5.0 and row["placed_bytes"] > 0
 
 
 # ---------------------------------------------------------------------------
@@ -345,6 +361,67 @@ def test_compare_bench_gates_aggregation_costs(cb, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# embedding (oblivious lookup fast path) section gating
+# ---------------------------------------------------------------------------
+
+def _embedding_doc():
+    doc = _aggregation_doc()
+    doc["embedding"] = [
+        {"name": "embed_s2", "vocab": 512, "d_model": 32, "n_tokens": 256,
+         "shards": 2, "tokens_per_sec": 1300.0,
+         "baseline_tokens_per_sec": 65.0, "speedup": 20.0,
+         "dispatches_per_step": 2, "per_token_bits": 67456, "rounds": 1,
+         "comm_bits": 17268736, "verify_rounds": 1, "verify_comm_bits": 124,
+         "placed_bytes": 262144, "ledger_equal": True},
+    ]
+    return doc
+
+
+def test_compare_bench_gates_embedding_costs(cb, tmp_path):
+    new = _write(tmp_path, "em_new.json", _embedding_doc())
+    old = _write(tmp_path, "em_old.json", _embedding_doc())
+    assert cb.main([new, old]) == 0
+    # cost increases — including verify overhead, per-token bits and the
+    # dispatch count per decode step — regress
+    for field in ("rounds", "comm_bits", "verify_rounds",
+                  "verify_comm_bits", "per_token_bits",
+                  "dispatches_per_step"):
+        doc = _embedding_doc()
+        doc["embedding"][0][field] += 1
+        assert cb.main([_write(tmp_path, f"em_{field}.json", doc),
+                        old]) == 1
+    # batched != sequential ledger is a regression
+    doc = _embedding_doc()
+    doc["embedding"][0]["ledger_equal"] = False
+    assert cb.main([_write(tmp_path, "em_bad.json", doc), old]) == 1
+    # speedup below the 5x acceptance floor is a regression even with a
+    # clean ledger — the fast path exists for the ratio
+    doc = _embedding_doc()
+    doc["embedding"][0]["speedup"] = 3.9
+    assert cb.main([_write(tmp_path, "em_slow.json", doc), old]) == 1
+    # dispatches per step != shard count (lost fusion) is a regression
+    # even when the baseline row agrees
+    doc = _embedding_doc()
+    doc["embedding"][0]["dispatches_per_step"] = 4
+    old_doc = _embedding_doc()
+    old_doc["embedding"][0]["dispatches_per_step"] = 4
+    assert cb.main([_write(tmp_path, "em_fan.json", doc),
+                    _write(tmp_path, "em_fan_old.json", old_doc)]) == 1
+    # an OLD baseline without the section is not a "vanished config"
+    assert cb.main([new, _write(tmp_path, "em_v1.json",
+                                _aggregation_doc())]) == 0
+    # the history entry carries the embedding costs too
+    hist = tmp_path / "em_history.json"
+    assert cb.main([new, "--append-history", str(hist)]) == 0
+    h = json.loads(hist.read_text())
+    assert h["runs"][0]["embedding"]["embed_s2/2/256"] == {
+        "rounds": 1, "comm_bits": 17268736, "per_token_bits": 67456,
+        "dispatches_per_step": 2, "tokens_per_sec": 1300.0,
+        "speedup": 20.0}
+    cb.validate_history(h)
+
+
+# ---------------------------------------------------------------------------
 # plot_history.py: per-config trend tables over the time series
 # ---------------------------------------------------------------------------
 
@@ -436,6 +513,15 @@ def test_plot_history_renders_aggregation_section(ph, cb, tmp_path,
     assert ph.main([hist, "--section", "aggregation"]) == 0
     out = capsys.readouterr().out
     assert "agg_min_cond/5/16" in out
+    assert "REGRESSED" not in out
+
+
+def test_plot_history_renders_embedding_section(ph, cb, tmp_path, capsys):
+    hist = _history(tmp_path, cb, [(_embedding_doc(), "pr-7"),
+                                   (_embedding_doc(), "pr-8")])
+    assert ph.main([hist, "--section", "embedding"]) == 0
+    out = capsys.readouterr().out
+    assert "embed_s2/2/256" in out
     assert "REGRESSED" not in out
 
 
