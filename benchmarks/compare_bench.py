@@ -52,6 +52,14 @@ INFO_KEYS = ("cloud_bits", "user_bits")
 MESH_PREDICTED_KEYS = ("predicted_flops", "predicted_hbm_bytes",
                        "predicted_collective_bytes")
 MESH_WALL_TOLERANCE = 2.0
+#: serving_storm section: the cold neighbour's p95 under a 10x hot-tenant
+#: flood must stay within this factor of its solo baseline — the
+#: self-tuning overload machinery (weighted fair quotas, adaptive
+#: deadline steering, fused closes) exists *for* this ratio. Both runs
+#: execute on the same machine so runner speed divides out; the ceiling
+#: is env-overridable for noisy runners (like MESH_WALL_TOLERANCE would
+#: be raised, but p95 ratios jitter more than steady-state walls).
+STORM_P95_TOLERANCE = float(os.environ.get("STORM_P95_TOLERANCE", "1.5"))
 
 
 def _load(path: str) -> dict:
@@ -81,6 +89,12 @@ def index_serving(doc: dict) -> Dict[Tuple[str, int, int], dict]:
     # "serving" (multi-tenant sweep) post-dates "sharded" the same way.
     return {(r["name"], r["relations"], r["n"]): r
             for r in doc.get("serving", [])}
+
+
+def index_serving_storm(doc: dict) -> Dict[Tuple[str, int, int], dict]:
+    # "serving_storm" (overload isolation) post-dates "embedding".
+    return {(r["name"], r["hot_ratio"], r["n"]): r
+            for r in doc.get("serving_storm", [])}
 
 
 def index_aggregation(doc: dict) -> Dict[Tuple[str, int, int], dict]:
@@ -142,6 +156,8 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
               GATED_KEYS)
     diff_rows("serving", index_serving(new), index_serving(old),
               GATED_KEYS)
+    diff_rows("serving_storm", index_serving_storm(new),
+              index_serving_storm(old), GATED_KEYS)
     diff_rows("aggregation", index_aggregation(new), index_aggregation(old),
               GATED_KEYS + ("verify_rounds", "verify_comm_bits"))
     diff_rows("mesh", index_mesh(new), index_mesh(old), GATED_KEYS)
@@ -190,6 +206,24 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
                 f"serving {'/'.join(str(k) for k in key)}: "
                 f"multi-tenant != solo-server ledger (cross-relation "
                 f"routing broke tenant isolation)")
+    for key, row in index_serving_storm(new).items():
+        tag = f"serving_storm {'/'.join(str(k) for k in key)}"
+        if not row.get("ledger_equal", False):
+            regressions.append(
+                f"{tag}: storm perturbed the neighbour's transcript "
+                f"(rows or ledgers differ from the solo run)")
+        if row.get("p95_ratio", 0.0) > STORM_P95_TOLERANCE:
+            regressions.append(
+                f"{tag}: neighbour p95 ratio {row.get('p95_ratio')} over "
+                f"the {STORM_P95_TOLERANCE}x solo ceiling (overload "
+                f"isolation lost — hot tenant leaking latency into its "
+                f"neighbour)")
+        if not row.get("steering_diverged", False):
+            regressions.append(
+                f"{tag}: steered deadlines failed to diverge (hot "
+                f"{row.get('hot_steered_wait_ms')}ms !< cold "
+                f"{row.get('cold_steered_wait_ms')}ms — adaptive "
+                f"steering inert under a 10x flood)")
     for key, row in index_aggregation(new).items():
         if not row.get("ledger_equal", False):
             regressions.append(
@@ -241,6 +275,10 @@ def history_entry(doc: dict, label: str) -> dict:
                 batched=costs(index_batched(doc)),
                 sharded=costs(index_sharded(doc)),
                 serving=costs(index_serving(doc)),
+                serving_storm=costs(index_serving_storm(doc),
+                                    GATED_KEYS + ("p95_ratio",
+                                                  "hot_steered_wait_ms",
+                                                  "cold_steered_wait_ms")),
                 aggregation=costs(index_aggregation(doc)),
                 mesh=costs(index_mesh(doc),
                            GATED_KEYS + MESH_PREDICTED_KEYS
@@ -272,7 +310,8 @@ def validate_history(history: dict) -> None:
         if "label" not in run:
             raise ValueError("history run without a label")
         for section in ("table", "batched", "sharded", "serving",
-                        "aggregation", "mesh", "embedding"):
+                        "serving_storm", "aggregation", "mesh",
+                        "embedding"):
             costs_by_cfg = run.get(section)
             if not isinstance(costs_by_cfg, dict):
                 continue     # absent / experimental payload: not ours to gate
@@ -347,6 +386,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               f"{len(index_batched(new))} batched rows, "
               f"{len(index_sharded(new))} sharded rows, "
               f"{len(index_serving(new))} serving rows, "
+              f"{len(index_serving_storm(new))} serving_storm rows, "
               f"{len(index_aggregation(new))} aggregation rows, "
               f"{len(index_mesh(new))} mesh rows, "
               f"{len(index_embedding(new))} embedding rows checked)")

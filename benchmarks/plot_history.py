@@ -41,8 +41,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import compare_bench  # noqa: E402  (sibling module, shares the schema)
 
-SECTIONS = ("table", "batched", "sharded", "serving", "aggregation",
-            "mesh", "embedding")
+SECTIONS = ("table", "batched", "sharded", "serving", "serving_storm",
+            "aggregation", "mesh", "embedding")
 
 #: per-run keys that are metadata, not cost sections.
 _META_KEYS = ("label", "smoke")

@@ -121,6 +121,55 @@ def main():
         print(f"  [{name}] served={rs['served']} in {rs['batches']} "
               f"batch(es), families={rs['served_by_family']}")
 
+    # --- self-tuning overload: unequal weights under a 10x storm ---------
+    # Two tenants share one pool with unequal DRR weights; the "hot"
+    # tenant floods at ~10x the protected neighbour's rate. Adaptive
+    # deadline steering dives the hot relation's effective wait toward
+    # immediate closes while the neighbour's stays at its configured cap,
+    # and the weighted quota keeps the neighbour's shard dispatches from
+    # queueing behind the flood.
+    import threading  # noqa: E402
+    import time  # noqa: E402
+    storm = QueryServer(pool_workers=4)
+    storm.attach("hot", db_orders, shards=2, key=13,
+                 max_batch=4, max_wait_ms=20, weight=1.0)
+    storm.attach("steady", db_profiles, shards=2, key=14,
+                 max_batch=4, max_wait_ms=20, weight=2.0)
+    hot_plan = Count(Eq("Status", "open"))
+    steady_plan = Count(Eq("Tier", "gold"))
+    reqs_by_rel = {"hot": [], "steady": []}
+
+    def pound(rel, plan, period_s, dur_s):
+        t_end = time.time() + dur_s
+        while time.time() < t_end:
+            reqs_by_rel[rel].append(storm.submit(plan, relation=rel))
+            time.sleep(period_s)
+
+    with storm:
+        threads = [
+            threading.Thread(target=pound,
+                             args=("hot", hot_plan, 0.004, 1.5)),
+            threading.Thread(target=pound,
+                             args=("steady", steady_plan, 0.04, 1.5)),
+        ]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        for rs in reqs_by_rel.values():
+            for r in rs:
+                r.wait(timeout=60)
+    snap = storm.stats.snapshot()["relations"]
+    for name in ("hot", "steady"):
+        rs = snap[name]
+        print(f"  storm[{name}]: served={rs['served']} "
+              f"closes={rs['closes']} "
+              f"steered_wait={rs['steered_wait_ms']:.2f}ms "
+              f"(configured 20ms)")
+    assert snap["hot"]["steered_wait_ms"] < snap["steady"]["steered_wait_ms"]
+    print("  steering diverged: the flooding tenant dives to immediate "
+          "closes, the weighted neighbour keeps a longer deadline")
+
 
 if __name__ == "__main__":
     main()

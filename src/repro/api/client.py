@@ -40,7 +40,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 import jax
 
 from ..core.costs import CostLedger
-from ..core.dataplane import Dispatcher, ShardedRelation
+from ..core.dataplane import Dispatcher, RelationLike, ShardedRelation
 from ..core.engine import SecretSharedDB
 from ..core.queries import CardinalityError, aggregate, rounds
 from ..core.queries import embed as embed_q
@@ -110,6 +110,29 @@ class _Slot:
     column: int = -1
     pred_column: Optional[int] = None
     fetch_key: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass
+class _BatchWork:
+    """One relation's in-flight ``run_batch`` state, split at the fetch.
+
+    ``_prepare_batch`` runs every pre-fetch round and parks the deferred
+    cross-group fetch jobs here; ``_finish_batch`` consumes the fused
+    fetch output and the post-fetch rounds. The split lets
+    :meth:`QueryClient.run_batch_multi` drive several relations' batches
+    to the fetch boundary and fuse their cloud-side matmuls into one
+    dispatch wave.
+    """
+    plans: Sequence[Plan]
+    db: SecretSharedDB
+    rel: "RelationLike"
+    results: Dict[int, QueryResult]
+    fetch_jobs: List[rounds.FetchJob]
+    fetch_meta: List[Tuple[_Slot, str, List[int]]]
+    join_jobs: List[rounds.JoinJob]
+    join_entries: List[rounds.FetchEntry]
+    pkfk_grp: List[_Slot]
+    equi_grp: List[_Slot]
 
 
 class QueryClient:
@@ -346,6 +369,22 @@ class QueryClient:
             p.right for p in plans if isinstance(p, Join)))
         return exp
 
+    def explain_multi(self, batches: Sequence[
+            Tuple[Optional[str], Sequence[Plan]]]
+            ) -> _planner.MultiBatchExplanation:
+        """Predicted ledgers for a prospective :meth:`run_batch_multi`.
+
+        Each ``(relation, plans)`` batch is priced exactly as
+        :meth:`explain` would price it solo (fusion never moves a
+        relation's bits, rounds or dispatch fan-out); the assembly adds
+        the shared-dispatch view — ``fetch_parts`` relations closing with
+        fetch work share ``fetch_waves`` (== 1 when at least two fuse)
+        cloud-side dispatch waves instead of one wave each.
+        """
+        return _planner.explain_multi_batches(
+            [self.explain(list(plans), relation=relation)
+             for relation, plans in batches])
+
     def _explain_batch(self, plans: List[Plan],
                        ent: AttachedRelation) -> _planner.BatchExplanation:
         """Group ``plans`` exactly as :meth:`run_batch` would (AUTO plans
@@ -533,7 +572,34 @@ class QueryClient:
         ``strategy="auto"`` the query replans onto one_round/tree inside the
         batch, reusing the learned count.
         """
-        ent = self._entry(relation)
+        (out,) = self.run_batch_multi([(relation, plans)])
+        return out
+
+    def run_batch_multi(self, batches: Sequence[
+            Tuple[Optional[str], Sequence[Plan]]]) -> List[List[QueryResult]]:
+        """Execute several relations' batches with ONE fused fetch wave.
+
+        ``batches`` is a sequence of ``(relation, plans)`` pairs — the
+        scheduler's simultaneously-closing batch groups. Each batch runs
+        exactly as :meth:`run_batch` would (its own relation's key stream,
+        its own grouping, its own ledgers — batches are never mixed), but
+        all batches advance to the cross-group fetch boundary first and
+        their cloud-side fetch ``ss_matmul``s execute as ONE dispatch wave
+        when the relations' dataplanes share a dispatch pool
+        (:func:`repro.core.queries.rounds.fetch_fusion_multi`). Results and
+        ledgers are bit-identical to running the batches back-to-back;
+        returns one result list per batch, in ``batches`` order.
+        """
+        works = [self._prepare_batch(list(plans), self._entry(relation))
+                 for relation, plans in batches]
+        fetched = rounds.fetch_fusion_multi(
+            self.backend,
+            [(w.rel, w.fetch_jobs, w.join_entries) for w in works])
+        return [self._finish_batch(w, f) for w, f in zip(works, fetched)]
+
+    def _prepare_batch(self, plans: Sequence[Plan],
+                       ent: AttachedRelation) -> _BatchWork:
+        """Group, plan and run every pre-fetch round of one batch."""
         db, rel = ent.db, ent.rel
         stats = self.stats(ent.name)
         results: Dict[int, QueryResult] = {}
@@ -804,35 +870,42 @@ class QueryClient:
                 for s in pkfk_grp]
             join_entries = rounds.join_match_round(be, rel, join_jobs)
 
-        # -- the cross-group fetch: ONE ss_matmul for everything ------------
-        if fetch_jobs or join_entries:
-            rows_list, extra_sh = rounds.fetch_fusion(be, rel,
-                                                      fetch_jobs,
-                                                      join_entries)
-            for (s, strat, a), r in zip(fetch_meta, rows_list):
-                results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
-                                             strategy=strat, rows=r,
-                                             addresses=a)
-            if pkfk_grp:
-                join_rows = rounds.join_emit_round(db, join_jobs,
-                                                   extra_sh)
-                for s, r in zip(pkfk_grp, join_rows):
-                    results[s.idx] = QueryResult(plan=s.plan,
-                                                 ledger=s.ledger,
-                                                 strategy="pkfk", rows=r)
+        return _BatchWork(plans=plans, db=db, rel=rel, results=results,
+                          fetch_jobs=fetch_jobs, fetch_meta=fetch_meta,
+                          join_jobs=join_jobs, join_entries=join_entries,
+                          pkfk_grp=pkfk_grp, equi_grp=equi_grp)
+
+    def _finish_batch(self, work: _BatchWork,
+                      fetched: Tuple[List[List[List[str]]], List["rounds.Shares"]]
+                      ) -> List[QueryResult]:
+        """Consume the fused fetch output and run the post-fetch rounds."""
+        be = self.backend
+        db, results = work.db, work.results
+        rows_list, extra_sh = fetched
+        for (s, strat, a), r in zip(work.fetch_meta, rows_list):
+            results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
+                                         strategy=strat, rows=r,
+                                         addresses=a)
+        if work.pkfk_grp:
+            join_rows = rounds.join_emit_round(db, work.join_jobs,
+                                               extra_sh)
+            for s, r in zip(work.pkfk_grp, join_rows):
+                results[s.idx] = QueryResult(plan=s.plan,
+                                             ledger=s.ledger,
+                                             strategy="pkfk", rows=r)
 
         # -- equijoins: phases fused across the group -----------------------
-        if equi_grp:
-            equi_rows = rounds.equijoin_rounds(be, rel, [
+        if work.equi_grp:
+            equi_rows = rounds.equijoin_rounds(be, work.rel, [
                 rounds.EquiJob(
                     s.plan.right, resolve_column(db, s.plan.on[0]),
                     resolve_column(s.plan.right, s.plan.on[1]), s.key,
                     s.ledger, padded_values=s.plan.padding.values)
-                for s in equi_grp])
-            for s, r in zip(equi_grp, equi_rows):
+                for s in work.equi_grp])
+            for s, r in zip(work.equi_grp, equi_rows):
                 results[s.idx] = QueryResult(plan=s.plan, ledger=s.ledger,
                                              strategy="equi", rows=r)
-        return [results[i] for i in range(len(plans))]
+        return [results[i] for i in range(len(work.plans))]
 
     @staticmethod
     def _validate_join(plan: Join) -> None:

@@ -127,9 +127,10 @@ def estimate_select_cost(strategy: str, stats: DBStats, *,
     """(bits, rounds, dispatches) for one §3.2 strategy at cardinality ℓ.
 
     Dispatches count the sharded round engine's per-shard device fan-out:
-    count / match / fetch steps slice the tuple axis (S dispatches each);
-    tree Q&A and address rounds gather *blocks* from the full relation
-    (one dispatch per round regardless of S).
+    count / match / fetch steps slice the tuple axis (S dispatches each),
+    and tree Q&A / address rounds are shard-aligned — each round's block
+    gathers clip to shard bounds and fan out per shard too (S dispatches
+    per Q&A round; the public block partition itself never moves with S).
     """
     s = stats
     S = max(1, min(s.shards, max(s.n, 1)))
@@ -150,7 +151,7 @@ def estimate_select_cost(strategy: str, stats: DBStats, *,
             elems = (_count_elems(s) + _pattern_elems(s) + s.c
                      + _fetch_elems(s, max(ell, 1), padded_rows))
             return CostEstimate("tree", elems * WORD_BITS, rounds=3,
-                                dispatches=2 * S + 1)
+                                dispatches=3 * S)
         qa_rounds = (math.floor(math.log(max(s.n, 2), ell))
                      + math.floor(math.log2(ell)) + 1)       # Theorem 4
         elems = (_count_elems(s) + _pattern_elems(s)
@@ -159,7 +160,7 @@ def estimate_select_cost(strategy: str, stats: DBStats, *,
                  + _fetch_elems(s, ell, padded_rows))
         return CostEstimate("tree", elems * WORD_BITS,
                             rounds=1 + qa_rounds + 1,
-                            dispatches=2 * S + qa_rounds + 1)
+                            dispatches=(2 + qa_rounds + 1) * S)
     raise ValueError(f"unknown selection strategy {strategy!r}")
 
 
@@ -430,3 +431,40 @@ def explain_batch_groups(stats: DBStats,
         dispatches=dispatches,
         shards=S,
         relation=stats.relation)
+
+
+def _has_fetch(part: BatchExplanation) -> bool:
+    return any(g.family in FETCH_RIDERS and g.size > 0 for g in part.groups)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiBatchExplanation:
+    """Predicted ledgers for a fused multi-relation ``run_batch_multi``.
+
+    Per-relation predictions are the untouched solo
+    :class:`BatchExplanation`\\ s — cross-relation fusion co-schedules the
+    already-independent shard dispatches, so no relation's bits, rounds or
+    dispatch fan-out moves. What fusion buys is waves: the
+    ``fetch_parts`` relations that would each close with their own fetch
+    dispatch wave share ONE (``fetch_waves``); the wave's total dispatch
+    fan-out stays Σ of the per-relation shard counts.
+    """
+    parts: Tuple[BatchExplanation, ...]
+    bits: int                   # Σ parts — protocol bits are per relation
+    rounds: int                 # deepest part (waves run side by side)
+    dispatches: int             # Σ parts — fan-out is per relation's shards
+    fetch_parts: int            # relations riding the shared fetch wave
+    fetch_waves: int            # 1 when >= 2 parts fuse, else fetch_parts
+
+
+def explain_multi_batches(parts: Sequence[BatchExplanation]
+                          ) -> MultiBatchExplanation:
+    """Price a prospective ``run_batch_multi`` from its solo predictions."""
+    fetch_parts = sum(1 for p in parts if _has_fetch(p))
+    return MultiBatchExplanation(
+        parts=tuple(parts),
+        bits=sum(p.bits for p in parts),
+        rounds=max((p.rounds for p in parts), default=0),
+        dispatches=sum(p.dispatches for p in parts),
+        fetch_parts=fetch_parts,
+        fetch_waves=1 if fetch_parts > 1 else fetch_parts)

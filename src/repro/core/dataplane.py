@@ -30,14 +30,35 @@ pre-shard engine), :class:`ThreadedDispatcher` fans them out over a thread
 pool (the async serving runtime), and
 ``repro.api.executor.MapReduceDispatcher`` places each shard dispatch as a
 fault-tolerant MapReduce task.
+
+Two multi-tenant refinements ride on the thread pool:
+
+  * **Weighted fair quotas** — every :class:`PoolHandle` carries a
+    ``weight``; dispatches submitted through a handle queue per handle and
+    a deficit-round-robin picker admits them to the pool workers in
+    weight-proportional order. A hot tenant flooding its handle degrades
+    gracefully instead of starving its neighbours' shard dispatches behind
+    a FIFO executor queue. Within one handle, dispatch order (and thus the
+    shard-order combine) is unchanged — results stay bit-identical.
+  * **Fused waves** — :func:`fused_execute` runs several planes' cloud
+    steps as ONE dispatch wave when their dispatchers share a pool: all
+    shard thunks enqueue together (each under its own handle, so quotas
+    still apply) and each step combines in shard order as its futures
+    resolve. Planes on serial / device-resident dispatchers execute
+    unfused via their own ``run_set`` — transcripts never depend on
+    whether a wave was fused.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, List, Optional, Sequence, Tuple, Union
+from collections import deque
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -97,6 +118,11 @@ class Dispatcher:
 SERIAL = Dispatcher()
 
 
+#: deficit-round-robin serves one shard dispatch per unit of deficit;
+#: weights below this floor still accumulate credit (no silent starvation).
+_MIN_WEIGHT = 1e-6
+
+
 class ThreadedDispatcher(Dispatcher):
     """Run shard dispatches concurrently on a shared thread pool.
 
@@ -110,45 +136,163 @@ class ThreadedDispatcher(Dispatcher):
     hands each attached relation its own handle, so the global fan-out
     stays bounded by ONE ``max_workers`` no matter how many dataplanes are
     attached, and detaching one tenant never kills its neighbours' pool.
+
+    Handles are *weighted*: dispatches submitted through a handle are
+    queued per handle and admitted to the pool workers by deficit round
+    robin (:meth:`_pick_locked`) — each rotation visit tops a handle's
+    deficit up by its weight and serves one queued shard dispatch per unit
+    of deficit. Service is weight-proportional under contention, FIFO
+    within a handle, and work-conserving (an idle pool never waits on a
+    quota). Direct ``run_all`` calls on the dispatcher itself bypass the
+    quota path — they are the single-tenant surface.
     """
 
     def __init__(self, max_workers: Optional[int] = None):
-        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+        # mirror ThreadPoolExecutor's default sizing — the cap doubles as
+        # the DRR in-flight bound, so it must be a concrete number.
+        self._cap = max_workers or min(32, (os.cpu_count() or 1) + 4)
+        self._pool = ThreadPoolExecutor(max_workers=self._cap,
                                         thread_name_prefix="shard")
         self._closed = False
+        self._dlock = threading.Lock()
+        self._queues: Dict["PoolHandle", deque] = {}
+        self._rr: deque = deque()           # handles with queued work
+        self._deficits: Dict["PoolHandle", float] = {}
+        self._granted: set = set()          # front handle already topped up
+        self._inflight = 0
 
     def run_all(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
         if self._closed or len(thunks) <= 1:
             return [t() for t in thunks]
         return list(self._pool.map(lambda t: t(), thunks))
 
-    def handle(self) -> "PoolHandle":
-        """A detachable per-relation view sharing this pool."""
-        return PoolHandle(self)
+    def handle(self, weight: float = 1.0) -> "PoolHandle":
+        """A detachable per-relation view sharing this pool.
+
+        ``weight`` sets the handle's deficit-round-robin share: under
+        contention a weight-2 handle's shard dispatches are admitted twice
+        as often as a weight-1 neighbour's.
+        """
+        return PoolHandle(self, weight=weight)
+
+    # -- weighted fair admission (deficit round robin) ----------------------
+    def enqueue(self, handle: "PoolHandle",
+                thunks: Sequence[Callable[[], Any]]) -> List[Future]:
+        """Queue thunks under ``handle``'s quota; returns their futures.
+
+        Non-blocking: admission happens on whichever threads drive the
+        queue (this caller now, pool workers as units finish).
+        """
+        futures = [Future() for _ in thunks]
+        with self._dlock:
+            q = self._queues.get(handle)
+            if q is None:
+                q = self._queues[handle] = deque()
+                self._rr.append(handle)
+            for t, f in zip(thunks, futures):
+                q.append((t, f))
+        self._drive()
+        return futures
+
+    def _pick_locked(self) -> Optional[Tuple[Callable[[], Any], Future]]:
+        """Next admissible unit under DRR; caller holds ``_dlock``.
+
+        The front handle's deficit is topped up by its weight once per
+        rotation visit and spent one unit per served dispatch; when it runs
+        dry (or drains) the rotation advances. Tiny weights merely take
+        more rotations to accumulate a unit — they are never starved.
+        """
+        while self._rr:
+            h = self._rr[0]
+            q = self._queues.get(h)
+            if not q:                       # drained: drop stale credit
+                self._rr.popleft()
+                self._queues.pop(h, None)
+                self._deficits.pop(h, None)
+                self._granted.discard(h)
+                continue
+            if h not in self._granted:
+                self._granted.add(h)
+                self._deficits[h] = (self._deficits.get(h, 0.0)
+                                     + max(h.weight, _MIN_WEIGHT))
+            if self._deficits[h] >= 1.0:
+                self._deficits[h] -= 1.0
+                unit = q.popleft()
+                if not q:
+                    self._rr.popleft()
+                    self._queues.pop(h, None)
+                    self._deficits.pop(h, None)
+                    self._granted.discard(h)
+                return unit
+            self._granted.discard(h)        # spent: next visit re-grants
+            self._rr.rotate(-1)
+        return None
+
+    def _drive(self) -> None:
+        """Admit queued units while worker slots are free (cooperative:
+        submitters and finishing workers both drive; no dedicated thread).
+        """
+        while True:
+            with self._dlock:
+                if not self._closed and self._inflight >= self._cap:
+                    return
+                unit = self._pick_locked()
+                if unit is None:
+                    return
+                self._inflight += 1
+                closed = self._closed
+            if closed:
+                self._run_unit(*unit)       # inline drain — never strand
+            else:
+                try:
+                    self._pool.submit(self._run_unit, *unit)
+                except RuntimeError:        # shut down mid-flight
+                    self._run_unit(*unit)
+
+    def _run_unit(self, thunk: Callable[[], Any], fut: Future) -> None:
+        try:
+            result = thunk()
+        except BaseException as e:          # noqa: BLE001 — relayed to waiter
+            fut.set_exception(e)
+        else:
+            fut.set_result(result)
+        with self._dlock:
+            self._inflight -= 1
+        self._drive()
 
     def close(self) -> None:
         """Release the pool; later dispatches degrade to serial (correct,
-        just unparallel) instead of raising on the shut-down executor."""
+        just unparallel) instead of raising on the shut-down executor.
+        Units still queued under handle quotas drain inline so no waiter
+        blocks forever."""
         self._closed = True
         self._pool.shutdown(wait=False)
+        self._drive()
 
 
 class PoolHandle(Dispatcher):
     """Per-relation view of a shared :class:`ThreadedDispatcher` pool.
 
-    ``run_all`` delegates to the shared pool (global worker bound);
-    ``close()`` detaches only this handle — subsequent dispatches through
-    it run serial while the pool keeps serving its other handles.
+    ``run_all`` submits through the pool's weighted fair queue (global
+    worker bound, deficit-round-robin admission at this handle's
+    ``weight``); ``close()`` detaches only this handle — subsequent
+    dispatches through it run serial while the pool keeps serving its
+    other handles.
     """
 
-    def __init__(self, pool: ThreadedDispatcher):
+    def __init__(self, pool: ThreadedDispatcher, weight: float = 1.0):
+        if weight <= 0:
+            raise ValueError(f"PoolHandle weight must be > 0, got {weight}")
         self._shared_pool = pool
+        self.weight = float(weight)
         self._detached = False
 
     def run_all(self, thunks: Sequence[Callable[[], Any]]) -> List[Any]:
-        if self._detached:
+        pool = self._shared_pool
+        if self._detached or pool._closed or len(thunks) <= 1:
             return [t() for t in thunks]
-        return self._shared_pool.run_all(thunks)
+        futures = pool.enqueue(self, list(thunks))
+        return [f.result() for f in futures]
 
     def close(self) -> None:
         self._detached = True
@@ -213,13 +357,18 @@ class DispatchStats:
     """
     dispatches: int = 0             # shard dispatches executed
     steps: int = 0                  # cloud steps (DispatchSets) executed
+    fused_steps: int = 0            # steps executed inside a fused wave
     dispatch_s: float = 0.0         # cumulative cloud-step wall-time
     transfer_bytes: int = 0         # staged bytes (see above)
 
     def record(self, n_dispatches: int, wall_s: float = 0.0,
-               transfer_bytes: int = 0) -> None:
+               transfer_bytes: int = 0, fused: bool = False) -> None:
         self.dispatches += n_dispatches
         self.steps += 1
+        if fused:
+            # the step ran inside a cross-plane fused_execute wave;
+            # wall_s then covers the whole wave, not this step alone.
+            self.fused_steps += 1
         self.dispatch_s += wall_s
         self.transfer_bytes += transfer_bytes
 
@@ -356,6 +505,73 @@ class ShardedRelation:
 
 
 RelationLike = Union[SecretSharedDB, ShardedRelation]
+
+
+def _fusion_pool(plane: "ShardedRelation") -> Optional[ThreadedDispatcher]:
+    """The shared thread pool a plane's cloud steps can fuse into, if any.
+
+    Planes whose dispatchers resolve to the SAME live pool form one fusion
+    domain; serial, detached, closed, and device-resident dispatchers fuse
+    with nobody (their ``run_set`` may carry placement invariants — e.g.
+    the mesh transfer guard — that a pooled wave must not bypass).
+    """
+    disp = plane.dispatcher
+    if isinstance(disp, PoolHandle):
+        if disp._detached or disp._shared_pool._closed:
+            return None
+        return disp._shared_pool
+    if isinstance(disp, ThreadedDispatcher) and not disp._closed:
+        return disp
+    return None
+
+
+def fused_execute(pairs: Sequence[Tuple["ShardedRelation", DispatchSet]]
+                  ) -> List[Any]:
+    """Execute one cloud step per (plane, set) pair, fusing shared pools.
+
+    Steps whose planes share a live :class:`ThreadedDispatcher` run as ONE
+    dispatch wave: every plane's shard thunks enqueue together — each under
+    its own :class:`PoolHandle`, so weighted fair quotas still arbitrate —
+    and each step's partials combine in shard order as they resolve.
+    Everything else (serial, mesh, detached) executes through its own
+    ``run_set``, unfused. Results come back in ``pairs`` order and are
+    bit-identical to executing each step alone: fusion changes only *when*
+    shard thunks are admitted, never their inputs or combine order.
+    """
+    results: List[Any] = [None] * len(pairs)
+    groups: Dict[ThreadedDispatcher, List[int]] = {}
+    for i, (plane, _) in enumerate(pairs):
+        pool = _fusion_pool(plane)
+        if pool is None:
+            plane_, ds = pairs[i]
+            results[i] = plane_.execute(ds)
+        else:
+            groups.setdefault(pool, []).append(i)
+    for pool, idxs in groups.items():
+        if len(idxs) == 1:
+            plane, ds = pairs[idxs[0]]
+            results[idxs[0]] = plane.execute(ds)
+            continue
+        t0 = time.perf_counter()
+        waves: List[Tuple[int, List[Future]]] = []
+        for i in idxs:
+            plane, ds = pairs[i]
+            disp = plane.dispatcher
+            handle = (disp if isinstance(disp, PoolHandle)
+                      else pool.handle())       # transient, weight 1
+            waves.append((i, pool.enqueue(handle,
+                                          [d.run for d in ds.dispatches])))
+        for i, futs in waves:
+            plane, ds = pairs[i]
+            parts = [f.result() for f in futs]
+            out = ds.combine(parts)
+            plane.stats.record(len(ds.dispatches),
+                               wall_s=time.perf_counter() - t0,
+                               transfer_bytes=sum(_tree_nbytes(p)
+                                                  for p in parts),
+                               fused=True)
+            results[i] = out
+    return results
 
 
 def as_dataplane(rel: RelationLike) -> ShardedRelation:

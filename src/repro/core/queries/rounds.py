@@ -273,30 +273,51 @@ def _match_stack(be, cols: Shares, pats: Shares) -> Shares:
     return Shares(bits, (cols.degree + pats.degree) * w)
 
 
-def _block_match(be, db: SecretSharedDB, p_all: Shares,
-                 columns: Sequence[int],
-                 entries: Sequence[Tuple[int, int, int]]) -> Shares:
-    """One padded block-matrix dispatch for tree rounds.
+def _block_sums(be, plane: "dataplane.ShardedRelation", p_all: Shares,
+                columns: Sequence[int],
+                entries: Sequence[Tuple[int, int, int]],
+                *, address_weights: bool = False) -> Shares:
+    """Shard-aligned block-matrix round for tree Q&A: -> Shares (c, K).
 
     entries: (job_index, start, end) block jobs, possibly from different
-    queries. Blocks are padded to the round's max height H; padded positions
-    are masked to share-of-0 so block sums are exact. Returns match-bit
-    Shares (c, K, H).
+    queries, in GLOBAL tuple coordinates. The ledger-visible block
+    partition never changes, but execution fans out per dataplane shard:
+    each shard gathers only the slice of every block that intersects its
+    [lo, hi) range (local indices into the shard view, padded positions
+    masked to a literal 0 so they add nothing), matches, and reduces over
+    the block axis — plain block-count sums, or line-number sums weighted
+    by ``global index + 1`` when ``address_weights`` is set. Per-shard
+    partials combine additively in F_p, so the result is bit-identical to
+    the unsharded gather-then-sum for every shard count.
     """
     starts = np.asarray([s for _, s, _ in entries])
     ends = np.asarray([e for _, _, e in entries])
     jidx = np.asarray([i for i, _, _ in entries])
-    h = int((ends - starts).max())
-    idx = starts[:, None] + np.arange(h)[None, :]              # (K, H)
-    mask = idx < ends[:, None]
-    idx = np.where(mask, idx, 0)
     cols_e = np.asarray([columns[i] for i in jidx])
-    rel = db.relation.values                                   # (c,n,m,W,A)
-    gathered = rel[:, jnp.asarray(idx), jnp.asarray(cols_e)[:, None]]
-    pats = Shares(p_all.values[:, jnp.asarray(jidx)], p_all.degree)
-    bits = _match_stack(be, Shares(gathered, db.relation.degree), pats)
-    masked = jnp.where(jnp.asarray(mask)[None], bits.values, 0)
-    return Shares(masked, bits.degree)
+    rel_degree = plane.db.relation.degree
+
+    def one(v, sh) :
+        lo_s = np.clip(starts, sh.lo, sh.hi) - sh.lo           # (K,) local
+        hi_s = np.clip(ends, sh.lo, sh.hi) - sh.lo
+        h = max(1, int((hi_s - lo_s).max()))
+        idx = lo_s[:, None] + np.arange(h)[None, :]            # (K, H_s)
+        mask = idx < hi_s[:, None]
+        idx = np.where(mask, idx, 0)
+        rel = v.relation.values                                # (c,n_s,m,W,A)
+        gathered = rel[:, jnp.asarray(idx), jnp.asarray(cols_e)[:, None]]
+        pats = Shares(p_all.values[:, jnp.asarray(jidx)], p_all.degree)
+        bits = _match_stack(be, Shares(gathered, rel_degree), pats)
+        masked = jnp.where(jnp.asarray(mask)[None], bits.values, 0)
+        if address_weights:
+            # line_number = Σ match_h · (global index + 1); masked
+            # positions hold a literal 0 so any weight times them is 0.
+            weights = sh.lo + idx + 1                          # (K, H_s)
+            masked = field.mul(masked,
+                               jnp.asarray(weights, field.DTYPE)[None])
+        return field.sum_(masked, axis=2)                      # (c, K)
+
+    w = plane.db.relation.values.shape[-2]
+    return Shares(plane.run_sum(one), (rel_degree + p_all.degree) * w)
 
 
 # ---------------------------------------------------------------------------
@@ -417,14 +438,18 @@ def tree_rounds(be, db: RelationLike, jobs: Sequence[TreeJob]
     no active blocks; its ledger only ever records its own rounds, blocks
     and bits — identical to running it alone.
 
-    Q&A rounds gather *blocks*, which are themselves a tuple-axis partition
-    refinement, so they run against the full relation regardless of the
-    dataplane's shard count (the fetch that follows rides the sharded
-    :func:`fetch_fusion`).
+    Q&A rounds gather *blocks* — a public tuple-axis partition refinement
+    that is part of the transcript and never moves with the shard count —
+    but their execution is shard-aligned: each dataplane shard gathers only
+    the block slices inside its own bounds and the per-shard partial
+    count / line-number sums combine additively (:func:`_block_sums`), so
+    no Q&A round ever gathers the full relation on one device. The fetch
+    that follows rides the sharded :func:`fetch_fusion`.
     """
     if not jobs:
         return []
-    db = dataplane.as_dataplane(db).db
+    plane = dataplane.as_dataplane(db)
+    db = plane.db
     codec = db.codec
     per_q = codec.word_length * codec.alphabet_size
     n = db.n_tuples
@@ -464,10 +489,9 @@ def tree_rounds(be, db: RelationLike, jobs: Sequence[TreeJob]
             entries += [(i, s, e) for (s, e) in subs]
             active[i] = []
 
-        # -- count Q&A round: ONE dispatch + ONE interpolation --------------
+        # -- count Q&A round: ONE dispatch set + ONE interpolation ----------
         if entries:
-            bits = _block_match(be, db, p_all, columns, entries)
-            counts = Shares(field.sum_(bits.values, axis=2), bits.degree)
+            counts = _block_sums(be, plane, p_all, columns, entries)
             vals = np.asarray(shamir.interpolate(counts))      # (K,)
             n_blocks: dict = {}
             for (i, s, e) in entries:
@@ -487,20 +511,11 @@ def tree_rounds(be, db: RelationLike, jobs: Sequence[TreeJob]
                 else:                          # Case 4: recurse
                     active[i].append((s, e))
 
-        # -- address-fetch round: ONE dispatch + ONE interpolation ----------
+        # -- address-fetch round: ONE dispatch set + ONE interpolation ------
         if pending_addr:
             addr_entries, pending_addr = pending_addr, []
-            bits = _block_match(be, db, p_all, columns, addr_entries)
-            h = bits.values.shape[2]
-            starts = np.asarray([s for _, s, _ in addr_entries])
-            # line_number = Σ match_h · (global index + 1); padded positions
-            # hold shares of 0 so their weight never contributes.
-            weights = (starts[:, None] + np.arange(h)[None, :] + 1)
-            line = Shares(
-                field.sum_(field.mul(bits.values,
-                                     jnp.asarray(weights,
-                                                 field.DTYPE)[None]),
-                           axis=2), bits.degree)               # (c, K)
+            line = _block_sums(be, plane, p_all, columns, addr_entries,
+                               address_weights=True)           # (c, K)
             vals = np.asarray(shamir.interpolate(line))
             for (i, s, e), v in zip(addr_entries, vals):
                 jobs[i].ledger.cloud((e - s) * per_q)
@@ -666,30 +681,15 @@ def range_rounds(be, db: RelationLike, jobs: Sequence[RangeJob]
 # §3.2.2 Phase 2 — fused oblivious fetch for the whole batch
 # ---------------------------------------------------------------------------
 
-def fetch_fusion(be, db: RelationLike, jobs: Sequence[FetchJob],
-                 extras: Sequence[FetchEntry] = ()
-                 ) -> Tuple[List[List[List[str]]], List[Shares]]:
-    """The cross-group fetch: ONE share-space matmul for everything.
+#: one relation's slice of a (possibly multi-relation) fused fetch round:
+#: ``(db_or_plane, one-hot jobs, extra share-form row blocks)``.
+FetchPart = Tuple[RelationLike, Sequence[FetchJob], Sequence["FetchEntry"]]
 
-    Each one-hot job's ℓ'×n matrix (``padded_rows`` ≥ ℓ hides the true
-    result size, §3.2.2 leakage discussion) is shared under that query's own
-    key; all job matrices — a zero-match, unpadded job contributes a 0-row
-    block — AND every extra row-block (e.g. a PK/FK join's transposed
-    match matrix) are stacked
-    row-wise so the cloud performs a single (ΣR × n) @ (n × mWA) fused
-    fetch. On a sharded dataplane the contraction axis n splits per shard —
-    one (ΣR × n_s) @ (n_s × mWA) dispatch each, partial products summing
-    additively in F_p. The user then interpolates all job tuples in one
-    pass and splits them back per query; extras come back *still in share
-    form* — their protocol (re-randomization, layer-2 hand-off, …)
-    continues outside.
-    """
-    if not jobs and not extras:
-        return [], []
-    plane = dataplane.as_dataplane(db)
+
+def _fetch_stack(be, plane, jobs: Sequence[FetchJob],
+                 extras: Sequence[FetchEntry]):
+    """Build one relation's stacked fetch matmul as a DispatchSet."""
     db = plane.db
-    codec = db.codec
-    n = db.n_tuples
     ellps = []
     mats = []
     for j in jobs:
@@ -700,11 +700,21 @@ def fetch_fusion(be, db: RelationLike, jobs: Sequence[FetchJob],
         mats.append(m_sh.values)
     stacked = jnp.concatenate(mats + [e.values for e in extras], axis=1)
     c, _, m, w, a = db.relation.values.shape
-    fetched_flat = plane.run_sum(                   # ONE dispatch per shard
+    ds = plane.dispatch_set(                        # ONE dispatch per shard
         lambda v, sh: be.ss_matmul(
             stacked[:, :, sh.lo:sh.hi],
-            v.relation.values.reshape(c, sh.n_tuples, m * w * a)))
+            v.relation.values.reshape(c, sh.n_tuples, m * w * a)),
+        reduce="sum")
+    return ds, ellps
 
+
+def _fetch_split(db, fetched_flat, ellps: List[int],
+                 jobs: Sequence[FetchJob], extras: Sequence[FetchEntry]
+                 ) -> Tuple[List[List[List[str]]], List[Shares]]:
+    """User step after the fused matmul: interpolate, decode, charge."""
+    codec = db.codec
+    n = db.n_tuples
+    c, _, m, w, a = db.relation.values.shape
     results: List[List[List[str]]] = []
     job_rows = sum(ellps)
     if jobs:
@@ -733,6 +743,58 @@ def fetch_fusion(be, db: RelationLike, jobs: Sequence[FetchJob],
             e.degree + db.relation.degree))
         off += r
     return results, extra_out
+
+
+def fetch_fusion_multi(be, parts: Sequence[FetchPart]
+                       ) -> List[Tuple[List[List[List[str]]], List[Shares]]]:
+    """Cross-RELATION fetch fusion: one dispatch wave for many fetches.
+
+    Each part is one relation's cross-group fetch (its own stacked one-hot
+    matmul — batches never mix across relations; every job matrix stays
+    shared under its own query key). The parts' per-shard matmul dispatches
+    execute as ONE fused wave when their dataplanes share a dispatch pool
+    (:func:`repro.core.dataplane.fused_execute`); transcripts, ledgers and
+    results are bit-identical to running each part's fetch alone, because
+    fusion only co-schedules the already-independent shard dispatches.
+    Returns one ``(rows_per_job, extra_shares)`` pair per part, in order.
+    """
+    live: List[Tuple[int, Any, Any, List[int]]] = []
+    out: List[Tuple[List[List[List[str]]], List[Shares]]] = \
+        [([], []) for _ in parts]
+    for i, (db, jobs, extras) in enumerate(parts):
+        if not jobs and not extras:
+            continue
+        plane = dataplane.as_dataplane(db)
+        ds, ellps = _fetch_stack(be, plane, jobs, extras)
+        live.append((i, plane, ds, ellps))
+    fetched = dataplane.fused_execute([(plane, ds)
+                                       for _, plane, ds, _ in live])
+    for (i, plane, _, ellps), flat in zip(live, fetched):
+        _, jobs, extras = parts[i]
+        out[i] = _fetch_split(plane.db, flat, ellps, jobs, extras)
+    return out
+
+
+def fetch_fusion(be, db: RelationLike, jobs: Sequence[FetchJob],
+                 extras: Sequence[FetchEntry] = ()
+                 ) -> Tuple[List[List[List[str]]], List[Shares]]:
+    """The cross-group fetch: ONE share-space matmul for everything.
+
+    Each one-hot job's ℓ'×n matrix (``padded_rows`` ≥ ℓ hides the true
+    result size, §3.2.2 leakage discussion) is shared under that query's own
+    key; all job matrices — a zero-match, unpadded job contributes a 0-row
+    block — AND every extra row-block (e.g. a PK/FK join's transposed
+    match matrix) are stacked
+    row-wise so the cloud performs a single (ΣR × n) @ (n × mWA) fused
+    fetch. On a sharded dataplane the contraction axis n splits per shard —
+    one (ΣR × n_s) @ (n_s × mWA) dispatch each, partial products summing
+    additively in F_p. The user then interpolates all job tuples in one
+    pass and splits them back per query; extras come back *still in share
+    form* — their protocol (re-randomization, layer-2 hand-off, …)
+    continues outside. (The single-relation view of
+    :func:`fetch_fusion_multi`.)
+    """
+    return fetch_fusion_multi(be, [(db, jobs, extras)])[0]
 
 
 def fetch_round(be, db: SecretSharedDB, jobs: Sequence[FetchJob]

@@ -132,6 +132,11 @@ def select_tree(key: jax.Array, db: SecretSharedDB, column: int, pattern: str,
     per-block counts, never the full n-vector; each Q&A round is one padded
     block-matrix device dispatch and one interpolation. ``known_count`` skips
     the Phase-0 count when the caller (e.g. the planner) already ran it.
+
+    On a sharded dataplane the Q&A block gathers execute per shard (each
+    gather stays inside one shard's tuple range) — but the block partition
+    itself is PUBLIC and fixed by (n, ℓ, branching) alone, so the priced
+    and measured ledger never moves with the shard count.
     """
     ledger = ledger if ledger is not None else CostLedger()
     be = resolve_backend(backend, impl)

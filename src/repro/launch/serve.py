@@ -16,7 +16,7 @@ request carries a ``wait()``-able completion event) into the target
 relation's FIFO batch group. ONE background scheduler thread
 (``start``/``stop``) closes each relation's group independently — by
 *fill* when that queue reaches its ``max_batch``, by *deadline* when its
-oldest request's ``max_wait_ms`` expires — and runs the group through
+oldest request's *steered* wait expires — and runs the group through
 ``QueryClient.run_batch(plans, relation=...)``, which groups compatible
 strategies and executes every protocol round once for the whole group —
 including range traffic (one fused SS-SUB ripple segment per
@@ -31,9 +31,32 @@ detachable handles, so the global fan-out stays bounded (results stay
 bit-identical — mod-p reduction is exact, and batches never mix
 relations).
 
+Three overload behaviours are self-tuning:
+
+  * **adaptive deadline steering** — each relation's effective wait is
+    driven by its own close history: a batch that closes *full* shrinks
+    the wait (``STEER_SHRINK``, traffic is hot — close sooner, keep
+    latency flat), a batch that closes by *deadline underfilled* grows it
+    back (``STEER_GROW``) up to the configured ``max_wait_ms`` cap. The
+    steered value plus its recent trajectory are exposed per relation in
+    ``snapshot()`` (``steered_wait_ms`` / ``wait_trajectory_ms``), so
+    monitoring code can watch a hot tenant's deadline dive while a cold
+    neighbour's stays parked at the cap.
+  * **weighted fair pool quotas** — ``attach(..., weight=w)`` gives the
+    relation's shard handle a deficit-round-robin weight on the shared
+    pool, so a flooding tenant is bounded to its share of the fan-out
+    instead of starving neighbours (see ``core.dataplane.PoolHandle``).
+  * **cross-relation fused closes** — when several relations' batches
+    close in the same scheduler scan they run as ONE
+    ``QueryClient.run_batch_multi`` wave: the per-relation fetch
+    ``ss_matmul`` dispatches co-schedule on the shared pool (batches
+    still never mix — each relation keeps its own key stream, rounds and
+    ledger, so rows and ledgers stay bit-identical to solo serving).
+
 Per-request latency (enqueue → result), queue-wait and batch-fill
-histograms, close-reason counters, batch/throughput counters and a
-per-family served breakdown are kept in ``ServeStats``, both in aggregate
+histograms, close-reason counters, batch/throughput counters, a
+per-family served breakdown, and per-relation ``queue_depth`` /
+``steered_wait_ms`` gauges are kept in ``ServeStats``, both in aggregate
 and per relation; ``snapshot()`` reads it all consistently under the stats
 lock. Per-request keys derive from the target relation's root key in pop
 order (streams are per relation, so tenants never perturb each other's
@@ -156,6 +179,26 @@ class QueryRequest:
 #: long-running server stays O(1) memory; counters remain exact).
 LATENCY_WINDOW = 4096
 
+#: adaptive deadline steering: multiplicative shrink on a *full* close
+#: (traffic hot — stop waiting for stragglers), gentler grow on a
+#: *deadline underfilled* close (traffic cooled — park longer, refill),
+#: AIMD-style so a hot tenant's deadline converges down fast and recovers
+#: smoothly. The steered wait never exceeds the configured ``max_wait_ms``
+#: (the cap) and never drops below ``MIN_STEER_WAIT_S``.
+STEER_SHRINK = 0.7
+STEER_GROW = 1.3
+MIN_STEER_WAIT_S = 1e-4
+
+#: steered-wait samples kept per relation (the snapshot trajectory).
+TRAJECTORY_WINDOW = 64
+
+#: floor on the scheduler's timed condition-variable park. Without it a
+#: sub-millisecond (or steered-to-tiny) deadline turns the scheduler loop
+#: into a busy-spin: wait(~0) returns immediately, the scan re-runs, the
+#: deadline is still a hair away, repeat at MHz. Flooring trades ≤ 1 ms of
+#: deadline overshoot for a quiescent loop.
+MIN_PARK_S = 1e-3
+
 
 def plan_family(plan: Plan) -> str:
     """Telemetry bucket for a logical plan (count/select/range_*/join/
@@ -187,6 +230,13 @@ class RelationStats:
     deltas, accumulated per served batch — so the measured cloud-step
     wall-time and staged bytes (zero after placement for a device-resident
     dispatcher) are visible to monitoring code, not only dispatch counts.
+
+    ``queue_depth`` and ``steered_wait_ms`` are *gauges* (last observed
+    value, refreshed each served batch, not accumulated):
+    ``queue_depth`` is how many requests were still parked right after the
+    batch closed, ``steered_wait_ms`` the relation's adaptively-steered
+    effective deadline; ``wait_trajectory_ms`` keeps the recent steering
+    history so a monitor can see the deadline dive under load and recover.
     """
     served: int = 0
     failed: int = 0
@@ -195,6 +245,10 @@ class RelationStats:
     dispatches: int = 0
     dispatch_s: float = 0.0
     transfer_bytes: int = 0
+    queue_depth: int = 0
+    steered_wait_ms: float = 0.0
+    wait_trajectory_ms: "Deque[float]" = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=TRAJECTORY_WINDOW))
     latencies_s: "Deque[float]" = dataclasses.field(default_factory=_window)
     queue_waits_s: "Deque[float]" = dataclasses.field(
         default_factory=_window)
@@ -209,6 +263,9 @@ class RelationStats:
                     dispatches=self.dispatches,
                     dispatch_s=self.dispatch_s,
                     transfer_bytes=self.transfer_bytes,
+                    queue_depth=self.queue_depth,
+                    steered_wait_ms=self.steered_wait_ms,
+                    wait_trajectory_ms=list(self.wait_trajectory_ms),
                     p50_latency_s=_quantile(list(self.latencies_s), 0.50),
                     p95_latency_s=_quantile(list(self.latencies_s), 0.95),
                     p50_queue_wait_s=_quantile(list(self.queue_waits_s),
@@ -313,7 +370,11 @@ class ServeStats:
                      relation: Optional[str] = None,
                      busy_s: float = 0.0, dispatches: int = 0,
                      dispatch_s: float = 0.0,
-                     transfer_bytes: int = 0) -> None:
+                     transfer_bytes: int = 0,
+                     queue_depth: Optional[int] = None,
+                     steered_wait_ms: Optional[float] = None) -> None:
+        """One closed batch. ``queue_depth``/``steered_wait_ms`` refresh
+        the relation's gauges (and the steering trajectory) when given."""
         with self._lock:
             for st in ([self] if relation is None
                        else [self, self._rel_locked(relation)]):
@@ -324,6 +385,13 @@ class ServeStats:
                 st.dispatches += dispatches
                 st.dispatch_s += dispatch_s
                 st.transfer_bytes += transfer_bytes
+            if relation is not None:
+                rs = self._rel_locked(relation)
+                if queue_depth is not None:
+                    rs.queue_depth = queue_depth
+                if steered_wait_ms is not None:
+                    rs.steered_wait_ms = steered_wait_ms
+                    rs.wait_trajectory_ms.append(steered_wait_ms)
 
     # -- locked readers -----------------------------------------------------
     def latency_quantile(self, q: float,
@@ -382,11 +450,40 @@ _EMPTY_REL = RelationStats()
 
 @dataclasses.dataclass
 class _Tenant:
-    """Scheduler-side state of one attached relation."""
+    """Scheduler-side state of one attached relation.
+
+    ``wait_s`` is the *effective* (adaptively steered) deadline the
+    scheduler parks on; ``base_wait_s`` the configured cap it may grow
+    back to. Both mutate only under the server's condition lock.
+    """
     name: str
     queue: "Deque[QueryRequest]"
     max_batch: int
     wait_s: float
+    base_wait_s: float = -1.0       # <0: default to the initial wait_s
+    weight: float = 1.0             # shared-pool DRR weight (attach())
+
+    def __post_init__(self) -> None:
+        if self.base_wait_s < 0:
+            self.base_wait_s = self.wait_s
+
+    def steer(self, reason: str, fill: int) -> float:
+        """Update the effective wait after a close; returns it in ms.
+
+        AIMD-flavoured: a *full* close means traffic filled ``max_batch``
+        before the deadline — waiting longer only adds latency, so shrink
+        multiplicatively. A *deadline* close below ``max_batch`` means the
+        wait was too short to fill a batch — grow back toward (never past)
+        the configured cap. Manual/drain pumps don't steer.
+        """
+        if self.base_wait_s > 0:
+            if reason == "full":
+                self.wait_s = max(MIN_STEER_WAIT_S,
+                                  self.wait_s * STEER_SHRINK)
+            elif reason == "deadline" and fill < self.max_batch:
+                self.wait_s = min(self.base_wait_s,
+                                  self.wait_s * STEER_GROW)
+        return self.wait_s * 1e3
 
 
 class QueryServer:
@@ -476,18 +573,21 @@ class QueryServer:
                 self.max_wait_ms / 1e3)
 
     # -- relation registry --------------------------------------------------
-    def _pool_handle(self, want_workers: int) -> Dispatcher:
+    def _pool_handle(self, want_workers: int,
+                     weight: float = 1.0) -> Dispatcher:
         """A per-relation handle on the ONE server-owned shard pool.
 
         The pool is created on first demand, sized by ``pool_workers``
         (falling back to the first requester's shard count), and shared by
         every relation attached afterwards — the global dispatch fan-out
         stays bounded no matter how many tenants are registered.
+        ``weight`` is the handle's deficit-round-robin share of that
+        bounded fan-out (see :class:`~repro.core.dataplane.PoolHandle`).
         """
         if self._owned_dispatcher is None:
             self._owned_dispatcher = ThreadedDispatcher(
                 max_workers=self._pool_workers or max(1, want_workers))
-        return self._owned_dispatcher.handle()
+        return self._owned_dispatcher.handle(weight=weight)
 
     def attach(self, name: str,
                relation: Union[SecretSharedDB, ShardedRelation,
@@ -496,19 +596,26 @@ class QueryServer:
                dispatcher: Optional[Dispatcher] = None,
                key=None,
                max_batch: Optional[int] = None,
-               max_wait_ms: Optional[float] = None) -> "QueryServer":
+               max_wait_ms: Optional[float] = None,
+               weight: float = 1.0) -> "QueryServer":
         """Register (or re-shard) relation ``name`` on this server.
 
         ``relation`` may be omitted to re-configure an already-attached
         name. ``key`` seeds the relation's private query-key stream (so a
         tenant replays a solo server bit-for-bit); ``max_batch`` /
         ``max_wait_ms`` override the server defaults for this relation's
-        batch group only. With ``shards > 1`` and no explicit
-        ``dispatcher``, the relation's shard dispatches join the shared
-        server pool through their own detachable handle.
+        batch group only (``max_wait_ms`` also resets the steering cap).
+        With ``shards > 1`` and no explicit ``dispatcher``, the relation's
+        shard dispatches join the shared server pool through their own
+        detachable handle, weighted ``weight`` in the pool's
+        deficit-round-robin (a tenant with weight 2 gets twice the shard
+        slots of a weight-1 neighbour under contention; fairness is pure
+        scheduling policy, transcripts stay bit-identical).
         """
+        if weight <= 0:
+            raise ValueError(f"weight must be > 0, got {weight}")
         if shards > 1 and dispatcher is None:
-            dispatcher = self._pool_handle(shards)
+            dispatcher = self._pool_handle(shards, weight)
         self.client.attach(relation, name=name, shards=shards,
                            dispatcher=dispatcher, key=key)
         with self._cond:
@@ -520,7 +627,8 @@ class QueryServer:
             if max_batch is not None:
                 t.max_batch = max(1, max_batch)
             if max_wait_ms is not None:
-                t.wait_s = max(0.0, max_wait_ms) / 1e3
+                t.wait_s = t.base_wait_s = max(0.0, max_wait_ms) / 1e3
+            t.weight = float(weight)
             self._cond.notify_all()
         return self
 
@@ -632,29 +740,83 @@ class QueryServer:
                 if tenant is None:
                     return []
                 self._rr_last = tenant.name
-                batch: List[QueryRequest] = []
-                while tenant.queue and len(batch) < tenant.max_batch:
-                    batch.append(tenant.queue.popleft())
+                batch = self._close_locked(tenant)
             if not batch:
                 return []
-            t0 = time.time()
+            self._run_closed([(tenant, reason, batch)])
+            return batch
+
+    @staticmethod
+    def _close_locked(tenant: _Tenant) -> List[QueryRequest]:
+        """Pop one micro-batch (≤ max_batch) off a tenant's queue.
+
+        Caller holds ``_cond`` — the pop and the close decision that
+        triggered it are one atomic scheduling step.
+        """
+        batch: List[QueryRequest] = []
+        while tenant.queue and len(batch) < tenant.max_batch:
+            batch.append(tenant.queue.popleft())
+        return batch
+
+    def _run_closed(self, closed: List[Tuple[_Tenant, str,
+                                             List[QueryRequest]]]) -> None:
+        """Execute already-closed batches (caller holds ``_pump_lock``).
+
+        One entry runs the classic ``run_batch`` path. Several entries —
+        the scheduler found several relations due in ONE scan — run as one
+        ``QueryClient.run_batch_multi`` wave: per-relation rounds stay
+        separate (keys, rounds, ledgers untouched, results bit-identical
+        to solo closes) but every batch's cloud-side fetch ``ss_matmul``
+        co-schedules on the shared pool as a single fused dispatch wave.
+        Fault isolation is layered: a failing fused wave falls back per
+        relation, a failing relation batch per request, so only the
+        offending request(s) carry ``error``.
+
+        After each batch the tenant's deadline is steered
+        (:meth:`_Tenant.steer`) and its ``queue_depth`` /
+        ``steered_wait_ms`` gauges are refreshed.
+        """
+        t0 = time.time()
+        for tenant, _reason, batch in closed:
             for r in batch:
                 r.queue_wait_s = t0 - (r.enqueued_at or t0)
                 self.stats.note_queue_wait(r.queue_wait_s, tenant.name)
-            plane = self.client.dataplane_of(tenant.name)
-            d0 = dataclasses.replace(plane.stats) if plane else None
+        planes = {t.name: self.client.dataplane_of(t.name)
+                  for t, _, _ in closed}
+        d0s = {name: dataclasses.replace(p.stats) if p else None
+               for name, p in planes.items()}
+        fused: Optional[List[List[QueryResult]]] = None
+        if len(closed) > 1:
             try:
-                outcomes = self.client.run_batch(
-                    [r.plan for r in batch], relation=tenant.name)
-            except Exception:  # noqa: BLE001 — isolate failing request(s)
-                outcomes = []
-                for r in batch:
-                    try:
-                        outcomes.append(self.client.run_batch(
-                            [r.plan], relation=tenant.name)[0])
-                    except Exception as e:  # noqa: BLE001
-                        outcomes.append(e)
+                fused = self.client.run_batch_multi(
+                    [(t.name, [r.plan for r in batch])
+                     for t, _, batch in closed])
+            except Exception:  # noqa: BLE001 — isolate failing relation(s)
+                fused = None
+        t_prev = t0
+        for i, (tenant, reason, batch) in enumerate(closed):
+            if fused is not None:
+                outcomes: List[Union[QueryResult, Exception]] = \
+                    list(fused[i])
+            else:
+                try:
+                    outcomes = list(self.client.run_batch(
+                        [r.plan for r in batch], relation=tenant.name))
+                except Exception:  # noqa: BLE001 — isolate request(s)
+                    outcomes = []
+                    for r in batch:
+                        try:
+                            outcomes.append(self.client.run_batch(
+                                [r.plan], relation=tenant.name)[0])
+                        except Exception as e:  # noqa: BLE001
+                            outcomes.append(e)
             t1 = time.time()
+            # busy accounting: a fused wave's wall is split across its
+            # relations (the aggregate stays the wall actually spent);
+            # sequential fallbacks charge their own span.
+            busy = ((t1 - t0) / len(closed) if fused is not None
+                    else t1 - t_prev)
+            t_prev = t1
             for r, res in zip(batch, outcomes):
                 r.latency_s = t1 - (r.enqueued_at or t0)
                 if isinstance(res, Exception):
@@ -665,14 +827,18 @@ class QueryServer:
                     self.stats.note_result(r.latency_s,
                                            plan_family(r.plan), tenant.name)
                 r._done.set()
+            plane, d0 = planes[tenant.name], d0s[tenant.name]
             d = plane.stats if plane else None
+            with self._cond:
+                depth = len(tenant.queue)
+                steered = tenant.steer(reason, len(batch))
             self.stats.record_batch(
-                len(batch), reason, tenant.name, busy_s=t1 - t0,
+                len(batch), reason, tenant.name, busy_s=busy,
                 dispatches=(d.dispatches - d0.dispatches) if d else 0,
                 dispatch_s=(d.dispatch_s - d0.dispatch_s) if d else 0.0,
                 transfer_bytes=(d.transfer_bytes - d0.transfer_bytes)
-                if d else 0)
-            return batch
+                if d else 0,
+                queue_depth=depth, steered_wait_ms=steered)
 
     # -- async driver -------------------------------------------------------
     def start(self) -> "QueryServer":
@@ -749,9 +915,32 @@ class QueryServer:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    def _pump_due(self, todos: List[Tuple[str, str]]) -> None:
+        """Close and run every due ``(relation, reason)`` from one scan.
+
+        A single due relation takes the classic pump path; several close
+        together and run as one fused dispatch wave.
+        """
+        if len(todos) == 1:
+            self.pump(todos[0][1], relation=todos[0][0])
+            return
+        with self._pump_lock:
+            closed: List[Tuple[_Tenant, str, List[QueryRequest]]] = []
+            with self._cond:
+                for name, reason in todos:
+                    t = self._tenants.get(name)
+                    if t is None:        # racing live detach/re-attach
+                        continue
+                    batch = self._close_locked(t)
+                    if batch:
+                        self._rr_last = t.name
+                        closed.append((t, reason, batch))
+            if closed:
+                self._run_closed(closed)
+
     def _scheduler_loop(self) -> None:
         while True:
-            todo: Optional[Tuple[str, str]] = None
+            todos: List[Tuple[str, str]] = []
             with self._cond:
                 while not self._stopping and not any(
                         t.queue for t in self._tenants.values()):
@@ -760,12 +949,15 @@ class QueryServer:
                     break
                 # per-relation close decisions: a batch group closes by
                 # *fill* when its queue reaches the relation's max_batch,
-                # by *deadline* when its OLDEST submission's wait expires
-                # — latency is bounded per relation by max_wait_ms, fusion
-                # by max_batch; relations never delay one another. The
-                # scan ROTATES past the last-pumped tenant (same cursor as
-                # the sync pump) so a tenant kept permanently full by hot
-                # traffic cannot starve a neighbour's expired deadline.
+                # by *deadline* when its OLDEST submission's (steered)
+                # wait expires — latency is bounded per relation by
+                # max_wait_ms, fusion by max_batch; relations never delay
+                # one another. The scan ROTATES past the last-pumped
+                # tenant (same cursor as the sync pump) so a tenant kept
+                # permanently full by hot traffic cannot starve a
+                # neighbour's expired deadline. EVERY relation due in the
+                # same scan closes together — the batches then run as one
+                # fused dispatch wave (see _run_closed).
                 now = time.time()
                 earliest: Optional[float] = None
                 for name in self._rotation():
@@ -773,18 +965,20 @@ class QueryServer:
                     if not t.queue:
                         continue
                     if len(t.queue) >= t.max_batch:
-                        todo = (t.name, "full")
-                        break
+                        todos.append((t.name, "full"))
+                        continue
                     deadline = t.queue[0].enqueued_at + t.wait_s
                     if deadline <= now:
-                        todo = (t.name, "deadline")
-                        break
+                        todos.append((t.name, "deadline"))
+                        continue
                     earliest = (deadline if earliest is None
                                 else min(earliest, deadline))
-                if todo is None:
-                    self._cond.wait(max(0.0, earliest - now))
+                if not todos:
+                    # floored park: a sub-ms (or steered-to-tiny) deadline
+                    # must not degrade the loop into a busy-spin.
+                    self._cond.wait(max(MIN_PARK_S, earliest - now))
                     continue
-            self.pump(todo[1], relation=todo[0])
+            self._pump_due(todos)
         # drain-before-exit: close a final batch per relation so stop()
         # never drops parked submissions on the floor (drain=False skips
         # this — stop() then fails them loudly instead).

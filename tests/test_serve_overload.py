@@ -1,0 +1,226 @@
+"""Self-tuning overload behaviour of the QueryServer.
+
+Adaptive deadline steering (full closes shrink a relation's effective
+wait, deadline-underfilled closes grow it back to the configured cap),
+the per-relation ``queue_depth`` / ``steered_wait_ms`` gauges and the
+steering trajectory in ``ServeStats`` snapshots, the floored scheduler
+park (no busy-spin on sub-millisecond deadlines), weight plumbing into
+the shared pool, and ``ServeStats`` consistency under attach churn.
+"""
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.api import Count, DEFAULT_RELATION, Eq
+from repro.core import Codec, outsource
+from repro.launch import serve as serve_mod
+from repro.launch.serve import (MIN_PARK_S, MIN_STEER_WAIT_S, QueryRequest,
+                                QueryServer, STEER_GROW, STEER_SHRINK)
+
+CODEC = Codec(word_length=8)
+COLUMNS = ["EmployeeId", "FirstName", "LastName", "Salary", "Department"]
+EMPLOYEE = [
+    ["E101", "Adam", "Smith", "1000", "Sale"],
+    ["E102", "John", "Taylor", "2000", "Design"],
+    ["E103", "Eve", "Smith", "500", "Sale"],
+    ["E104", "John", "Williams", "5000", "Sale"],
+]
+PLAN = Count(Eq("FirstName", "John"))
+
+
+@pytest.fixture(scope="module")
+def employee_db():
+    return outsource(jax.random.PRNGKey(7), EMPLOYEE, column_names=COLUMNS,
+                     codec=CODEC, n_shares=20, degree=1,
+                     numeric_columns={3: 14})
+
+
+def test_full_closes_shrink_wait_monotonically(employee_db):
+    """Every full close multiplies the effective wait by STEER_SHRINK;
+    the snapshot trajectory is strictly decreasing."""
+    srv = QueryServer(employee_db, key=21, max_batch=2, max_wait_ms=40)
+    t = srv._tenant(None)
+    base = t.wait_s
+    for _ in range(4):
+        srv.submit(PLAN)
+        srv.submit(PLAN)
+        srv.pump("full")
+    assert t.base_wait_s == base
+    assert t.wait_s == pytest.approx(base * STEER_SHRINK ** 4)
+    rel = srv.stats.snapshot()["relations"][DEFAULT_RELATION]
+    traj = rel["wait_trajectory_ms"]
+    assert len(traj) == 4
+    assert all(b < a for a, b in zip(traj, traj[1:]))
+    assert rel["steered_wait_ms"] == pytest.approx(traj[-1])
+
+
+def test_deadline_underfilled_grows_back_to_cap(employee_db):
+    """Deadline closes below max_batch grow the wait by STEER_GROW, but
+    never past the configured cap."""
+    srv = QueryServer(employee_db, key=22, max_batch=4, max_wait_ms=30)
+    t = srv._tenant(None)
+    base = t.wait_s
+    for _ in range(6):           # dive first
+        srv.submit(PLAN)
+        srv.submit(PLAN)
+        srv.submit(PLAN)
+        srv.submit(PLAN)
+        srv.pump("full")
+    dived = t.wait_s
+    assert dived < base
+    for _ in range(40):          # recover: underfilled deadline closes
+        srv.submit(PLAN)
+        srv.pump("deadline")
+    assert t.wait_s == base      # capped exactly at the configured wait
+    rel = srv.stats.snapshot()["relations"][DEFAULT_RELATION]
+    assert rel["steered_wait_ms"] == pytest.approx(base * 1e3)
+
+
+def test_steering_floor_and_inert_reasons(employee_db):
+    """The steered wait never drops below MIN_STEER_WAIT_S, and
+    manual/drain pumps do not steer."""
+    srv = QueryServer(employee_db, key=23, max_batch=1, max_wait_ms=10)
+    t = srv._tenant(None)
+    for _ in range(80):
+        srv.submit(PLAN)
+        srv.pump("full")
+    assert t.wait_s == pytest.approx(MIN_STEER_WAIT_S)
+    w = t.wait_s
+    srv.submit(PLAN)
+    srv.pump()                   # "manual"
+    srv.submit(PLAN)
+    srv.pump("drain")
+    assert t.wait_s == w
+    # a full deadline close (fill == max_batch) does not grow either
+    srv.submit(PLAN)
+    srv.pump("deadline")
+    assert t.wait_s == w
+
+
+def test_zero_wait_relation_never_steers(employee_db):
+    """max_wait_ms=0 pins the wait at zero — there is no cap to steer
+    inside, and the grow rule must not resurrect a nonzero deadline."""
+    srv = QueryServer(employee_db, key=24, max_batch=2, max_wait_ms=0)
+    t = srv._tenant(None)
+    for reason in ("full", "deadline", "full"):
+        srv.submit(PLAN)
+        srv.submit(PLAN)
+        srv.pump(reason)
+    assert t.wait_s == 0.0
+
+
+def test_queue_depth_gauge(employee_db):
+    """queue_depth reports what was still parked right after the close."""
+    srv = QueryServer(employee_db, key=25, max_batch=2, max_wait_ms=1000)
+    for _ in range(5):
+        srv.submit(PLAN)
+    srv.pump()
+    rel = srv.stats.snapshot()["relations"][DEFAULT_RELATION]
+    assert rel["queue_depth"] == 3
+    while srv.pending():
+        srv.pump()
+    rel = srv.stats.snapshot()["relations"][DEFAULT_RELATION]
+    assert rel["queue_depth"] == 0
+
+
+def test_attach_weight_plumbs_to_pool_handle(employee_db):
+    srv = QueryServer(pool_workers=2)
+    srv.attach("emp", employee_db, shards=2, key=1, weight=2.5)
+    plane = srv.dataplane_of("emp")
+    assert plane.dispatcher.weight == 2.5
+    assert plane.dispatcher._shared_pool is srv._owned_dispatcher
+    with pytest.raises(ValueError):
+        srv.attach("bad", employee_db, shards=2, key=2, weight=0.0)
+    srv.close()
+
+
+def test_scheduler_park_is_floored(employee_db):
+    """Sub-millisecond deadlines must park the scheduler at least
+    MIN_PARK_S per wait — never a ~0s spin-wait."""
+    srv = QueryServer(employee_db, key=26, max_batch=64, max_wait_ms=0.5)
+    recorded = []
+    real_wait = srv._cond.wait
+
+    def spy(timeout=None):
+        if timeout is not None:
+            recorded.append(timeout)
+        return real_wait(timeout)
+
+    srv._cond.wait = spy
+    with srv:
+        reqs = []
+        for _ in range(40):
+            reqs.append(srv.submit(QueryRequest(PLAN)))
+            time.sleep(0.002)
+        for r in reqs:
+            r.wait(timeout=30)
+    assert recorded, "scheduler never took a timed park"
+    assert min(recorded) >= MIN_PARK_S - 1e-9
+    assert all(r.result.count == 2 for r in reqs)
+
+
+def test_first_deadline_close_uses_configured_wait(employee_db):
+    """Steering only reacts to history: a fresh relation's first deadline
+    close parks the full configured max_wait_ms."""
+    with QueryServer(employee_db, key=27, max_batch=64,
+                     max_wait_ms=60) as srv:
+        t0 = time.time()
+        r = srv.submit(QueryRequest(PLAN))
+        r.wait(timeout=30)
+        waited = time.time() - t0
+    assert waited >= 0.055
+    rel = srv.stats.snapshot()["relations"][DEFAULT_RELATION]
+    assert rel["wait_trajectory_ms"][-1] == pytest.approx(60.0)
+
+
+def test_stats_consistent_under_attach_churn(employee_db):
+    """snapshot()/quantile reads race live attach() calls and a pumping
+    scheduler without torn state; a relation attached mid-soak serves and
+    exposes its own quantiles."""
+    srv = QueryServer(employee_db, key=28, max_batch=4, max_wait_ms=2)
+    errors = []
+    stop = threading.Event()
+
+    def churn():
+        try:
+            for i in range(12):
+                srv.attach(f"r{i}", employee_db, key=100 + i,
+                           max_batch=2, max_wait_ms=3)
+                time.sleep(0.005)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    def read():
+        try:
+            while not stop.is_set():
+                snap = srv.stats.snapshot()
+                assert snap["served"] >= 0
+                for rel in snap["relations"].values():
+                    assert rel["queue_depth"] >= 0
+                    assert isinstance(rel["wait_trajectory_ms"], list)
+                srv.stats.latency_quantile(0.95)
+                srv.stats.queue_wait_quantile(0.5, relation="r3")
+                srv.pending()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    with srv:
+        threads = [threading.Thread(target=churn),
+                   threading.Thread(target=read)]
+        for th in threads:
+            th.start()
+        reqs = [srv.submit(QueryRequest(PLAN)) for _ in range(30)]
+        threads[0].join()
+        # mid-soak attach serves its own traffic with its own quantiles
+        late = [srv.submit(QueryRequest(PLAN), relation="r11")
+                for _ in range(4)]
+        for r in reqs + late:
+            r.wait(timeout=30)
+        stop.set()
+        threads[1].join()
+    assert not errors, errors
+    assert srv.stats.queue_wait_quantile(0.95, relation="r11") >= 0.0
+    assert srv.stats.snapshot()["relations"]["r11"]["served"] == 4
+    assert all(r.result.count == 2 for r in late)
