@@ -22,7 +22,11 @@ adaptive deadline steering) with a bit-identical transcript;
 ``EmbedLookup`` = one fused ``ss_matmul`` per shard against the
 device-resident quantized table) and asserts the acceptance shape:
 >= 5x tokens/sec over the per-call baseline at 256 tokens, S dispatches
-per step, zero post-placement transfer, batched == sequential ledgers.
+per step, zero post-placement transfer, batched == sequential ledgers;
+``bench_pattern`` sweeps the LIKE/prefix/suffix/substring engine —
+counts and selects vs a cleartext oracle, ``explain()`` exact to the
+measured ledger, wildcard-free LIKE == Eq bit-for-bit, and a mixed
+pattern+equality batch equal to the sequential loop.
 
 Each table function returns rows of
   (name, n, us_per_call, comm_bits, rounds, cloud_bits, user_bits, claim)
@@ -46,9 +50,9 @@ from typing import List, Optional, Sequence
 
 import jax
 
-from repro.api import Aggregate, Between, Count, DBStats, Join, \
-    QueryClient, RangeCount, RangeSelect, Select, Eq, Padding, \
-    choose_select_strategy
+from repro.api import Aggregate, Between, Contains, Count, DBStats, Join, \
+    Like, Prefix, QueryClient, RangeCount, RangeSelect, Select, Suffix, \
+    Eq, Padding, choose_select_strategy
 from repro.core import outsource, Codec
 from repro.data import synthetic_relation
 
@@ -791,6 +795,84 @@ def bench_embedding(*, vocab: int = 2048, d_model: int = 64,
     return out
 
 
+def bench_pattern(*, n: int = 64, batch: int = 10) -> List[dict]:
+    """The pattern-engine acceptance sweep: LIKE / prefix / suffix /
+    substring predicates riding the fused round engine. Per predicate
+    kind it runs the count (plus one one-round select) against a
+    cleartext oracle and asserts the planner's ``explain()`` estimate
+    equals the measured ledger bit-for-bit (``explain_exact`` — the
+    pattern cost model shares its atoms with the round engine's
+    charger, so any drift is a bug, not noise); a wildcard-free LIKE
+    must price AND measure exactly as the Eq path (``eq_parity``); and
+    a mixed pattern+equality batch through ``run_batch`` must equal the
+    sequential loop per-query (``ledger_equal``) while measuring the
+    fusion speedup.
+    """
+    rows, db = _db(n, seed=15, skew=0.25)
+    names = [r[1] for r in rows]
+    out: List[dict] = []
+    counts = [
+        ("pattern_count_like_prefix", Like("FirstName", "Jo%"),
+         sum(w.startswith("Jo") for w in names)),
+        ("pattern_count_prefix", Prefix("FirstName", "N"),
+         sum(w.startswith("N") for w in names)),
+        ("pattern_count_suffix", Suffix("FirstName", "a"),
+         sum(w.endswith("a") for w in names)),
+        ("pattern_count_contains", Contains("FirstName", "an"),
+         sum("an" in w for w in names)),
+        ("pattern_count_like_wild", Like("FirstName", "_o%"),
+         sum(len(w) >= 2 and w[1] == "o" for w in names)),
+    ]
+    for name, pred, want in counts:
+        client = QueryClient(db, key=61)
+        plan = Count(pred)
+        est = client.explain(plan)
+        res, us = _timed(client.run, plan)
+        assert res.count == want, (name, res.count, want)
+        led = res.ledger
+        explain_exact = (est.bits == led.communication_bits
+                         and est.rounds == led.rounds)
+        assert explain_exact, (name, est, led)
+        out.append(dict(name=name, n=n, us_per_call=round(us),
+                        rounds=led.rounds,
+                        comm_bits=led.communication_bits,
+                        explain_exact=explain_exact))
+
+    client = QueryClient(db, key=62)
+    plan = Select(Contains("FirstName", "an"), strategy="one_round")
+    est = client.explain([plan])
+    res, us = _timed(client.run, plan)
+    want_rows = sorted(tuple(r) for r in rows if "an" in r[1])
+    assert sorted(tuple(r) for r in res.rows) == want_rows
+    led = res.ledger
+    explain_exact = (est.bits == led.communication_bits
+                     and est.rounds == led.rounds)
+    assert explain_exact, (est, led)
+    out.append(dict(name="pattern_select_one_round", n=n,
+                    us_per_call=round(us), rounds=led.rounds,
+                    comm_bits=led.communication_bits,
+                    explain_exact=explain_exact))
+
+    # wildcard-free LIKE lowers to the exact-match path: same count,
+    # same ledger, under the same key stream
+    like = QueryClient(db, key=63).run(Count(Like("FirstName", "John")))
+    eq = QueryClient(db, key=63).run(Count(Eq("FirstName", "John")))
+    eq_parity = (like.count == eq.count and like.ledger == eq.ledger)
+    assert eq_parity, "wildcard-free LIKE diverged from the Eq path"
+    out.append(dict(name="pattern_like_eq_parity", n=n,
+                    rounds=like.ledger.rounds,
+                    comm_bits=like.ledger.communication_bits,
+                    eq_parity=eq_parity))
+
+    preds = [Like("FirstName", "Jo%"), Suffix("FirstName", "a"),
+             Contains("FirstName", "an"), Eq("FirstName", "John")]
+    plans = [Count(preds[i % len(preds)]) if i % 2 == 0
+             else Select(preds[i % len(preds)], strategy="one_round")
+             for i in range(batch)]
+    _sweep_plans("pattern_mixed_batch", db, plans, n=n, b=batch, out=out)
+    return out
+
+
 ALL = [bench_count, bench_select_single, bench_select_one_round,
        bench_select_tree, bench_planner_auto, bench_join, bench_range,
        bench_scaling_verification]
@@ -829,6 +911,8 @@ def collect(*, smoke: bool = False) -> dict:
     serving_storm = bench_serving_storm(n=32 if smoke else 48,
                                         duration_s=1.5 if smoke else 2.5)
     aggregation = bench_aggregation(n=32 if smoke else 64)
+    pattern = bench_pattern(n=32 if smoke else 64,
+                            batch=6 if smoke else 10)
     mesh = bench_mesh_dispatcher(n=32 if smoke else 64,
                                  shards=2 if smoke else 4)
     # acceptance needs batch×seq >= 256 tokens even in smoke; smoke shrinks
@@ -840,7 +924,7 @@ def collect(*, smoke: bool = False) -> dict:
     return dict(schema="bench_queries/v1", smoke=smoke,
                 results=results, batched=batched, sharded=sharded,
                 serving=serving, serving_storm=serving_storm,
-                aggregation=aggregation, mesh=mesh,
+                aggregation=aggregation, pattern=pattern, mesh=mesh,
                 embedding=embedding)
 
 
@@ -885,6 +969,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
               f"comm={a['comm_bits']}b, verify +{a['verify_rounds']}r "
               f"+{a['verify_comm_bits']}b "
               f"(ledger_equal={a['ledger_equal']})", file=sys.stderr)
+    for p in doc["pattern"]:
+        extra = (f"speedup={p['speedup']}x "
+                 f"(ledger_equal={p['ledger_equal']})" if "speedup" in p
+                 else f"explain_exact={p.get('explain_exact', '-')} "
+                      f"eq_parity={p.get('eq_parity', '-')}")
+        print(f"  {p['name']} n={p['n']}: rounds={p['rounds']} "
+              f"comm={p['comm_bits']}b {extra}", file=sys.stderr)
     for m in doc["mesh"]:
         print(f"  {m['name']} S={m['shards']} devices={m['devices']} "
               f"n={m['n']}: {m['wall_us']}us (serial {m['serial_us']}us), "

@@ -103,6 +103,12 @@ def index_aggregation(doc: dict) -> Dict[Tuple[str, int, int], dict]:
             for r in doc.get("aggregation", [])}
 
 
+def index_pattern(doc: dict) -> Dict[Tuple[str, int], dict]:
+    # "pattern" (LIKE/prefix/suffix/substring engine) post-dates
+    # "embedding".
+    return {(r["name"], r["n"]): r for r in doc.get("pattern", [])}
+
+
 def index_mesh(doc: dict) -> Dict[Tuple[str, int, int], dict]:
     # "mesh" (device-resident dispatcher) post-dates "aggregation".
     return {(r["name"], r["shards"], r["n"]): r
@@ -160,6 +166,8 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
               index_serving_storm(old), GATED_KEYS)
     diff_rows("aggregation", index_aggregation(new), index_aggregation(old),
               GATED_KEYS + ("verify_rounds", "verify_comm_bits"))
+    diff_rows("pattern", index_pattern(new), index_pattern(old),
+              GATED_KEYS)
     diff_rows("mesh", index_mesh(new), index_mesh(old), GATED_KEYS)
     diff_rows("embedding", index_embedding(new), index_embedding(old),
               GATED_KEYS + ("verify_rounds", "verify_comm_bits",
@@ -230,6 +238,20 @@ def compare(new: dict, old: dict, *, allow_missing: bool = False
                 f"aggregation {'/'.join(str(k) for k in key)}: "
                 f"batch != sequential ledger (aggregate fusion broke "
                 f"cost identity)")
+    for key, row in index_pattern(new).items():
+        tag = f"pattern {'/'.join(str(k) for k in key)}"
+        if not row.get("ledger_equal", True):
+            regressions.append(
+                f"{tag}: batch != sequential ledger (pattern fusion "
+                f"broke cost identity)")
+        if not row.get("explain_exact", True):
+            regressions.append(
+                f"{tag}: planner estimate != measured ledger (pattern "
+                f"cost model drifted from the round engine)")
+        if not row.get("eq_parity", True):
+            regressions.append(
+                f"{tag}: wildcard-free LIKE no longer lowers to the Eq "
+                f"path bit-for-bit")
     for key, row in index_mesh(new).items():
         if not row.get("ledger_equal", False):
             regressions.append(
@@ -280,6 +302,7 @@ def history_entry(doc: dict, label: str) -> dict:
                                                   "hot_steered_wait_ms",
                                                   "cold_steered_wait_ms")),
                 aggregation=costs(index_aggregation(doc)),
+                pattern=costs(index_pattern(doc)),
                 mesh=costs(index_mesh(doc),
                            GATED_KEYS + MESH_PREDICTED_KEYS
                            + ("wall_us", "devices")),
@@ -310,7 +333,7 @@ def validate_history(history: dict) -> None:
         if "label" not in run:
             raise ValueError("history run without a label")
         for section in ("table", "batched", "sharded", "serving",
-                        "serving_storm", "aggregation", "mesh",
+                        "serving_storm", "aggregation", "pattern", "mesh",
                         "embedding"):
             costs_by_cfg = run.get(section)
             if not isinstance(costs_by_cfg, dict):
@@ -388,6 +411,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
               f"{len(index_serving(new))} serving rows, "
               f"{len(index_serving_storm(new))} serving_storm rows, "
               f"{len(index_aggregation(new))} aggregation rows, "
+              f"{len(index_pattern(new))} pattern rows, "
               f"{len(index_mesh(new))} mesh rows, "
               f"{len(index_embedding(new))} embedding rows checked)")
     return 0

@@ -25,7 +25,7 @@ bench-smoke lane runs this right after chaining the history.
 Usage::
 
   PYTHONPATH=src python benchmarks/plot_history.py BENCH_history.json
-      [--section table|batched|sharded|serving|aggregation|mesh|embedding]
+      [--section table|batched|sharded|serving|aggregation|pattern|mesh|embedding]
                                            # default: all sections
       [--metric rounds|comm_bits]          # default: both gated metrics
       [--format table|tsv]                 # tsv for spreadsheet import
@@ -42,7 +42,7 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 import compare_bench  # noqa: E402  (sibling module, shares the schema)
 
 SECTIONS = ("table", "batched", "sharded", "serving", "serving_storm",
-            "aggregation", "mesh", "embedding")
+            "aggregation", "pattern", "mesh", "embedding")
 
 #: per-run keys that are metadata, not cost sections.
 _META_KEYS = ("label", "smoke")

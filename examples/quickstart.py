@@ -13,7 +13,8 @@ root key; the cost-based planner picks the paper-optimal selection strategy.
 import jax
 import numpy as np
 
-from repro.api import Aggregate, Eq, Padding, QueryClient, Select
+from repro.api import Aggregate, Count, Eq, Like, Padding, QueryClient, \
+    Select
 from repro.core import outsource, Codec
 
 EMPLOYEE = [
@@ -70,6 +71,18 @@ def main():
                         padding=Padding.to_rows(4))
     print(f"  one_round  -> {len(res.rows)} real rows behind a 4-row "
           f"padded fetch\n")
+
+    print("== PATTERN (LIKE): wildcard predicates on shares ==")
+    # LIKE lowers to the accumulating-automata pattern engine: a prefix
+    # pattern chains only its k leading positions (cheaper than exact
+    # match), a substring slides the tile over every window. The clouds
+    # never see the pattern — it ships as secret-shared one-hot tiles.
+    res = client.run(Count(Like("FirstName", "Jo%")))
+    print(f"  COUNT(FirstName LIKE 'Jo%')        -> {res.count}")
+    res = client.run(Select(Like("LastName", "%ith%")))
+    print(f"  SELECT WHERE LastName LIKE '%ith%' -> "
+          f"{[r[1] + ' ' + r[2] for r in res.rows]}  "
+          f"[rounds={res.ledger.rounds}]\n")
 
     print("== RANGE (§3.4): Salary in [1000, 2000] ==")
     # 14-bit SS-SUB grows the polynomial degree past our 20 clouds ->

@@ -18,38 +18,47 @@ deprecated wrappers; new code should go through this package.
 """
 from ..core.dataplane import (Dispatcher, PoolHandle, ShardedRelation,
                               ThreadedDispatcher)
+from ..core.encoding import PatternSpec, parse_like
 from ..core.mesh_dispatch import MeshDispatcher
 from ..core.queries import VerificationError
 from .backends import (Backend, available_backends, batched_match_matrix,
                        batched_matcher, get_backend, register_backend,
-                       ripple_segmenter, ripple_stepper)
+                       ripple_segmenter, ripple_stepper, slide_matcher)
 from .client import DEFAULT_RELATION, AttachedRelation, QueryClient
 from .executor import MapReduceDispatcher, MapReduceExecutor
 from .planner import (DEFAULT_ELL, BatchExplanation, CostEstimate, DBStats,
                       GroupEstimate, PlanNotSupported, candidate_estimates,
-                      choose_select_strategy, estimate_aggregate_cost,
-                      estimate_batch_group_cost, estimate_count_cost,
-                      estimate_embed_cost, estimate_equijoin_cost,
-                      estimate_pkfk_cost, estimate_range_cost,
-                      estimate_select_cost, explain_batch_groups)
-from .plans import (AUTO, Aggregate, Between, ColumnRef, Count, EmbedLookup,
-                    Eq, Join, Padding, Plan, QueryResult, RangeCount,
-                    RangeSelect, Select, resolve_column)
+                      candidate_pattern_estimates, choose_match_method,
+                      choose_pattern_strategy, choose_select_strategy,
+                      estimate_aggregate_cost, estimate_batch_group_cost,
+                      estimate_count_cost, estimate_embed_cost,
+                      estimate_equijoin_cost, estimate_match_method_launches,
+                      estimate_pattern_cost, estimate_pkfk_cost,
+                      estimate_range_cost, estimate_select_cost,
+                      explain_batch_groups)
+from .plans import (AUTO, Aggregate, Between, ColumnRef, Contains, Count,
+                    EmbedLookup, Eq, Join, Like, Padding, Plan, Prefix,
+                    QueryResult, RangeCount, RangeSelect, Select, Suffix,
+                    resolve_column)
 
 __all__ = [
     "Backend", "available_backends", "batched_matcher",
     "batched_match_matrix", "get_backend", "register_backend",
-    "ripple_segmenter", "ripple_stepper", "QueryClient",
+    "ripple_segmenter", "ripple_stepper", "slide_matcher", "QueryClient",
     "DEFAULT_RELATION", "AttachedRelation",
     "MapReduceDispatcher", "MapReduceExecutor", "MeshDispatcher",
     "Dispatcher", "PoolHandle", "ShardedRelation", "ThreadedDispatcher",
     "DEFAULT_ELL", "BatchExplanation", "CostEstimate", "DBStats",
     "GroupEstimate", "PlanNotSupported", "candidate_estimates",
-    "choose_select_strategy", "estimate_aggregate_cost",
-    "estimate_batch_group_cost", "estimate_count_cost",
-    "estimate_embed_cost", "estimate_equijoin_cost", "estimate_pkfk_cost",
-    "estimate_range_cost", "estimate_select_cost", "explain_batch_groups",
-    "AUTO", "Aggregate", "Between", "ColumnRef", "Count", "EmbedLookup",
-    "Eq", "Join", "Padding", "Plan", "QueryResult", "RangeCount",
-    "RangeSelect", "Select", "VerificationError", "resolve_column",
+    "candidate_pattern_estimates", "choose_match_method",
+    "choose_pattern_strategy", "choose_select_strategy",
+    "estimate_aggregate_cost", "estimate_batch_group_cost",
+    "estimate_count_cost", "estimate_embed_cost", "estimate_equijoin_cost",
+    "estimate_match_method_launches", "estimate_pattern_cost",
+    "estimate_pkfk_cost", "estimate_range_cost", "estimate_select_cost",
+    "explain_batch_groups",
+    "AUTO", "Aggregate", "Between", "ColumnRef", "Contains", "Count",
+    "EmbedLookup", "Eq", "Join", "Like", "Padding", "PatternSpec", "Plan",
+    "Prefix", "QueryResult", "RangeCount", "RangeSelect", "Select",
+    "Suffix", "VerificationError", "parse_like", "resolve_column",
 ]

@@ -34,6 +34,14 @@ hotspots every query is built from:
                          (c, B, nx, ny)``: a join group's equal-size right
                          relations become ONE dispatch, mirroring what
                          ``aa_match_batch`` does for predicates.
+  * ``aa_slide_batch`` — the sliding-window automata step over a stack of
+                         B pattern tiles, ``(c, B, n, W, A) × (c, B, k, A)
+                         -> (c, B, n, M)`` with M = W−k+1 raw window-chain
+                         products: one dispatch per protocol round for a
+                         whole group of suffix/substring predicates. The
+                         suffix terminator factor and the CONTAINS window
+                         count are linear post-processing at the round
+                         engine, so one dispatch serves both kinds.
 
 All operate on *raw* uint32 share arrays (cloud axis first where batched);
 polynomial-degree bookkeeping stays at the query layer. Queries resolve a
@@ -69,6 +77,7 @@ class Backend:
     ripple_carry:   (c, S, n), (c, S, n), carry|None -> (rb, carry')
     ripple_segment: (c, S, n, k), (c, S, n, k), carry|None -> (rb, carry')
     match_matrix_batch: (c, B, nx, W, A), (c, B, ny, W, A) -> (c, B, nx, ny)
+    aa_slide_batch: (c, B, n, W, A), (c, B, k, A) -> (c, B, n, W-k+1)
     share_onehot:   tokens (M,) int32, a1 (M, V), n_shares= -> (c, M, V)
                     fused one-hot share generation (embedding fast path);
                     None falls back to the jnp reference program.
@@ -81,6 +90,7 @@ class Backend:
     ripple_carry: Optional[_RippleOp] = None
     ripple_segment: Optional[_RippleOp] = None
     match_matrix_batch: Optional[_Op] = None
+    aa_slide_batch: Optional[_Op] = None
     share_onehot: Optional[Callable[..., Array]] = None
 
 
@@ -140,6 +150,64 @@ def batched_match_matrix(backend: Backend) -> _Op:
     if backend.match_matrix_batch is not None:
         return backend.match_matrix_batch
     return jax.vmap(backend.match_matrix, in_axes=1, out_axes=1)
+
+
+def slide_matcher(backend: Backend) -> _Op:
+    """The backend's batched sliding-window matcher, or the jnp reference.
+
+    As with :func:`ripple_stepper`, the fallback is backend-agnostic: the
+    op is pure share arithmetic on raw arrays, so any backend without its
+    own fused kernel transparently gets the reference program.
+    """
+    if backend.aa_slide_batch is not None:
+        return backend.aa_slide_batch
+    return jnp_aa_slide
+
+
+def aggregate_match_matrix(backend: Backend) -> _Op:
+    """Batched all-pairs matcher in the AGGREGATE form (§3.1.2): ONE
+    flattened (W·A) ``ss_matmul`` gives P = #matching positions per pair;
+    the Lagrange equality indicator ``1[P==W]`` is a share-local
+    elementwise chain. Same secrets and same final degree as the chain
+    matcher — 1 dot-set instead of W — so the planner may pick either
+    per join group (``Join.match_method``).
+    """
+    def run(bx: Array, by: Array) -> Array:
+        from ..core import automata
+        c, b, nx, w, a = bx.shape
+        ny = by.shape[2]
+        xf = bx.reshape(c * b, nx, w * a)
+        yf = jnp.swapaxes(by.reshape(c * b, ny, w * a), -1, -2)
+        p_cnt = backend.ss_matmul(xf, yf).reshape(c, b, nx, ny)
+        return automata.equality_indicator(p_cnt, w)
+    return run
+
+
+def _make_jnp_slide():
+    """Reference batched sliding-window chain (gather windows, dot the
+    alphabet axis, chain the k positions — all under one jit; retraces
+    per distinct (k, shape) group, which the round engine groups by
+    anyway)."""
+    from ..core import field
+
+    @jax.jit
+    def aa_slide(cols: Array, pats: Array) -> Array:
+        # cols (c, B, n, W, A), pats (c, B, k, A) -> (c, B, n, M)
+        k = pats.shape[-2]
+        w = cols.shape[-2]
+        m = w - k + 1
+        idx = jnp.arange(m)[:, None] + jnp.arange(k)[None, :]
+        win = cols[..., idx, :]                      # (c, B, n, M, k, A)
+        v = field.dot(win, pats[:, :, None, None], axis=-1)
+        acc = v[..., 0]
+        for j in range(1, k):                        # k static: unrolled
+            acc = field.mul(acc, v[..., j])
+        return acc
+
+    return aa_slide
+
+
+jnp_aa_slide: _Op = _make_jnp_slide()
 
 
 def _make_jnp_ripple():
@@ -260,7 +328,8 @@ def _ensure_builtins() -> None:
         ripple_carry=jnp_ripple_carry,
         ripple_segment=jnp_ripple_segment,
         match_matrix_batch=jax.jit(jax.vmap(match_matrix, in_axes=1,
-                                            out_axes=1))))
+                                            out_axes=1)),
+        aa_slide_batch=jnp_aa_slide))
 
 
 def _try_register_pallas() -> bool:

@@ -39,6 +39,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import jax
 
+from ..core import encoding
 from ..core.costs import CostLedger
 from ..core.dataplane import Dispatcher, RelationLike, ShardedRelation
 from ..core.engine import SecretSharedDB
@@ -47,9 +48,10 @@ from ..core.queries import embed as embed_q
 from . import planner as _planner
 from .backends import BackendLike, get_backend
 from .executor import MapReduceExecutor
-from .plans import (AUTO, Aggregate, Between, ColumnRef, Count, EmbedLookup,
-                    Eq, Join, Padding, Plan, QueryResult, RangeCount,
-                    RangeSelect, Select, resolve_column)
+from .plans import (AUTO, Aggregate, Between, ColumnRef, Contains, Count,
+                    EmbedLookup, Eq, Join, Like, Padding, Plan, Prefix,
+                    QueryResult, RangeCount, RangeSelect, Select, Suffix,
+                    resolve_column)
 
 #: registry name a bare ``QueryClient(db, key)`` attaches its relation
 #: under; single-relation callers never need to spell it.
@@ -84,6 +86,50 @@ def _as_key(key) -> jax.Array:
     return jax.random.PRNGKey(key) if isinstance(key, int) else key
 
 
+#: surface shapes of the literal-tile predicates (for error display).
+_TILE_SOURCES = {Prefix: "{0}%", Suffix: "%{0}", Contains: "%{0}%"}
+
+
+def _lower_match(db: SecretSharedDB, where, context: str
+                 ) -> Tuple[int, str, Optional[encoding.PatternSpec]]:
+    """Lower a Count/Select predicate -> (column, body, spec).
+
+    ``Eq`` — and any wildcard-free ``Like``, provably — lower to the exact
+    path (``spec=None``); the other shapes build their
+    :class:`~repro.core.encoding.PatternSpec` and validate it against the
+    relation's codec here, at plan time, so malformed patterns (interior
+    ``%``, ``_`` under a shifted window, tiles longer than the word, empty
+    bodies, out-of-alphabet characters) surface as a typed
+    :class:`~.planner.PlanNotSupported` before any share moves. Unknown
+    predicate classes raise the same — never an ``AttributeError`` from
+    duck-typed field access.
+    """
+    if isinstance(where, Eq):
+        return resolve_column(db, where.column), where.pattern, None
+    if isinstance(where, Like):
+        try:
+            kind, body, wild = encoding.parse_like(where.pattern)
+            if kind == "exact":
+                return resolve_column(db, where.column), body, None
+            spec = encoding.PatternSpec(kind, body, wild, where.pattern)
+            encoding.encode_pattern_tile(db.codec, spec)
+        except (KeyError, ValueError) as e:
+            raise _planner.PlanNotSupported(
+                where, f"{context} ({e})") from None
+        return resolve_column(db, where.column), body, spec
+    if isinstance(where, (Prefix, Suffix, Contains)):
+        source = _TILE_SOURCES[type(where)].format(where.literal)
+        try:
+            spec = encoding.PatternSpec(type(where).__name__.lower(),
+                                        where.literal, (), source)
+            encoding.encode_pattern_tile(db.codec, spec)
+        except (KeyError, ValueError) as e:
+            raise _planner.PlanNotSupported(
+                where, f"{context} ({e})") from None
+        return resolve_column(db, where.column), where.literal, spec
+    raise _planner.PlanNotSupported(where, context)
+
+
 def _plan_signature(plan: Plan) -> tuple:
     """Structural cache key for one plan (Join rights key by identity —
     two different share sets are different plans even if equal-valued)."""
@@ -108,6 +154,8 @@ class _Slot:
     strategy: str = ""
     known_count: Optional[int] = None
     column: int = -1
+    pattern: str = ""
+    spec: Optional[encoding.PatternSpec] = None
     pred_column: Optional[int] = None
     fetch_key: Optional[jax.Array] = None
 
@@ -341,9 +389,19 @@ class QueryClient:
         """
         ent = self._entry(relation)
         if isinstance(plan, Select):
-            cands = _planner.candidate_estimates(
-                self.stats(ent.name), ell=plan.expected_matches,
-                padded_rows=plan.padding.rows)
+            spec = _lower_match(ent.db, plan.where, "Select predicate")[2]
+            if spec is not None and plan.strategy == "one_tuple":
+                raise _planner.PlanNotSupported(
+                    plan.where, "one_tuple select (pattern predicates "
+                    "run one_round or tree)")
+            if spec is not None:
+                cands = _planner.candidate_pattern_estimates(
+                    self.stats(ent.name), spec, ell=plan.expected_matches,
+                    padded_rows=plan.padding.rows)
+            else:
+                cands = _planner.candidate_estimates(
+                    self.stats(ent.name), ell=plan.expected_matches,
+                    padded_rows=plan.padding.rows)
             return sorted(cands,
                           key=lambda e: (e.score(self.round_cost_bits),
                                          e.rounds))
@@ -394,38 +452,54 @@ class QueryClient:
         sel_ells: Dict[str, List[Optional[int]]] = {"one_tuple": [],
                                                     "one_round": [],
                                                     "tree": []}
+        sel_specs: Dict[str, List[Optional[encoding.PatternSpec]]] = {
+            s: [] for s in sel_ells}
         sel_pad: Dict[str, Optional[int]] = {s: None for s in sel_ells}
         group_sizes: Dict[str, int] = {s: 0 for s in sel_ells}
         group_rounds: Dict[str, int] = {}
-        counts = 0
+        count_ests: List[_planner.CostEstimate] = []
         range_grps: Dict[Tuple[int, int], List[Tuple[bool, Optional[int],
                                                      Optional[int]]]] = {}
         joins: Dict[str, List[Plan]] = {"pkfk": [], "equi": []}
         agg_grps: Dict[tuple, List[_planner.CostEstimate]] = {}
         embed_ests: List[_planner.CostEstimate] = []
-        auto_plans: List[Select] = []
+        auto_plans: List[Tuple[Select, Optional[encoding.PatternSpec]]] = []
 
-        def add_select(plan: Select, strategy: str) -> None:
+        def add_select(plan: Select, strategy: str,
+                       spec: Optional[encoding.PatternSpec]) -> None:
             ell = 1 if strategy == "one_tuple" else plan.expected_matches
             sel_ells[strategy].append(ell)
+            sel_specs[strategy].append(spec)
             sel_pad[strategy] = sel_pad[strategy] or plan.padding.rows
             group_sizes[strategy] += 1
-            est = _planner.estimate_select_cost(
-                strategy, stats,
-                ell=(1 if strategy == "one_tuple" else
-                     _planner.DEFAULT_ELL if ell is None else max(ell, 1)),
-                padded_rows=plan.padding.rows)
+            ell_eff = (1 if strategy == "one_tuple" else
+                       _planner.DEFAULT_ELL if ell is None else max(ell, 1))
+            if spec is not None:
+                est = _planner.estimate_pattern_cost(
+                    stats, spec, select=strategy, ell=ell_eff,
+                    padded_rows=plan.padding.rows)
+            else:
+                est = _planner.estimate_select_cost(
+                    strategy, stats, ell=ell_eff,
+                    padded_rows=plan.padding.rows)
             group_rounds[strategy] = max(group_rounds.get(strategy, 0),
                                          est.rounds)
 
         for plan in plans:
             if isinstance(plan, Count):
-                counts += 1
+                spec = _lower_match(db, plan.where, "Count predicate")[2]
+                count_ests.append(
+                    _planner.estimate_pattern_cost(stats, spec))
             elif isinstance(plan, Select):
+                spec = _lower_match(db, plan.where, "Select predicate")[2]
+                if spec is not None and plan.strategy == "one_tuple":
+                    raise _planner.PlanNotSupported(
+                        plan.where, "one_tuple select (pattern predicates "
+                        "run one_round or tree)")
                 if plan.strategy == AUTO:
-                    auto_plans.append(plan)
+                    auto_plans.append((plan, spec))
                 else:
-                    add_select(plan, plan.strategy)
+                    add_select(plan, plan.strategy, spec)
             elif isinstance(plan, (RangeCount, RangeSelect)):
                 col = resolve_column(db, plan.where.column)
                 if col not in db.numeric_bits:   # as range_phase would
@@ -458,27 +532,32 @@ class QueryClient:
                 joins[plan.kind].append(plan)
             else:
                 raise _planner.PlanNotSupported(plan)
-        for plan in auto_plans:
-            chosen = _planner.choose_select_strategy(
-                stats, ell=plan.expected_matches,
+        for plan, spec in auto_plans:
+            chooser = (_planner.choose_pattern_strategy if spec is not None
+                       else _planner.choose_select_strategy)
+            args = (stats, spec) if spec is not None else (stats,)
+            chosen = chooser(
+                *args, ell=plan.expected_matches,
                 padded_rows=plan.padding.rows,
                 round_cost_bits=self.round_cost_bits,
                 group_sizes=group_sizes, group_rounds=group_rounds).strategy
-            add_select(plan, chosen)
+            add_select(plan, chosen, spec)
 
         groups: List[_planner.GroupEstimate] = []
-        if counts:
-            est = _planner.estimate_count_cost(stats)
+        if count_ests:
             groups.append(_planner.GroupEstimate(
-                "count", counts, dataclasses.replace(
-                    est, bits=est.bits * counts)))
+                "count", len(count_ests), _planner.CostEstimate(
+                    "count", bits=sum(e.bits for e in count_ests),
+                    rounds=max(e.rounds for e in count_ests),
+                    dispatches=max(e.dispatches for e in count_ests))))
         for strategy, ells in sel_ells.items():
             if ells:
                 groups.append(_planner.GroupEstimate(
                     strategy, len(ells),
                     _planner.estimate_batch_group_cost(
                         stats, strategy, ells=ells,
-                        padded_rows=sel_pad[strategy])))
+                        padded_rows=sel_pad[strategy],
+                        specs=sel_specs[strategy])))
         for (t_bits, reduce_every), members in range_grps.items():
             ests = [_planner.estimate_range_cost(
                 stats, t_bits=t_bits, reduce_every=reduce_every,
@@ -622,11 +701,16 @@ class QueryClient:
             so later AUTO riders are priced at their true marginal depth."""
             slot.strategy = strategy
             group_sizes[strategy] += 1
-            est = _planner.estimate_select_cost(
-                strategy, stats,
-                ell=(1 if strategy == "one_tuple" else
-                     _planner.DEFAULT_ELL if ell is None else max(ell, 1)),
-                padded_rows=slot.plan.padding.rows)
+            ell_eff = (1 if strategy == "one_tuple" else
+                       _planner.DEFAULT_ELL if ell is None else max(ell, 1))
+            if slot.spec is not None:
+                est = _planner.estimate_pattern_cost(
+                    stats, slot.spec, select=strategy, ell=ell_eff,
+                    padded_rows=slot.plan.padding.rows)
+            else:
+                est = _planner.estimate_select_cost(
+                    strategy, stats, ell=ell_eff,
+                    padded_rows=slot.plan.padding.rows)
             group_rounds[strategy] = max(group_rounds.get(strategy, 0),
                                          est.rounds)
             sel_grp[strategy].append(slot)
@@ -634,10 +718,17 @@ class QueryClient:
         for idx, plan in enumerate(plans):
             slot = _Slot(idx, plan, self._next_key(ent))
             if isinstance(plan, Count):
-                slot.column = resolve_column(db, plan.where.column)
+                slot.column, slot.pattern, slot.spec = _lower_match(
+                    db, plan.where, "Count predicate")
                 count_grp.append(slot)
             elif isinstance(plan, Select):
-                slot.column = resolve_column(db, plan.where.column)
+                slot.column, slot.pattern, slot.spec = _lower_match(
+                    db, plan.where, "Select predicate")
+                if slot.spec is not None and plan.strategy == "one_tuple":
+                    raise _planner.PlanNotSupported(
+                        plan.where, "one_tuple select (the §3.2.1 single-"
+                        "tuple map is the exact-equality special case — "
+                        "pattern predicates run one_round or tree)")
                 if plan.strategy == AUTO:
                     auto_slots.append(slot)   # assigned once groups known
                     continue
@@ -674,13 +765,23 @@ class QueryClient:
         # AUTO selections plan against the batch's live group sizes and
         # depths (riding a non-empty group costs only the rounds the rider
         # adds beyond its deepest member — marginal round pricing; with
-        # round_cost_bits=0 this reduces to sequential planning).
+        # round_cost_bits=0 this reduces to sequential planning). Pattern
+        # predicates choose among their eligible strategies only.
         for slot in auto_slots:
-            chosen = _planner.choose_select_strategy(
-                stats, ell=slot.plan.expected_matches,
-                padded_rows=slot.plan.padding.rows,
-                round_cost_bits=self.round_cost_bits,
-                group_sizes=group_sizes, group_rounds=group_rounds).strategy
+            if slot.spec is not None:
+                chosen = _planner.choose_pattern_strategy(
+                    stats, slot.spec, ell=slot.plan.expected_matches,
+                    padded_rows=slot.plan.padding.rows,
+                    round_cost_bits=self.round_cost_bits,
+                    group_sizes=group_sizes,
+                    group_rounds=group_rounds).strategy
+            else:
+                chosen = _planner.choose_select_strategy(
+                    stats, ell=slot.plan.expected_matches,
+                    padded_rows=slot.plan.padding.rows,
+                    round_cost_bits=self.round_cost_bits,
+                    group_sizes=group_sizes,
+                    group_rounds=group_rounds).strategy
             join_group(slot, chosen, slot.plan.expected_matches)
 
         be = self.backend
@@ -699,8 +800,8 @@ class QueryClient:
 
         if count_grp or avg_cnt_slots:
             counts = rounds.count_phase(be, rel, [
-                rounds.MatchJob(s.column, s.plan.where.pattern, s.key,
-                                s.ledger) for s in count_grp] + [
+                rounds.MatchJob(s.column, s.pattern, s.key,
+                                s.ledger, s.spec) for s in count_grp] + [
                 rounds.MatchJob(s.pred_column, s.plan.where.pattern,
                                 s.fetch_key, s.ledger)
                 for s in avg_cnt_slots])
@@ -767,7 +868,7 @@ class QueryClient:
             group = sel_grp["one_tuple"]
             keys = [jax.random.split(s.key) for s in group]
             ells = rounds.count_phase(be, rel, [
-                rounds.MatchJob(s.column, s.plan.where.pattern, kc, s.ledger)
+                rounds.MatchJob(s.column, s.pattern, kc, s.ledger)
                 for s, (kc, _) in zip(group, keys)])
             verified: List[Tuple[_Slot, jax.Array]] = []
             for s, (_, k_sel), ell in zip(group, keys, ells):
@@ -789,7 +890,7 @@ class QueryClient:
                 join_group(s, chosen, ell)
             if verified:
                 rows = rounds.one_tuple_round(be, rel, [
-                    rounds.MatchJob(s.column, s.plan.where.pattern, k_sel,
+                    rounds.MatchJob(s.column, s.pattern, k_sel,
                                     s.ledger) for s, k_sel in verified])
                 for (s, _), row in zip(verified, rows):
                     results[s.idx] = QueryResult(
@@ -801,7 +902,7 @@ class QueryClient:
             group = sel_grp["one_round"]
             keys = [jax.random.split(s.key) for s in group]
             addrs = rounds.match_all_round(be, rel, [
-                rounds.MatchJob(s.column, s.plan.where.pattern, kp, s.ledger)
+                rounds.MatchJob(s.column, s.pattern, kp, s.ledger, s.spec)
                 for s, (kp, _) in zip(group, keys)])
             for s, (_, kf), a in zip(group, keys, addrs):
                 fetch_jobs.append(rounds.FetchJob(kf, a, s.ledger,
@@ -815,7 +916,7 @@ class QueryClient:
             need = [(s, kc) for s, (kc, _, _) in zip(group, keys)
                     if s.known_count is None]
             ells = rounds.count_phase(be, rel, [
-                rounds.MatchJob(s.column, s.plan.where.pattern, kc, s.ledger)
+                rounds.MatchJob(s.column, s.pattern, kc, s.ledger, s.spec)
                 for s, kc in need])
             for (s, _), ell in zip(need, ells):
                 s.known_count = ell
@@ -829,8 +930,8 @@ class QueryClient:
                     live.append((s, kp, kf))
             if live:
                 addrs = rounds.tree_rounds(be, rel, [
-                    rounds.TreeJob(s.column, s.plan.where.pattern, kp,
-                                   s.ledger, ell=s.known_count,
+                    rounds.TreeJob(s.column, s.pattern, kp,
+                                   s.ledger, s.spec, ell=s.known_count,
                                    branching=s.plan.branching)
                     for s, kp, _ in live])
                 for (s, _, kf), a in zip(live, addrs):
@@ -866,7 +967,9 @@ class QueryClient:
         if pkfk_grp:
             join_jobs = [rounds.JoinJob(
                 s.plan.right, resolve_column(db, s.plan.on[0]),
-                resolve_column(s.plan.right, s.plan.on[1]), s.key, s.ledger)
+                resolve_column(s.plan.right, s.plan.on[1]), s.key, s.ledger,
+                match_method=_planner.choose_match_method(
+                    stats, s.plan.match_method))
                 for s in pkfk_grp]
             join_entries = rounds.join_match_round(be, rel, join_jobs)
 
@@ -932,6 +1035,22 @@ class QueryClient:
                                expected_matches=expected_matches,
                                padding=padding, branching=branching),
                         relation=relation)
+
+    def like(self, column: ColumnRef, pattern: str, *,
+             count_only: bool = False, strategy: str = AUTO,
+             expected_matches: Optional[int] = None,
+             padding: Padding = Padding.NONE,
+             relation: Optional[str] = None) -> QueryResult:
+        """``column LIKE pattern`` — a pattern-engine Select (or Count
+        with ``count_only=True``). Wildcard-free patterns lower to the
+        exact Eq path; ``lit%``/``%lit``/``%lit%``/``l_t`` run the
+        prefix / suffix / substring / masked matchers."""
+        where = Like(column, pattern)
+        if count_only:
+            return self.run(Count(where), relation=relation)
+        return self.run(Select(where, strategy=strategy,
+                               expected_matches=expected_matches,
+                               padding=padding), relation=relation)
 
     def range_count(self, column: ColumnRef, lo: int, hi: int, *,
                     reduce_every: int = 0,

@@ -106,11 +106,13 @@ class MapReduceExecutor:
             return jnp.concatenate([jnp.asarray(p) for p in parts], axis=1)
 
         from .backends import (batched_match_matrix, batched_matcher,
-                               ripple_segmenter, ripple_stepper)
+                               ripple_segmenter, ripple_stepper,
+                               slide_matcher)
         base_batch = batched_matcher(base)
         base_ripple = ripple_stepper(base)
         base_mm_batch = batched_match_matrix(base)
         base_segment = ripple_segmenter(base)
+        base_slide = slide_matcher(base)
 
         def ripple_carry(a, b, carry=None):
             # a: (c, S, n) bit planes — split the tuple axis (last), like
@@ -142,6 +144,19 @@ class MapReduceExecutor:
             splits = _bounds(col.shape[2], self.n_splits)
             parts = self.runner.run(
                 lambda s: np.asarray(base_batch(col[:, :, s[0]:s[1]], pat)),
+                splits)
+            return jnp.concatenate([jnp.asarray(p) for p in parts], axis=2)
+
+        def aa_slide_batch(col, pat):
+            # col: (c, B, n, W, A) — same tuple-axis split as
+            # aa_match_batch; every map task sees the whole pattern-tile
+            # stack but only a slice of the relation, and the (c, B, n_s,
+            # M) window products concatenate back along tuples.
+            if col.shape[2] == 0 or col.shape[1] == 0:
+                return base_slide(col, pat)
+            splits = _bounds(col.shape[2], self.n_splits)
+            parts = self.runner.run(
+                lambda s: np.asarray(base_slide(col[:, :, s[0]:s[1]], pat)),
                 splits)
             return jnp.concatenate([jnp.asarray(p) for p in parts], axis=2)
 
@@ -181,4 +196,5 @@ class MapReduceExecutor:
                        aa_match_batch=aa_match_batch,
                        ripple_carry=ripple_carry,
                        ripple_segment=ripple_segment,
-                       match_matrix_batch=match_matrix_batch)
+                       match_matrix_batch=match_matrix_batch,
+                       aa_slide_batch=aa_slide_batch)

@@ -41,7 +41,9 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 from ..core.costs import WORD_BITS
 from ..core.dataplane import ShardedRelation
+from ..core.encoding import PatternSpec
 from ..core.engine import SecretSharedDB
+from ..core.queries.rounds import match_phase_cost
 
 #: ℓ assumed when the plan carries no ``expected_matches`` hint. Two is the
 #: smallest multi-match cardinality: it keeps ``one_tuple`` out of the
@@ -169,6 +171,106 @@ def estimate_count_cost(stats: DBStats) -> CostEstimate:
     S = max(1, min(stats.shards, max(stats.n, 1)))
     return CostEstimate("count", _count_elems(stats) * WORD_BITS, rounds=1,
                         dispatches=S)
+
+
+def estimate_pattern_cost(stats: DBStats, spec: Optional[PatternSpec], *,
+                          select: Optional[str] = None,
+                          ell: int = DEFAULT_ELL,
+                          padded_rows: Optional[int] = None) -> CostEstimate:
+    """Price a pattern-predicate COUNT (``select=None``) or SELECT
+    (``select="one_round" | "tree"``) from the very same Table-1-style
+    atoms the round engine charges (:func:`~repro.core.queries.rounds.
+    match_phase_cost` is the single source for both), so the prediction is
+    *exact* against the measured ledger for pattern counts and one-round
+    selects, and a Theorem-4-style bound for the tree.
+
+    ``spec=None`` is the wildcard-free case — the predicate lowered onto
+    the exact-equality path — and the estimate degenerates, field for
+    field, to :func:`estimate_count_cost` / :func:`estimate_select_cost`
+    (the planner-level statement that a wildcard-free LIKE costs exactly
+    what an Eq costs; asserted by the planner tests).
+
+    The CONTAINS family's degree-reduction re-share adds its round and its
+    c² + n·M elements wherever the match phase runs (count, one_round
+    Phase 1, tree Phase 0 *and* tree prelude — hence twice for a CONTAINS
+    tree). ``one_tuple`` is the §3.2.1 exact-equality special case and is
+    deliberately absent here.
+    """
+    s = stats
+    S = max(1, min(s.shards, max(s.n, 1)))
+    cost = match_phase_cost(spec, n=s.n, c=s.c, w=s.w, a=s.a)
+    match_elems = cost["send"] + cost["reduce_send"]
+    rr = cost["reduce_rounds"]
+    if select is None:
+        return CostEstimate("count", (match_elems + s.c) * WORD_BITS,
+                            rounds=1 + rr, dispatches=S)
+    ell = max(ell, 1)
+    if select == "one_round":
+        elems = match_elems + s.c * s.n + _fetch_elems(s, ell, padded_rows)
+        return CostEstimate("one_round", elems * WORD_BITS,
+                            rounds=2 + rr, dispatches=2 * S)
+    if select == "tree":
+        count_elems = match_elems + s.c          # Phase 0 runs the pattern
+        if ell <= 1:
+            elems = (count_elems + match_elems + s.c
+                     + _fetch_elems(s, 1, padded_rows))
+            return CostEstimate("tree", elems * WORD_BITS,
+                                rounds=3 + 2 * rr, dispatches=3 * S)
+        qa_rounds = (math.floor(math.log(max(s.n, 2), ell))
+                     + math.floor(math.log2(ell)) + 1)       # Theorem 4
+        elems = (count_elems + match_elems
+                 + qa_rounds * ell * s.c                     # block counts
+                 + ell * s.c                                 # address fetches
+                 + _fetch_elems(s, ell, padded_rows))
+        return CostEstimate("tree", elems * WORD_BITS,
+                            rounds=1 + qa_rounds + 1 + 2 * rr,
+                            dispatches=(2 + qa_rounds + 1) * S)
+    raise ValueError(f"pattern selects support one_round/tree, "
+                     f"not {select!r}")
+
+
+def candidate_pattern_estimates(stats: DBStats,
+                                spec: Optional[PatternSpec], *,
+                                ell: Optional[int] = None,
+                                padded_rows: Optional[int] = None
+                                ) -> List[CostEstimate]:
+    """Eligible strategies for a pattern select — ``one_round`` and
+    ``tree`` only: ``one_tuple`` is the exact-equality special case, even
+    at an ℓ = 1 hint."""
+    ell_eff = DEFAULT_ELL if ell is None else max(ell, 1)
+    return [estimate_pattern_cost(stats, spec, select=strat, ell=ell_eff,
+                                  padded_rows=padded_rows)
+            for strat in ("one_round", "tree")]
+
+
+#: backend launches one PK/FK match-matrix evaluation needs per method:
+#: the §3.1.2 chain walks the word one dot-set per position; the aggregate
+#: form flattens all W·A products into ONE contraction plus the Lagrange
+#: equality indicator (2 launches, any W).
+MATCH_METHOD_LAUNCHES = {"chain": lambda w: w, "aggregate": lambda w: 2}
+
+
+def estimate_match_method_launches(stats: DBStats, method: str) -> int:
+    """Device launches for one match-matrix evaluation under ``method``."""
+    try:
+        return MATCH_METHOD_LAUNCHES[method](stats.w)
+    except KeyError:
+        raise ValueError(f"unknown match_method {method!r}; choose from "
+                         f"('chain', 'aggregate')") from None
+
+
+def choose_match_method(stats: DBStats, method: str = "auto") -> str:
+    """Resolve a ``Join.match_method`` — the §3.1.2 chain-vs-aggregate
+    execution knob. Both methods open the same match matrix at the same
+    degree (2tW) with identical ledgers, so bits and rounds never
+    discriminate; the planner prices the remaining axis — backend launch
+    count — and AUTO takes the cheaper evaluation (``aggregate`` whenever
+    the word is longer than its two fixed launches, i.e. any real W)."""
+    if method != "auto":
+        estimate_match_method_launches(stats, method)   # validate
+        return method
+    return min(("chain", "aggregate"),
+               key=lambda m: estimate_match_method_launches(stats, m))
 
 
 def estimate_range_cost(stats: DBStats, *, t_bits: int,
@@ -347,7 +449,15 @@ def choose_select_strategy(stats: DBStats, *, ell: Optional[int] = None,
     row/ledger — is identical to sequential planning.
     """
     cands = candidate_estimates(stats, ell=ell, padded_rows=padded_rows)
+    return min(cands, key=_riding_key(round_cost_bits, group_sizes,
+                                      group_rounds))
 
+
+def _riding_key(round_cost_bits: int,
+                group_sizes: Optional[Mapping[str, int]],
+                group_rounds: Optional[Mapping[str, int]]):
+    """Batching-aware scoring: a strategy whose group is already running
+    pays only its *marginal* rounds beyond the group's deepest member."""
     def key(e: CostEstimate):
         riding = bool(group_sizes) and group_sizes.get(e.strategy, 0) > 0
         if riding:
@@ -357,23 +467,49 @@ def choose_select_strategy(stats: DBStats, *, ell: Optional[int] = None,
         else:
             marginal_rounds = e.rounds
         return (e.bits + round_cost_bits * marginal_rounds, e.rounds)
+    return key
 
-    return min(cands, key=key)
+
+def choose_pattern_strategy(stats: DBStats, spec: Optional[PatternSpec], *,
+                            ell: Optional[int] = None,
+                            padded_rows: Optional[int] = None,
+                            round_cost_bits: int = 0,
+                            group_sizes: Optional[Mapping[str, int]] = None,
+                            group_rounds: Optional[Mapping[str, int]] = None
+                            ) -> CostEstimate:
+    """:func:`choose_select_strategy` for a pattern predicate: the same
+    min-bits / marginal-rounds scoring over the pattern-eligible
+    candidates (``one_round``/``tree`` — never ``one_tuple``)."""
+    cands = candidate_pattern_estimates(stats, spec, ell=ell,
+                                        padded_rows=padded_rows)
+    return min(cands, key=_riding_key(round_cost_bits, group_sizes,
+                                      group_rounds))
 
 
 def estimate_batch_group_cost(stats: DBStats, strategy: str, *,
                               ells: Sequence[Optional[int]],
-                              padded_rows: Optional[int] = None
+                              padded_rows: Optional[int] = None,
+                              specs: Optional[Sequence[
+                                  Optional[PatternSpec]]] = None
                               ) -> CostEstimate:
     """Price a whole ``run_batch`` group: bits add up query by query, but
     the lockstep engine pays each protocol round — and each per-shard
     dispatch — once for the group, so the group's round and dispatch counts
     are its deepest member's (not the sum). This is the per-group ledger
     shape ``tests/test_batch.py`` asserts, exposed as a planner-side
-    estimate."""
-    ests = [estimate_select_cost(
-        strategy, stats, ell=DEFAULT_ELL if e is None else max(e, 1),
-        padded_rows=padded_rows) for e in ells]
+    estimate. ``specs`` aligns with ``ells`` and prices pattern-predicate
+    members through :func:`estimate_pattern_cost` (a ``None`` entry is an
+    exact-equality member; both estimators agree there, field for field)."""
+    specs = specs if specs is not None else [None] * len(ells)
+    ests = [estimate_pattern_cost(
+        stats, spec, select=strategy,
+        ell=DEFAULT_ELL if e is None else max(e, 1),
+        padded_rows=padded_rows)
+        if (spec is not None and strategy != "one_tuple")
+        else estimate_select_cost(
+            strategy, stats, ell=DEFAULT_ELL if e is None else max(e, 1),
+            padded_rows=padded_rows)
+        for e, spec in zip(ells, specs)]
     return CostEstimate(strategy,
                         bits=sum(e.bits for e in ests),
                         rounds=max((e.rounds for e in ests), default=0),

@@ -65,6 +65,53 @@ class Between:
             raise ValueError(f"empty range: lo={self.lo} > hi={self.hi}")
 
 
+@dataclasses.dataclass(frozen=True)
+class Like:
+    """SQL-ish pattern predicate: ``column LIKE pattern`` (§3.1 general AA).
+
+    ``%`` matches any run of characters at either end of the pattern
+    (``lit%`` / ``%lit`` / ``%lit%``); ``_`` matches any ONE symbol —
+    including the pad terminator, so ``_`` is a don't-care, not a length
+    constraint (documented deviation from SQL). A wildcard-free pattern
+    lowers to the exact-match :class:`Eq` path; interior ``%`` runs and
+    ``_`` under a ``%``-shifted window raise ``PlanNotSupported``.
+    """
+    column: ColumnRef
+    pattern: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Prefix:
+    """Prefix predicate: ``column`` starts with ``literal`` (verbatim —
+    no wildcard characters; use :class:`Like` for ``_`` don't-cares).
+    Lowers to a truncated k-position AA chain."""
+    column: ColumnRef
+    literal: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Suffix:
+    """Suffix predicate: ``column`` ends with ``literal`` (verbatim).
+    Lowers to the sliding-window automata step with a terminator factor."""
+    column: ColumnRef
+    literal: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Contains:
+    """Substring predicate: ``column`` contains ``literal`` (verbatim).
+    Lowers to the sliding-window automata step + a degree-reduction
+    re-share + the window-count zero-test."""
+    column: ColumnRef
+    literal: str
+
+
+#: predicate classes the pattern engine lowers (besides plain Eq).
+PATTERN_PREDICATES = (Like, Prefix, Suffix, Contains)
+#: every predicate class Count/Select accept.
+MATCH_PREDICATES = (Eq,) + PATTERN_PREDICATES
+
+
 # ---------------------------------------------------------------------------
 # padding policy
 # ---------------------------------------------------------------------------
@@ -109,8 +156,13 @@ class Plan:
 
 @dataclasses.dataclass(frozen=True)
 class Count(Plan):
-    """COUNT(*) WHERE col = pattern (§3.1, Algorithm 2)."""
-    where: Eq
+    """COUNT(*) WHERE <predicate> (§3.1, Algorithm 2).
+
+    ``where`` is :class:`Eq` or any pattern predicate
+    (:class:`Like`/:class:`Prefix`/:class:`Suffix`/:class:`Contains`);
+    unknown predicate types raise ``PlanNotSupported`` at plan time.
+    """
+    where: Union[Eq, Like, Prefix, Suffix, Contains]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,8 +174,12 @@ class Select(Plan):
     ``"one_tuple" | "one_round" | "tree"``. ``expected_matches`` is the
     planner's cardinality hint (ℓ); ``one_tuple`` is only eligible when the
     hint says ℓ = 1 (the algorithm itself verifies and raises otherwise).
+
+    ``where`` may also be a pattern predicate (Like/Prefix/Suffix/Contains);
+    pattern selects run ``one_round`` or ``tree`` (``one_tuple`` is the
+    §3.2.1 exact-equality special case).
     """
-    where: Eq
+    where: Union[Eq, Like, Prefix, Suffix, Contains]
     strategy: str = AUTO
     expected_matches: Optional[int] = None
     padding: Padding = Padding.NONE
@@ -173,11 +229,20 @@ class Join(Plan):
     on:   (left column, right column) — names or indices.
     kind: ``"pkfk"`` (§3.3.1, left column is a primary key) or ``"equi"``
           (§3.3.2, join values may repeat on both sides).
+    match_method: how the PK/FK match matrix is evaluated — ``"chain"``
+          (W sequential dot-sets, §3.1.2), ``"aggregate"`` (ONE flattened
+          W·A dot + the Lagrange equality indicator, §3.1.2 aggregate
+          form) or ``"auto"`` (planner-priced). Both produce the same
+          secrets at the same degree; the choice is a backend-execution
+          knob the planner prices by launch count. Defaults to ``"chain"``
+          (the paper's dispatch shape — one ``match_matrix`` per group);
+          pass ``"auto"`` to let the planner pick the cheaper launch plan.
     """
     right: SecretSharedDB
     on: Tuple[ColumnRef, ColumnRef]
     kind: str = "pkfk"
     padding: Padding = Padding.NONE
+    match_method: str = "chain"
 
     def __post_init__(self):
         if self.kind not in JOIN_KINDS:
@@ -185,6 +250,10 @@ class Join(Plan):
                              f"{JOIN_KINDS}")
         if len(self.on) != 2:
             raise ValueError("Join.on must be a (left, right) column pair")
+        if self.match_method not in (AUTO, "chain", "aggregate"):
+            raise ValueError(
+                f"unknown match_method {self.match_method!r}; choose from "
+                f"('auto', 'chain', 'aggregate')")
 
 
 @dataclasses.dataclass(frozen=True)

@@ -23,7 +23,9 @@ import jax.numpy as jnp
 from . import field
 from .shamir import Shares
 
-__all__ = ["match_words", "match_column", "count_column", "match_matrix"]
+__all__ = ["match_words", "match_column", "count_column", "match_matrix",
+           "slide_windows", "match_suffix", "window_count",
+           "equality_indicator", "zero_indicator"]
 
 
 def _inner_over_alphabet(col_vals: jax.Array, pat_vals: jax.Array) -> jax.Array:
@@ -110,6 +112,77 @@ def _equality_indicator(p_cnt, w: int):
         acc = term if acc is None else field.mul(acc, term)
     inv_wfact = _inv_factorial(w)
     return field.mul(acc, jnp.asarray(inv_wfact, field.DTYPE))
+
+
+#: public raw-array form (shared with the backend registry's batched
+#: aggregate match-matrix path). Input: P shares, static w; degree ×w.
+equality_indicator = _equality_indicator
+
+
+def zero_indicator(p_cnt, m: int):
+    """1[P == 0] = Π_{j=1}^{m} (j − P) · (m!)⁻¹  over the domain {0..m}.
+
+    The Lagrange basis polynomial at 0: a share-local (cloud-side)
+    elementwise chain, degree ×m. Used by the CONTAINS matcher, whose
+    window count P ∈ {0..M} may exceed 1 (repeated substrings)."""
+    acc = None
+    for j in range(1, m + 1):
+        term = field.sub(jnp.asarray(j, field.DTYPE), p_cnt)
+        acc = term if acc is None else field.mul(acc, term)
+    return field.mul(acc, jnp.asarray(_inv_factorial(m), field.DTYPE))
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window automata step (§3.1 general patterns)
+# ---------------------------------------------------------------------------
+
+def slide_windows(column: Shares, pattern: Shares) -> Shares:
+    """Chain a k-position pattern tile at every window offset.
+
+    column (c, n, W, A) × pattern (c, k, A) -> Shares (c, n, M) with
+    M = W − k + 1: windows[..., o] is a share of 1 iff the word's
+    characters at positions o..o+k−1 equal the tile. Degree (tc+tp)·k.
+    Reference semantics of the ``aa_slide_batch`` backend op.
+    """
+    col = column.values                                  # (c, n, W, A)
+    pat = pattern.values                                 # (c, k, A)
+    k = pat.shape[-2]
+    w = col.shape[-2]
+    m = w - k + 1
+    idx = jnp.arange(m)[:, None] + jnp.arange(k)[None, :]
+    win = col[:, :, idx, :]                              # (c, n, M, k, A)
+    v = field.dot(win, pat[:, None, None], axis=-1)      # (c, n, M, k)
+    return Shares(_chain(v), (column.degree + pattern.degree) * k)
+
+
+def match_suffix(column: Shares, pattern: Shares) -> Shares:
+    """Suffix match bit: Σ_o windows[o] · term[o+k]  (term[W] ≡ 1).
+
+    For a wildcard-free tile the windows are mutually exclusive (the tile's
+    real characters cannot match padding, so a matching window must end
+    exactly where the terminator run starts), hence the linear sum is the
+    exact 0/1 match bit. Returns Shares (c, n), degree (tc+tp)·k + tc
+    (the terminator factor; M = 1 skips it).
+    """
+    win = slide_windows(column, pattern)                 # (c, n, M)
+    col = column.values
+    k = pattern.values.shape[-2]
+    m = col.shape[-2] - k + 1
+    if m == 1:
+        return Shares(win.values[..., 0], win.degree)
+    term = col[:, :, k:, 0]                              # (c, n, M-1)
+    ones = jnp.ones(term.shape[:-1] + (1,), field.DTYPE)
+    termext = jnp.concatenate([term, ones], axis=-1)     # (c, n, M)
+    bits = field.sum_(field.mul(win.values, termext), axis=-1)
+    return Shares(bits, win.degree + column.degree)
+
+
+def window_count(column: Shares, pattern: Shares) -> Shares:
+    """P = Σ_o windows[o] — the CONTAINS window count (c, n), ∈ {0..M}
+    secret-side for wildcard-free tiles. The match bit is
+    ``1 − zero_indicator(P, M)`` after a degree-reduction re-share."""
+    win = slide_windows(column, pattern)
+    return Shares(field.sum_(win.values, axis=-1), win.degree)
 
 
 def _inv_factorial(w: int) -> int:

@@ -6,13 +6,22 @@ paper's fix for the John/Johnson prefix problem (§3.1.2 Aside). Two encoded
 letters match iff the inner product of their one-hot vectors is 1, which is a
 share-space bilinear op.
 
+Pattern predicates (LIKE / prefix / suffix / substring) lower to a
+:class:`PatternSpec` — a short one-hot *tile* of k pattern positions plus a
+matcher kind. Wildcard positions share the all-ones vector, so their alphabet
+dot against ANY encoded symbol (terminator included) is identically 1:
+a wildcard is a don't-care, never a length constraint. Only ``Like`` surface
+patterns interpret ``%``/``_`` — in ``Prefix``/``Suffix``/``Contains``
+literals every character (including ``_``, which is in the alphabet) is
+matched verbatim.
+
 Numbers used in range queries are encoded as two's-complement *bit vectors*
 (LSB first) so SS-SUB (Algorithm 6) can ripple through them.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,6 +89,130 @@ class Codec:
 
     def decode_row(self, onehot: np.ndarray) -> list:
         return [self.decode_word(onehot[k]) for k in range(onehot.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# Pattern predicates (§3.1 general matching): spec, LIKE parser, encoders
+# ---------------------------------------------------------------------------
+
+#: matcher strategies a PatternSpec can name. "masked" rides the full-width
+#: AA chain (same dispatch stack as exact equality); "prefix" the truncated
+#: k-chain; "suffix"/"contains" the sliding-window automata step.
+PATTERN_KINDS = ("masked", "prefix", "suffix", "contains")
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternSpec:
+    """A lowered pattern predicate: k literal positions + matcher kind.
+
+    ``body`` holds the k pattern characters; indices in ``wild`` are
+    wildcard (all-ones) positions. Wildcards are only legal where windows
+    cannot shift (``masked`` / ``prefix``): a wildcard matches the
+    terminator too, so inside a sliding window it would break the
+    mutual-exclusivity of window matches. ``source`` is the surface
+    pattern (e.g. the original LIKE string) for display and errors.
+    """
+    kind: str
+    body: str
+    wild: Tuple[int, ...] = ()
+    source: str = ""
+
+    def __post_init__(self):
+        if self.kind not in PATTERN_KINDS:
+            raise ValueError(f"unknown pattern kind {self.kind!r}")
+        if not self.body:
+            raise ValueError(
+                f"pattern {self.source!r} has an empty literal body")
+        if TERMINATOR in self.body:
+            raise ValueError("pattern bodies may not contain the terminator")
+        if self.wild and self.kind in ("suffix", "contains"):
+            raise ValueError(
+                f"wildcard positions are not supported in {self.kind} "
+                "patterns (a window could match padding)")
+        if any(i < 0 or i >= len(self.body) for i in self.wild):
+            raise ValueError("wildcard index out of range")
+
+    @property
+    def length(self) -> int:
+        """k — the AA chain length of this pattern."""
+        return len(self.body)
+
+    def windows(self, word_length: int) -> int:
+        """M — number of sliding windows at a given word length."""
+        return word_length - self.length + 1
+
+
+def parse_like(pattern: str) -> Tuple[str, str, Tuple[int, ...]]:
+    """Parse a SQL-ish LIKE pattern -> (kind, body, wildcard positions).
+
+    Supported shapes (``%`` = any run, ``_`` = any one symbol; no escapes):
+
+      ``lit``      -> ("exact", lit, ())      — rewritten to the Eq path
+      ``l_t``      -> ("masked", l_t, (1,))   — fixed positions, full chain
+      ``lit%``     -> ("prefix", lit, wilds)  — ``_`` allowed in lit
+      ``%lit``     -> ("suffix", lit, ())     — ``_`` unsupported
+      ``%lit%``    -> ("contains", lit, ())   — ``_`` unsupported
+
+    Interior/multiple ``%`` runs, a bare ``%``, and ``_`` under a shifted
+    window raise ``ValueError`` (callers surface ``PlanNotSupported``).
+    """
+    if not pattern or pattern.strip("%") == "":
+        raise ValueError(f"LIKE pattern {pattern!r} has no literal body")
+    lead = pattern.startswith("%")
+    trail = pattern.endswith("%")
+    body = pattern[1 if lead else 0:len(pattern) - 1 if trail else len(pattern)]
+    if "%" in body:
+        raise ValueError(
+            f"LIKE pattern {pattern!r}: interior '%' is not supported")
+    wild = tuple(i for i, ch in enumerate(body) if ch == "_")
+    if lead and wild:
+        raise ValueError(
+            f"LIKE pattern {pattern!r}: '_' under a '%'-shifted window is "
+            "not supported")
+    if lead and trail:
+        return "contains", body, ()
+    if lead:
+        return "suffix", body, ()
+    if trail:
+        return "prefix", body, wild
+    return ("masked", body, wild) if wild else ("exact", body, ())
+
+
+def encode_pattern_tile(codec: Codec, spec: PatternSpec) -> np.ndarray:
+    """-> uint32[k, alphabet_size] one-hot rows; wildcards are all-ones.
+
+    The tile is the user-shared object for prefix/suffix/contains specs
+    (k positions, not the full word width).
+    """
+    if spec.length > codec.word_length:
+        raise ValueError(
+            f"pattern {spec.source or spec.body!r} longer than word_length "
+            f"{codec.word_length}")
+    out = np.zeros((spec.length, codec.alphabet_size), dtype=np.uint32)
+    wild = set(spec.wild)
+    for j, ch in enumerate(spec.body):
+        if j in wild:
+            out[j, :] = 1
+        else:
+            out[j, codec.char_index(ch)] = 1
+    return out
+
+
+def encode_pattern_word(codec: Codec, spec: PatternSpec) -> np.ndarray:
+    """-> uint32[word_length, alphabet_size] full-width masked pattern.
+
+    The ``masked`` (fixed-position LIKE) encoding: the k-tile padded with
+    terminator one-hots, so the ordinary full-width AA chain enforces both
+    the literal positions and the trailing terminators. Because a wildcard
+    dot is identically 1 against the terminator as well, ``a_`` matches
+    words of length ≤ 2 whose real characters agree (don't-care semantics,
+    not SQL's exact-length ``_``) — documented in the README.
+    """
+    tile = encode_pattern_tile(codec, spec)
+    out = np.zeros((codec.word_length, codec.alphabet_size), dtype=np.uint32)
+    out[:spec.length] = tile
+    out[spec.length:, 0] = 1          # terminator one-hots
+    return out
 
 
 # ---------------------------------------------------------------------------

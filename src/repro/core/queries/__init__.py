@@ -14,6 +14,7 @@ from . import aggregate, embed, rounds
 from .aggregate import VerificationError
 from .embed import EmbedJob, embed_phase
 from .count import count_query
+from .pattern import like_spec, match_phase_cost, pattern_count, pattern_select
 from .select import (CardinalityError, select_one_tuple, select_one_round,
                      select_tree)
 from .join import pkfk_join, equijoin
@@ -23,5 +24,6 @@ __all__ = [
     "CardinalityError", "VerificationError", "aggregate", "embed", "rounds",
     "EmbedJob", "embed_phase", "count_query", "select_one_tuple",
     "select_one_round", "select_tree", "pkfk_join", "equijoin", "ss_sub",
-    "range_count", "range_select",
+    "range_count", "range_select", "like_spec", "match_phase_cost",
+    "pattern_count", "pattern_select",
 ]

@@ -69,7 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import dataplane, encoding, field, shamir
+from .. import automata, dataplane, encoding, field, shamir
 from ..costs import CostLedger
 from ..dataplane import RelationLike
 from ..engine import SecretSharedDB
@@ -83,11 +83,19 @@ from ..shamir import Shares
 
 @dataclasses.dataclass
 class MatchJob:
-    """One query's slot in a predicate-match phase (count / select)."""
+    """One query's slot in a predicate-match phase (count / select).
+
+    ``spec`` selects the matcher strategy: ``None`` is the exact-word
+    equality chain; a :class:`~repro.core.encoding.PatternSpec` lowers the
+    job onto the pattern engine — ``masked`` rides the very same full-width
+    chain (only the pattern encoding differs), ``prefix`` the truncated
+    k-chain, ``suffix``/``contains`` the sliding-window step.
+    """
     column: int
     pattern: str
     key: jax.Array          # key for sharing this query's predicate
     ledger: CostLedger
+    spec: Optional[encoding.PatternSpec] = None
 
 
 @dataclasses.dataclass
@@ -127,12 +135,22 @@ class RangeJob:
 
 @dataclasses.dataclass
 class JoinJob:
-    """One PK/FK join's slot in the batched §3.3.1 round structure."""
+    """One PK/FK join's slot in the batched §3.3.1 round structure.
+
+    ``match_method`` picks the backend *execution* of the nx×ny match
+    matrix: ``"chain"`` multiplies W per-position one-hot dot sets
+    sequentially (Table 3 order); ``"aggregate"`` contracts the flattened
+    (W·A) encodings in ONE ``ss_matmul`` and applies the §3.1 equality
+    indicator share-side. Both produce the same secrets at the same degree
+    (2tW), so transcripts and ledgers are identical — the planner prices
+    the choice by backend launch count.
+    """
     right: SecretSharedDB
     col_x: int
     col_y: int
     key: Optional[jax.Array]
     ledger: CostLedger
+    match_method: str = "chain"
 
 
 @dataclasses.dataclass
@@ -188,6 +206,20 @@ def _batched_match_matrix(be):
     return _registry.batched_match_matrix(be)
 
 
+def _slide_matcher(be):
+    """Backend's stacked sliding-window matcher (deferred import, as
+    above) — raw window-chain products for suffix/substring patterns."""
+    from ...api import backends as _registry
+    return _registry.slide_matcher(be)
+
+
+def _aggregate_matcher(be):
+    """Backend's aggregation-form all-pairs matcher: the §3.1 "aggregate"
+    method promoted to a planner-priced join execution choice."""
+    from ...api import backends as _registry
+    return _registry.aggregate_match_matrix(be)
+
+
 def _share_one_hot(key: jax.Array, db: SecretSharedDB,
                    addresses: Sequence[int],
                    n_rows: Optional[int] = None) -> Shares:
@@ -228,12 +260,216 @@ def _fused_interpolate(parts: Sequence[Shares]) -> List[np.ndarray]:
 
 
 def _share_patterns(db: SecretSharedDB, jobs: Sequence[MatchJob]) -> Shares:
-    """User step: encode + share every job's predicate -> (c, B, W, A)."""
-    vals = [encoding.share_pattern(j.key, db.codec, j.pattern,
-                                   n_shares=db.n_shares,
-                                   degree=db.base_degree).values
-            for j in jobs]
+    """User step: encode + share every job's predicate -> (c, B, W|k, A).
+
+    Exact jobs encode the full terminator-padded word; ``masked`` specs the
+    full-width masked pattern (wildcard rows are all-ones); tile specs
+    (prefix/suffix/contains) the length-k pattern tile. All jobs in one
+    stack must share an encoding width — the engine groups them so.
+    """
+    codec = db.codec
+    vals = []
+    for j in jobs:
+        s = getattr(j, "spec", None)
+        if s is None:
+            enc = codec.encode_word(j.pattern)
+        elif s.kind == "masked":
+            enc = encoding.encode_pattern_word(codec, s)
+        else:
+            enc = encoding.encode_pattern_tile(codec, s)
+        vals.append(encoding.share_encoded(
+            j.key, enc, n_shares=db.n_shares, degree=db.base_degree).values)
     return Shares(jnp.stack(vals, axis=1), db.base_degree)
+
+
+def _needs_pattern_engine(jobs: Sequence[MatchJob]) -> bool:
+    """True if any job leaves the full-width chain (``masked`` rides the
+    classic exact-match stack unchanged; the tile kinds do not)."""
+    return any(getattr(j, "spec", None) is not None
+               and j.spec.kind in ("prefix", "suffix", "contains")
+               for j in jobs)
+
+
+def match_phase_cost(spec: Optional[encoding.PatternSpec], *, n: int, c: int,
+                     w: int, a: int, col_degree: int = 1,
+                     pat_degree: int = 1) -> Dict[str, int]:
+    """Table-1-style cost atoms for one predicate's match phase.
+
+    ``send``/``cloud`` are the pattern upload and the per-tuple automata
+    work; ``degree`` the final match-bit degree (the user interpolates
+    ``degree + 1`` shares per opened element); the ``reduce_*`` atoms are
+    the CONTAINS degree-reduction re-share round (zero unless M > 1).
+    ``spec=None`` (exact equality) and ``masked`` price the full-width
+    chain. The round engine charges these atoms verbatim and the planner
+    prices with the same function, so ``explain()`` stays exact for the
+    pattern family.
+    """
+    t2 = col_degree + pat_degree
+    none = dict(reduce_rounds=0, reduce_send=0, reduce_cloud=0)
+    if spec is None or spec.kind == "masked":
+        return dict(send=c * w * a, cloud=n * w * a, degree=t2 * w, **none)
+    k = spec.length
+    m = w - k + 1
+    if spec.kind == "prefix" or m == 1:
+        # truncated k-chain; a single-window slide degenerates to the same
+        return dict(send=c * k * a, cloud=n * k * a, degree=t2 * k, **none)
+    if spec.kind == "suffix":
+        return dict(send=c * k * a, cloud=n * m * k * a + n * m,
+                    degree=t2 * k + col_degree, **none)
+    if spec.kind != "contains":
+        raise ValueError(f"unknown pattern kind: {spec.kind!r}")
+    return dict(send=c * k * a, cloud=n * m * k * a, degree=m,
+                reduce_rounds=1, reduce_send=c * c, reduce_cloud=n * m)
+
+
+def _charge_match_phase(db: SecretSharedDB, job: MatchJob
+                        ) -> Dict[str, int]:
+    """Charge one job's match-phase atoms (round + send + cloud + the
+    CONTAINS reduction round if any); returns the atoms for the caller's
+    recv/user charges."""
+    codec = db.codec
+    cost = match_phase_cost(getattr(job, "spec", None), n=db.n_tuples,
+                            c=db.n_shares, w=codec.word_length,
+                            a=codec.alphabet_size,
+                            col_degree=db.relation.degree,
+                            pat_degree=db.base_degree)
+    job.ledger.round()
+    job.ledger.send(cost["send"])
+    job.ledger.cloud(cost["cloud"])
+    if cost["reduce_rounds"]:
+        job.ledger.round(cost["reduce_rounds"])
+        job.ledger.send(cost["reduce_send"])
+        job.ledger.cloud(cost["reduce_cloud"])
+    return cost
+
+
+class _MatcherPlan:
+    """Strategy layer of the refactored matcher pipeline.
+
+    Groups a mixed batch of :class:`MatchJob` so each group's per-tuple
+    match bits cost ONE backend dispatch per round:
+
+      * ``("full", W)``   — exact + masked patterns: the classic full-width
+        ``aa_match_batch`` chain;
+      * ``("prefix", k)`` — truncated k-chains over ``col[..., :k, :]``,
+        the same op at width k;
+      * ``("slide", k)``  — suffix + substring patterns of length k: raw
+        window products from ONE ``aa_slide_batch`` dispatch. The suffix
+        terminator factor and the CONTAINS window count are linear
+        share-local post-processing, so both kinds of the same k share the
+        dispatch; CONTAINS (M > 1) additionally runs one degree-reduction
+        re-share of its window count — the family's only extra
+        communication round — before the share-local zero test.
+    """
+
+    def __init__(self, db: SecretSharedDB, jobs: Sequence[MatchJob]):
+        self.db = db
+        self.jobs = list(jobs)
+        self.w = db.codec.word_length
+        full: List[int] = []
+        prefix: Dict[int, List[int]] = {}
+        slide: Dict[int, List[int]] = {}
+        for i, j in enumerate(self.jobs):
+            s = getattr(j, "spec", None)
+            if s is None or s.kind == "masked":
+                full.append(i)
+            elif s.kind == "prefix":
+                prefix.setdefault(s.length, []).append(i)
+            else:
+                slide.setdefault(s.length, []).append(i)
+        self.groups: List[Tuple[str, int, List[int]]] = []
+        if full:
+            self.groups.append(("full", self.w, full))
+        for k in sorted(prefix):
+            self.groups.append(("prefix", k, prefix[k]))
+        for k in sorted(slide):
+            self.groups.append(("slide", k, slide[k]))
+        self.pats = [_share_patterns(db, [self.jobs[i] for i in idxs])
+                     for _, _, idxs in self.groups]
+
+    def _shard_values(self, be, v: SecretSharedDB, sh):
+        """Cloud step on one shard: per group ``(local job idxs, local
+        bits, contains job idxs, contains window counts)`` — local bits are
+        complete on this shard; window counts still need the cross-shard
+        reduction."""
+        out = []
+        for (kind, k, idxs), pats in zip(self.groups, self.pats):
+            cols = _stack_columns(v, [self.jobs[i].column for i in idxs])
+            if kind == "full":
+                out.append((idxs, _batched_matcher(be)(
+                    cols.values, pats.values), [], None))
+                continue
+            if kind == "prefix":
+                out.append((idxs, _batched_matcher(be)(
+                    cols.values[..., :k, :], pats.values), [], None))
+                continue
+            win = _slide_matcher(be)(cols.values, pats.values)  # (c,Bg,ns,M)
+            if self.w - k + 1 == 1:
+                # one window: the chain product IS the bit, either kind
+                out.append((idxs, win[..., 0], [], None))
+                continue
+            suf = [b for b, i in enumerate(idxs)
+                   if self.jobs[i].spec.kind == "suffix"]
+            con = [b for b, i in enumerate(idxs)
+                   if self.jobs[i].spec.kind == "contains"]
+            bits = None
+            if suf:
+                # suffix ⟺ some window matches AND everything after it is
+                # terminator padding. Windows are mutually exclusive (a
+                # real pattern char never matches the terminator), so the
+                # linear sum of window·terminator products is the exact
+                # 0/1 bit.
+                term = cols.values[:, suf][..., k:, 0]   # (c,Bs,ns,M-1)
+                ones = jnp.ones(term.shape[:-1] + (1,), field.DTYPE)
+                bits = field.sum_(
+                    field.mul(win[:, suf],
+                              jnp.concatenate([term, ones], axis=-1)),
+                    axis=-1)
+            p_cnt = field.sum_(win[:, con], axis=-1) if con else None
+            out.append(([idxs[b] for b in suf], bits,
+                        [idxs[b] for b in con], p_cnt))
+        return out
+
+    def _local_degree(self, kind: str, k: int) -> int:
+        t2 = self.db.relation.degree + self.db.base_degree
+        if kind == "full":
+            return t2 * self.w
+        if kind == "prefix" or self.w - k + 1 == 1:
+            return t2 * k
+        return t2 * k + self.db.relation.degree      # suffix, M > 1
+
+    def bit_shares(self, be, plane) -> List[Tuple[List[int], Shares]]:
+        """Every job's per-tuple match bits: ``[(job idxs, Shares
+        (c, Bg, n))]``, bits concatenated across shards. One dataplane
+        dispatch wave serves all groups; CONTAINS window counts reassemble
+        across shards, reduce ONCE per group (the explicit re-share round,
+        mirroring the range engine's carry reduction) and finish with the
+        share-local zero test."""
+        shard_outs = plane.run_list(
+            lambda v, sh: self._shard_values(be, v, sh))
+
+        def cat(gi, slot):
+            parts = [so[gi][slot] for so in shard_outs]
+            return parts[0] if len(parts) == 1 else jnp.concatenate(
+                parts, axis=2)
+
+        t2 = self.db.relation.degree + self.db.base_degree
+        result: List[Tuple[List[int], Shares]] = []
+        for gi, (kind, k, _) in enumerate(self.groups):
+            local_idx = shard_outs[0][gi][0]
+            con_idx = shard_outs[0][gi][2]
+            if local_idx:
+                result.append((local_idx, Shares(
+                    cat(gi, 1), self._local_degree(kind, k))))
+            if con_idx:
+                m = self.w - k + 1
+                red_key = jax.random.fold_in(self.jobs[con_idx[0]].key, 1)
+                p_red = shamir.reduce_degree(
+                    red_key, Shares(cat(gi, 3), t2 * k), target_degree=1)
+                z = automata.zero_indicator(p_red.values, m)
+                result.append((con_idx, Shares(
+                    field.sub(jnp.ones_like(z), z), m)))
+        return result
 
 
 def _stack_columns(db: SecretSharedDB, columns: Sequence[int]) -> Shares:
@@ -320,6 +556,30 @@ def _block_sums(be, plane: "dataplane.ShardedRelation", p_all: Shares,
     return Shares(plane.run_sum(one), (rel_degree + p_all.degree) * w)
 
 
+def _block_sums_cached(cached: Dict[int, Shares],
+                       entries: Sequence[Tuple[int, int, int]],
+                       *, address_weights: bool = False) -> List[Shares]:
+    """Tree Q&A block sums over PRE-COMPUTED per-tuple match bits.
+
+    Pattern jobs run their window match (and the CONTAINS re-share) once in
+    the tree prelude and cache the per-tuple bit vector; every later Q&A
+    round only sums cached bits over the public block partition — a
+    cloud-local linear step charged at one element per tuple instead of a
+    fresh W·A automata pass. Plain block-count sums, or line-number sums
+    weighted by ``global index + 1`` under ``address_weights`` (the cached
+    mirror of :func:`_block_sums`; returns one scalar Shares per entry so
+    mixed-degree jobs fuse per degree class at interpolation)."""
+    out: List[Shares] = []
+    for (i, s, e) in entries:
+        vec = cached[i]                                    # (c, n)
+        seg = vec.values[:, s:e]
+        if address_weights:
+            wgt = jnp.arange(s + 1, e + 1, dtype=field.DTYPE)
+            seg = field.mul(seg, wgt[None])
+        out.append(Shares(field.sum_(seg, axis=1), vec.degree))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # §3.1 — batched count phase (Algorithm 2)
 # ---------------------------------------------------------------------------
@@ -333,23 +593,46 @@ def count_phase(be, db: RelationLike, jobs: Sequence[MatchJob]
     plane = dataplane.as_dataplane(db)
     db = plane.db
     codec = db.codec
-    columns = [j.column for j in jobs]
-    p_all = _share_patterns(db, jobs)
-    w = db.relation.values.shape[-2]
-    deg = (db.relation.degree + p_all.degree) * w
-    counts = Shares(plane.run_sum(
-        lambda v, sh: field.sum_(_batched_matcher(be)(
-            _stack_columns(v, columns).values, p_all.values), axis=2)),
-        deg)                                                   # (c, B)
-    out = np.asarray(shamir.interpolate(counts))
-    per_q = codec.word_length * codec.alphabet_size
-    for j in jobs:
-        j.ledger.round()
-        j.ledger.send(db.n_shares * per_q)
-        j.ledger.cloud(db.n_tuples * per_q)
+    if not _needs_pattern_engine(jobs):
+        # exact + masked only: the classic single-group fast path (one
+        # additive-reduce dispatch set, partial sums combine in F_p)
+        columns = [j.column for j in jobs]
+        p_all = _share_patterns(db, jobs)
+        w = db.relation.values.shape[-2]
+        deg = (db.relation.degree + p_all.degree) * w
+        counts = Shares(plane.run_sum(
+            lambda v, sh: field.sum_(_batched_matcher(be)(
+                _stack_columns(v, columns).values, p_all.values), axis=2)),
+            deg)                                               # (c, B)
+        out = np.asarray(shamir.interpolate(counts))
+        per_q = codec.word_length * codec.alphabet_size
+        for j in jobs:
+            j.ledger.round()
+            j.ledger.send(db.n_shares * per_q)
+            j.ledger.cloud(db.n_tuples * per_q)
+            j.ledger.recv(db.n_shares)
+            j.ledger.user(counts.degree + 1)
+        return [int(v) for v in out]
+
+    # mixed / pattern batch: per-group fused match bits, summed and
+    # interpolated in one fused user pass per degree class
+    mp = _MatcherPlan(db, jobs)
+    parts = mp.bit_shares(be, plane)
+    sums = [Shares(field.sum_(sh.values, axis=2), sh.degree)
+            for _, sh in parts]
+    vals = _fused_interpolate(sums)
+    out = [0] * len(jobs)
+    deg_of: Dict[int, int] = {}
+    for (idxs, sh), v in zip(parts, vals):
+        for b, i in enumerate(idxs):
+            out[i] = int(v[b])
+            deg_of[i] = sh.degree
+    for i, j in enumerate(jobs):
+        cost = _charge_match_phase(db, j)
+        assert cost["degree"] == deg_of[i], (cost["degree"], deg_of[i])
         j.ledger.recv(db.n_shares)
-        j.ledger.user(counts.degree + 1)
-    return [int(v) for v in out]
+        j.ledger.user(cost["degree"] + 1)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -361,6 +644,10 @@ def one_tuple_round(be, db: RelationLike, jobs: Sequence[MatchJob]
     """Fetch the single satisfying tuple for B (ℓ=1-verified) predicates."""
     if not jobs:
         return []
+    if _needs_pattern_engine(jobs):
+        raise ValueError(
+            "one_tuple is the §3.2.1 exact-equality special case; "
+            "prefix/suffix/substring selects run one_round or tree")
     plane = dataplane.as_dataplane(db)
     db = plane.db
     codec = db.codec
@@ -405,22 +692,44 @@ def match_all_round(be, db: RelationLike, jobs: Sequence[MatchJob]
     plane = dataplane.as_dataplane(db)
     db = plane.db
     codec = db.codec
-    columns = [j.column for j in jobs]
-    p_all = _share_patterns(db, jobs)
-    w = db.relation.values.shape[-2]
-    bits = Shares(plane.run_concat(
-        lambda v, sh: _batched_matcher(be)(
-            _stack_columns(v, columns).values, p_all.values), axis=2),
-        (db.relation.degree + p_all.degree) * w)               # (c, B, n)
-    v = np.asarray(shamir.interpolate(bits))                   # (B, n)
-    per_q = codec.word_length * codec.alphabet_size
-    for j in jobs:
-        j.ledger.round()
-        j.ledger.send(db.n_shares * per_q)
-        j.ledger.cloud(db.n_tuples * per_q)
-        j.ledger.recv(db.n_shares * db.n_tuples)
-        j.ledger.user((bits.degree + 1) * db.n_tuples)
-    return [[int(i) for i in np.nonzero(v[b])[0]] for b in range(len(jobs))]
+    if not _needs_pattern_engine(jobs):
+        columns = [j.column for j in jobs]
+        p_all = _share_patterns(db, jobs)
+        w = db.relation.values.shape[-2]
+        bits = Shares(plane.run_concat(
+            lambda v, sh: _batched_matcher(be)(
+                _stack_columns(v, columns).values, p_all.values), axis=2),
+            (db.relation.degree + p_all.degree) * w)           # (c, B, n)
+        v = np.asarray(shamir.interpolate(bits))               # (B, n)
+        per_q = codec.word_length * codec.alphabet_size
+        for j in jobs:
+            j.ledger.round()
+            j.ledger.send(db.n_shares * per_q)
+            j.ledger.cloud(db.n_tuples * per_q)
+            j.ledger.recv(db.n_shares * db.n_tuples)
+            j.ledger.user((bits.degree + 1) * db.n_tuples)
+        return [[int(i) for i in np.nonzero(v[b])[0]]
+                for b in range(len(jobs))]
+
+    # mixed / pattern batch: grouped dispatches, one fused interpolation
+    # pass per degree class — pattern selects then ride the same
+    # cross-group fetch_fusion matmul as everything else
+    mp = _MatcherPlan(db, jobs)
+    parts = mp.bit_shares(be, plane)
+    vals = _fused_interpolate([sh for _, sh in parts])
+    out: List[List[int]] = [[] for _ in jobs]
+    deg_of: Dict[int, int] = {}
+    for (idxs, sh), v in zip(parts, vals):
+        for b, i in enumerate(idxs):
+            out[i] = [int(t) for t in np.nonzero(v[b])[0]]
+            deg_of[i] = sh.degree
+    n = db.n_tuples
+    for i, j in enumerate(jobs):
+        cost = _charge_match_phase(db, j)
+        assert cost["degree"] == deg_of[i], (cost["degree"], deg_of[i])
+        j.ledger.recv(db.n_shares * n)
+        j.ledger.user((cost["degree"] + 1) * n)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -453,10 +762,39 @@ def tree_rounds(be, db: RelationLike, jobs: Sequence[TreeJob]
     codec = db.codec
     per_q = codec.word_length * codec.alphabet_size
     n = db.n_tuples
-    columns = [j.column for j in jobs]
-    p_all = _share_patterns(db, jobs)
-    for j in jobs:
-        j.ledger.send(db.n_shares * per_q)
+
+    # -- prelude: split exact/masked jobs (full-width chain, recomputed
+    # per Q&A block) from tile-pattern jobs (window match + CONTAINS
+    # re-share run ONCE, per-tuple bits cached for every later round) ----
+    pat_pos = [i for i, j in enumerate(jobs)
+               if getattr(j, "spec", None) is not None
+               and j.spec.kind in ("prefix", "suffix", "contains")]
+    exact_pos = [i for i in range(len(jobs)) if i not in set(pat_pos)]
+    exact_slot = {i: s for s, i in enumerate(exact_pos)}
+    columns = [jobs[i].column for i in exact_pos]
+    p_all = (_share_patterns(db, [jobs[i] for i in exact_pos])
+             if exact_pos else None)
+    cached: Dict[int, Shares] = {}
+    if pat_pos:
+        mp = _MatcherPlan(db, [jobs[i] for i in pat_pos])
+        for idxs, sh in mp.bit_shares(be, plane):
+            for b, local in enumerate(idxs):
+                cached[pat_pos[local]] = Shares(sh.values[:, b], sh.degree)
+    for i, j in enumerate(jobs):
+        cost = match_phase_cost(getattr(j, "spec", None), n=n,
+                                c=db.n_shares, w=codec.word_length,
+                                a=codec.alphabet_size,
+                                col_degree=db.relation.degree,
+                                pat_degree=db.base_degree)
+        j.ledger.send(cost["send"])
+        if i in cached:
+            # the one-off window match (amortized into the first Q&A
+            # round's dispatch) and the explicit CONTAINS re-share round
+            j.ledger.cloud(cost["cloud"])
+            if cost["reduce_rounds"]:
+                j.ledger.round(cost["reduce_rounds"])
+                j.ledger.send(cost["reduce_send"])
+                j.ledger.cloud(cost["reduce_cloud"])
 
     addresses: List[List[int]] = [[] for _ in jobs]
     active: List[List[Tuple[int, int]]] = []
@@ -491,17 +829,19 @@ def tree_rounds(be, db: RelationLike, jobs: Sequence[TreeJob]
 
         # -- count Q&A round: ONE dispatch set + ONE interpolation ----------
         if entries:
-            counts = _block_sums(be, plane, p_all, columns, entries)
-            vals = np.asarray(shamir.interpolate(counts))      # (K,)
+            vals_by_entry, deg_by_job = _tree_block_round(
+                be, plane, p_all, columns, exact_slot, cached, entries)
             n_blocks: dict = {}
             for (i, s, e) in entries:
-                jobs[i].ledger.cloud((e - s) * per_q)
+                jobs[i].ledger.cloud(
+                    (e - s) * (per_q if i in exact_slot else 1))
                 n_blocks[i] = n_blocks.get(i, 0) + 1
             for i, k_i in n_blocks.items():
                 jobs[i].ledger.round()
                 jobs[i].ledger.recv(db.n_shares * k_i)
-                jobs[i].ledger.user((counts.degree + 1) * k_i)
-            for (i, s, e), v in zip(entries, (int(x) for x in vals)):
+                jobs[i].ledger.user((deg_by_job[i] + 1) * k_i)
+            for (i, s, e) in entries:
+                v = vals_by_entry[(i, s, e)]
                 if v == 0:                     # Case 1: dead block
                     continue
                 if v == 1:                     # Case 2: Address_fetch
@@ -514,19 +854,57 @@ def tree_rounds(be, db: RelationLike, jobs: Sequence[TreeJob]
         # -- address-fetch round: ONE dispatch set + ONE interpolation ------
         if pending_addr:
             addr_entries, pending_addr = pending_addr, []
-            line = _block_sums(be, plane, p_all, columns, addr_entries,
-                               address_weights=True)           # (c, K)
-            vals = np.asarray(shamir.interpolate(line))
-            for (i, s, e), v in zip(addr_entries, vals):
-                jobs[i].ledger.cloud((e - s) * per_q)
+            vals_by_entry, deg_by_job = _tree_block_round(
+                be, plane, p_all, columns, exact_slot, cached, addr_entries,
+                address_weights=True)
+            for (i, s, e) in addr_entries:
+                jobs[i].ledger.cloud(
+                    (e - s) * (per_q if i in exact_slot else 1))
                 jobs[i].ledger.recv(db.n_shares)
-                jobs[i].ledger.user(line.degree + 1)
-                addresses[i].append(int(v) - 1)
+                jobs[i].ledger.user(deg_by_job[i] + 1)
+                addresses[i].append(vals_by_entry[(i, s, e)] - 1)
                 if i in one_shot:
                     jobs[i].ledger.round()
                     one_shot.discard(i)
 
     return [sorted(a) for a in addresses]
+
+
+def _tree_block_round(be, plane, p_all, columns, exact_slot, cached,
+                      entries, *, address_weights: bool = False
+                      ) -> Tuple[Dict[Tuple[int, int, int], int],
+                                 Dict[int, int]]:
+    """One fused tree Q&A round over mixed exact + cached-pattern entries.
+
+    Exact/masked entries recompute their block match through the classic
+    shard-aligned :func:`_block_sums` dispatch; pattern entries sum their
+    cached per-tuple bits (:func:`_block_sums_cached`). All results
+    interpolate in one fused user pass per degree class. Returns the opened
+    value per (job, start, end) entry and each job's bit degree (for the
+    caller's user-step charge)."""
+    ex_meta = [t for t in entries if t[0] in exact_slot]
+    pat_meta = [t for t in entries if t[0] not in exact_slot]
+    parts: List[Shares] = []
+    if ex_meta:
+        parts.append(_block_sums(
+            be, plane, p_all, columns,
+            [(exact_slot[i], s, e) for (i, s, e) in ex_meta],
+            address_weights=address_weights))
+    parts += _block_sums_cached(cached, pat_meta,
+                                address_weights=address_weights)
+    vals = _fused_interpolate(parts)
+    vals_by_entry: Dict[Tuple[int, int, int], int] = {}
+    deg_by_job: Dict[int, int] = {}
+    vi = 0
+    if ex_meta:
+        for t, x in zip(ex_meta, np.asarray(vals[0])):
+            vals_by_entry[t] = int(x)
+            deg_by_job[t[0]] = parts[0].degree
+        vi = 1
+    for t, x, p in zip(pat_meta, vals[vi:], parts[vi:]):
+        vals_by_entry[t] = int(x)
+        deg_by_job[t[0]] = p.degree
+    return vals_by_entry, deg_by_job
 
 
 # ---------------------------------------------------------------------------
@@ -826,7 +1204,10 @@ def join_match_round(be, db: RelationLike, jobs: Sequence[JoinJob]
     into ONE ``(c, B, nx, ny)`` ``match_matrix_batch`` dispatch per shard —
     mirroring ``aa_match_batch`` for predicates — instead of one
     ``match_matrix`` dispatch per job. Left columns slice per tuple-axis
-    shard and the match rows concatenate back along nx.
+    shard and the match rows concatenate back along nx. A job's
+    ``match_method`` joins the group key (chain / aggregate members never
+    mix in one dispatch); ledger charges are method-independent — the
+    dot-set volume nx·ny·W·A is the protocol cost either way.
     """
     if not jobs:
         return []
@@ -834,13 +1215,17 @@ def join_match_round(be, db: RelationLike, jobs: Sequence[JoinJob]
     db = plane.db
     codec = db.codec
     w_len, a_len = codec.word_length, codec.alphabet_size
-    matcher = _batched_match_matrix(be)
     entries: List[Optional[FetchEntry]] = [None] * len(jobs)
     groups: Dict[tuple, List[Tuple[int, Shares]]] = {}
     for i, j in enumerate(jobs):
+        if j.match_method not in ("chain", "aggregate"):
+            raise ValueError(f"unknown match_method: {j.match_method!r}")
         by = j.right.column(j.col_y)
-        groups.setdefault((by.values.shape, by.degree), []).append((i, by))
-    for (_, by_deg), members in groups.items():
+        groups.setdefault((by.values.shape, by.degree, j.match_method),
+                          []).append((i, by))
+    for (_, by_deg, method), members in groups.items():
+        matcher = (_aggregate_matcher(be) if method == "aggregate"
+                   else _batched_match_matrix(be))
         idxs = [i for i, _ in members]
         by_stack = jnp.stack([by.values for _, by in members],
                              axis=1)                    # (c, B, ny, W, A)

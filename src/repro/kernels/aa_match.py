@@ -110,5 +110,74 @@ def aa_match_batch_pallas(col: jax.Array, pat: jax.Array, *, bn: int = 512,
     return out[:, :n]
 
 
+def _slide_body(col, pat, m):
+    """The fused sliding-window automaton: col (bn, W, A), pat (k, A) ->
+    (bn, M) raw window-chain products, M = W−k+1.
+
+    Pattern row j contributes one (bn, M) inner-product plane — its one-hot
+    dotted against column positions j..j+M−1 — and the k planes chain by
+    modular multiplication. Each column tile is read once; only (bn, M)
+    results are written (the same fusion win as :func:`_aa_body`, per
+    window)."""
+    k = pat.shape[0]
+
+    def inner(j):
+        sl = jax.lax.dynamic_slice_in_dim(col, j, m, axis=1)    # (bn, M, A)
+        pj = jax.lax.dynamic_slice_in_dim(pat, j, 1, axis=0)    # (1, A)
+        prod = _mulmod(sl, pj[None, :, :])                      # (bn, M, A)
+        # modular tree-reduce over the alphabet axis
+        def red(t, acc):
+            return _addmod(acc, prod[:, :, t])
+        return jax.lax.fori_loop(1, prod.shape[2], red, prod[:, :, 0])
+
+    acc = inner(0)
+    def chain(j, acc):
+        return _mulmod(acc, inner(j))
+    return jax.lax.fori_loop(1, k, chain, acc)
+
+
+def _slide_batch_kernel(col_ref, pat_ref, o_ref, *, m):
+    # one (b, i) grid cell: batch row b's pattern tile against its i-th
+    # n-tile, all M windows at once
+    o_ref[0] = _slide_body(col_ref[0], pat_ref[0], m)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def aa_slide_batch_pallas(col: jax.Array, pat: jax.Array, *, bn: int = 512,
+                          interpret: bool = True) -> jax.Array:
+    """Stacked sliding-window AA match as a 2-D grid kernel.
+
+    col: (B, n, W, A) uint32 shares; pat: (B, k, A) pattern tiles.
+    Returns (B, n, M) raw window-chain products, M = W−k+1.
+
+    Same grid/VMEM layout as :func:`aa_match_batch_pallas`: (B, n-tiles)
+    with the tile axis innermost so row b's (k, A) pattern tile stays
+    resident in VMEM while its n-tiles stream through. The suffix
+    terminator factor and the CONTAINS window count are linear
+    post-processing outside the kernel, so one launch serves a whole
+    suffix+substring group of the same k.
+    """
+    b, n, w, a = col.shape
+    k = pat.shape[-2]
+    assert pat.shape == (b, k, a), (pat.shape, (b, k, a))
+    assert 1 <= k <= w, (k, w)
+    m = w - k + 1
+    bn = min(bn, _round_up(n, 8))
+    n_pad = _round_up(n, bn)
+    col_p = jnp.pad(col, ((0, 0), (0, n_pad - n), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_slide_batch_kernel, m=m),
+        grid=(b, n_pad // bn),
+        in_specs=[
+            pl.BlockSpec((1, bn, w, a), lambda bi, i: (bi, i, 0, 0)),
+            pl.BlockSpec((1, k, a), lambda bi, i: (bi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bn, m), lambda bi, i: (bi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_pad, m), jnp.uint32),
+        interpret=interpret,
+    )(col_p, pat)
+    return out[:, :n]
+
+
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult

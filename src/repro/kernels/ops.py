@@ -12,7 +12,8 @@ import warnings
 import jax
 import jax.numpy as jnp
 
-from .aa_match import aa_match_batch_pallas, aa_match_pallas
+from .aa_match import (aa_match_batch_pallas, aa_match_pallas,
+                       aa_slide_batch_pallas)
 from .ripple import ripple_carry_pallas, ripple_segment_pallas
 from .ss_matmul import (is_tall_skinny, share_onehot_pallas, ss_matmul_pallas,
                         ss_matmul_tall_pallas)
@@ -119,6 +120,47 @@ def aa_match_batch(col: jax.Array, pat: jax.Array) -> jax.Array:
     return aa_match_batch_vmap(col, pat)
 
 
+@jax.jit
+def _aa_slide_batch_grid(cols: jax.Array, pats: jax.Array) -> jax.Array:
+    c, b, n, w, a = cols.shape
+    k = pats.shape[-2]
+    out = aa_slide_batch_pallas(cols.reshape(c * b, n, w, a),
+                                pats.reshape(c * b, k, a),
+                                interpret=_interpret())
+    return out.reshape(c, b, n, w - k + 1)
+
+
+_SLIDE_KERNEL_BROKEN = False
+
+
+def aa_slide_batch(cols: jax.Array, pats: jax.Array) -> jax.Array:
+    """Stacked sliding-window AA match: cols (c, B, n, W, A), pats
+    (c, B, k, A) -> (c, B, n, M) raw window-chain products, M = W−k+1.
+    Cloud and batch axes fold into one (c·B, n-tile) 2-D grid
+    ``pallas_call`` reusing the ``aa_match_batch`` VMEM pattern-tile
+    layout. On lowering failure the jnp reference program takes over for
+    the rest of the process (same latch protocol as ``aa_match_batch``)."""
+    global _SLIDE_KERNEL_BROKEN
+    if cols.ndim != 5 or pats.ndim != 4:
+        raise ValueError(f"unsupported ranks: {cols.shape}, {pats.shape}")
+    c, b, _, w, a = cols.shape
+    k = pats.shape[-2]
+    if (pats.shape[0], pats.shape[1], pats.shape[3]) != (c, b, a) \
+            or not 1 <= k <= w:  # caller bugs must propagate, not latch
+        raise ValueError(f"pattern tile shape {pats.shape} does not match "
+                         f"column stack {cols.shape}")
+    if not _SLIDE_KERNEL_BROKEN:
+        try:
+            return _aa_slide_batch_grid(cols, pats)
+        except Exception as e:   # pragma: no cover — exotic backends only
+            _SLIDE_KERNEL_BROKEN = True
+            warnings.warn(f"aa_slide_batch 2-D grid kernel failed to build "
+                          f"({e!r}); using the jnp reference for the rest "
+                          f"of this process", RuntimeWarning)
+    from ..api.backends import jnp_aa_slide   # reference fallback
+    return jnp_aa_slide(cols, pats)
+
+
 def ripple_carry(a: jax.Array, b: jax.Array, carry=None):
     """One fused SS-SUB bit step (Alg 6) over any share-plane shape.
 
@@ -197,4 +239,5 @@ def as_backend():
                    ripple_carry=ripple_carry,
                    ripple_segment=ripple_segment,
                    match_matrix_batch=match_matrix_batch,
+                   aa_slide_batch=aa_slide_batch,
                    share_onehot=share_onehot)

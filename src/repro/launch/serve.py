@@ -80,6 +80,7 @@ import numpy as np
 
 from ..api import (DEFAULT_RELATION, MapReduceExecutor, Plan, QueryClient,
                    QueryResult)
+from ..api.plans import PATTERN_PREDICATES
 from ..core.dataplane import (Dispatcher, ShardedRelation,
                               ThreadedDispatcher)
 from ..core.engine import SecretSharedDB
@@ -202,12 +203,19 @@ MIN_PARK_S = 1e-3
 
 def plan_family(plan: Plan) -> str:
     """Telemetry bucket for a logical plan (count/select/range_*/join/
-    aggregate/embed)."""
+    aggregate/embed; Count/Select under a LIKE/prefix/suffix/substring
+    predicate bucket as pattern_count/pattern_select — the pattern engine
+    shares the families' fused rounds, but an operator watching
+    served_by_family wants to see the matcher mix)."""
     name = type(plan).__name__
-    return {"Count": "count", "Select": "select",
+    base = {"Count": "count", "Select": "select",
             "RangeCount": "range_count", "RangeSelect": "range_select",
             "Join": "join", "Aggregate": "aggregate",
             "EmbedLookup": "embed"}.get(name, name.lower())
+    if base in ("count", "select") and isinstance(
+            getattr(plan, "where", None), PATTERN_PREDICATES):
+        return f"pattern_{base}"
+    return base
 
 
 def _quantile(xs, q: float) -> float:

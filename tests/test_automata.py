@@ -1,0 +1,154 @@
+"""Direct unit coverage for ``repro.core.automata`` (§3.1 AA matching).
+
+The seed grew this module behind the query suite without its own tests;
+these pin the primitive contracts the pattern engine now builds on:
+count_column vs the cleartext count, match_words degree bookkeeping, the
+Lagrange equality/zero indicators at their domain boundaries, and the
+sliding-window trio (slide_windows / match_suffix / window_count) against
+character-level oracles. Field arithmetic is exact — no tolerances.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Codec, automata, encoding, field, outsource, shamir
+
+CODEC = Codec(word_length=8)
+WORDS = ["banana", "bandana", "an", "nab", "ban", "anna", "", "cabana"]
+N_SHARES = 20
+
+
+@pytest.fixture(scope="module")
+def db():
+    return outsource(jax.random.PRNGKey(0), [[w] for w in WORDS],
+                     codec=CODEC, n_shares=N_SHARES)
+
+
+def _col(db):
+    return shamir.Shares(db.relation.values[:, :, 0], db.relation.degree)
+
+
+def _pattern(word: str, seed: int = 1):
+    return encoding.share_pattern(jax.random.PRNGKey(seed), CODEC, word,
+                                  n_shares=N_SHARES, degree=1)
+
+
+def _tile(spec: encoding.PatternSpec, seed: int = 2):
+    return encoding.share_encoded(
+        jax.random.PRNGKey(seed), encoding.encode_pattern_tile(CODEC, spec),
+        n_shares=N_SHARES, degree=1)
+
+
+def _open(sh: shamir.Shares) -> np.ndarray:
+    return np.asarray(shamir.interpolate(sh))
+
+
+# ---------------------------------------------------------------------------
+# exact-word chain: count_column / match_words
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("word,count", [("banana", 1), ("an", 1),
+                                        ("", 1), ("xyz", 0)])
+def test_count_column_matches_cleartext(db, word, count):
+    got = int(_open(automata.count_column(_col(db), _pattern(word))))
+    assert got == count
+
+
+def test_match_words_bits_and_degree(db):
+    col = _col(db)
+    pat = _pattern("ban")
+    out = automata.match_words(col, pat)
+    # degree accumulates one (t_col + t_pat) factor per chained position
+    assert out.degree == (col.degree + pat.degree) * CODEC.word_length
+    bits = _open(out)
+    assert bits.tolist() == [1 if w == "ban" else 0 for w in WORDS]
+
+
+def test_match_words_needs_enough_shares_to_open(db):
+    # the bookkeeping above is what tells the user-side interpolator how
+    # many shares it needs: degree+1 points reconstruct, degree points don't
+    out = automata.match_words(_col(db), _pattern("ban"))
+    assert N_SHARES >= out.degree + 1
+    short = shamir.Shares(out.values[:out.degree], out.degree)
+    with pytest.raises(ValueError):
+        shamir.interpolate(short)
+
+
+# ---------------------------------------------------------------------------
+# Lagrange indicators at the domain boundary
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w", [1, 2, 5, CODEC.word_length])
+def test_equality_indicator_boundary(w):
+    dom = jnp.arange(w + 1, dtype=field.DTYPE)
+    got = np.asarray(automata.equality_indicator(dom, w))
+    assert got.tolist() == [0] * w + [1]
+
+
+@pytest.mark.parametrize("m", [1, 3, CODEC.word_length])
+def test_zero_indicator_boundary(m):
+    dom = jnp.arange(m + 1, dtype=field.DTYPE)
+    got = np.asarray(automata.zero_indicator(dom, m))
+    assert got.tolist() == [1] + [0] * m
+
+
+# ---------------------------------------------------------------------------
+# sliding-window trio
+# ---------------------------------------------------------------------------
+
+def _windows_oracle(word: str, body: str):
+    padded = word + "\0" * CODEC.word_length
+    m = CODEC.word_length - len(body) + 1
+    return [1 if padded[o:o + len(body)] == body else 0 for o in range(m)]
+
+
+@pytest.mark.parametrize("body", ["an", "ana", "b", "cabana"])
+def test_slide_windows_oracle(db, body):
+    spec = encoding.PatternSpec("contains", body, (), f"%{body}%")
+    out = automata.slide_windows(_col(db), _tile(spec))
+    assert out.degree == (db.relation.degree + 1) * len(body)
+    got = _open(out)
+    want = np.asarray([_windows_oracle(w, body) for w in WORDS])
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("body", ["ana", "an", "a", "nab"])
+def test_match_suffix_oracle(db, body):
+    spec = encoding.PatternSpec("suffix", body, (), f"%{body}")
+    out = automata.match_suffix(_col(db), _tile(spec))
+    got = _open(out)
+    assert got.tolist() == [1 if w.endswith(body) else 0 for w in WORDS]
+
+
+def test_window_count_counts_overlaps(db):
+    # "banana" holds "ana" at offsets 1 and 3 — the raw window count is 2,
+    # which is exactly why CONTAINS needs the zero-test, not a linear sum
+    spec = encoding.PatternSpec("contains", "ana", (), "%ana%")
+    counts = _open(automata.window_count(_col(db), _tile(spec)))
+    want = [sum(_windows_oracle(w, "ana")) for w in WORDS]
+    assert counts.tolist() == want
+    assert counts[WORDS.index("banana")] == 2
+
+
+# ---------------------------------------------------------------------------
+# match_matrix: chain vs aggregate evaluation
+# ---------------------------------------------------------------------------
+
+def test_match_matrix_chain_vs_aggregate(db):
+    right = outsource(jax.random.PRNGKey(5),
+                      [["banana"], ["xyz"], ["an"]],
+                      codec=CODEC, n_shares=N_SHARES)
+    cx = _col(db)
+    cy = shamir.Shares(right.relation.values[:, :, 0],
+                       right.relation.degree)
+    chain = automata.match_matrix(cx, cy, method="chain")
+    agg = automata.match_matrix(cx, cy, method="aggregate")
+    assert chain.degree == agg.degree == \
+        (cx.degree + cy.degree) * CODEC.word_length
+    opened_chain = _open(chain)
+    assert np.array_equal(opened_chain, _open(agg))
+    want = np.asarray([[1 if w == r[0] else 0
+                        for r in [["banana"], ["xyz"], ["an"]]]
+                       for w in WORDS])
+    assert np.array_equal(opened_chain, want)

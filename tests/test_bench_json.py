@@ -58,6 +58,9 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
     real_agg = bq.bench_aggregation
     monkeypatch.setattr(
         bq, "bench_aggregation", lambda **kw: real_agg(n=16))
+    real_pattern = bq.bench_pattern
+    monkeypatch.setattr(
+        bq, "bench_pattern", lambda **kw: real_pattern(n=16, batch=4))
     real_embed = bq.bench_embedding
     monkeypatch.setattr(
         bq, "bench_embedding",
@@ -110,6 +113,16 @@ def test_bench_json_well_formed(bq, tmp_path, monkeypatch):
                 "ledger_equal"} <= set(row)
         assert row["ledger_equal"] is True
         assert row["verify_rounds"] >= 1 and row["verify_comm_bits"] > 0
+    # pattern engine sweep: every acceptance flag survives the real run
+    assert doc["pattern"]
+    pat_names = {row["name"] for row in doc["pattern"]}
+    assert {"pattern_count_contains", "pattern_select_one_round",
+            "pattern_like_eq_parity", "pattern_mixed_batch"} <= pat_names
+    for row in doc["pattern"]:
+        assert {"name", "n", "rounds", "comm_bits"} <= set(row)
+        assert row.get("explain_exact", True) is True
+        assert row.get("eq_parity", True) is True
+        assert row.get("ledger_equal", True) is True
     # embedding fast path: the acceptance shape survives the real sweep
     assert doc["embedding"]
     for row in doc["embedding"]:
@@ -361,6 +374,55 @@ def test_compare_bench_gates_aggregation_costs(cb, tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# pattern (LIKE/prefix/suffix/substring engine) section gating
+# ---------------------------------------------------------------------------
+
+def _pattern_doc():
+    doc = _aggregation_doc()
+    doc["pattern"] = [
+        {"name": "pattern_count_contains", "n": 16, "us_per_call": 10,
+         "rounds": 2, "comm_bits": 12000, "explain_exact": True},
+        {"name": "pattern_like_eq_parity", "n": 16, "rounds": 1,
+         "comm_bits": 6000, "eq_parity": True},
+        {"name": "pattern_mixed_batch", "n": 16, "batch": 4, "seq_us": 40,
+         "batch_us": 10, "speedup": 4.0, "rounds": 2, "comm_bits": 30000,
+         "ledger_equal": True},
+    ]
+    return doc
+
+
+def test_compare_bench_gates_pattern_costs(cb, tmp_path):
+    new = _write(tmp_path, "pt_new.json", _pattern_doc())
+    old = _write(tmp_path, "pt_old.json", _pattern_doc())
+    assert cb.main([new, old]) == 0
+    # cost increase in the pattern sweep is a regression
+    doc = _pattern_doc()
+    doc["pattern"][0]["comm_bits"] += 31
+    assert cb.main([_write(tmp_path, "pt_up.json", doc), old]) == 1
+    # a drifted cost model / broken LIKE==Eq parity / broken fusion all
+    # regress even when the baseline row agrees
+    for idx, flag in ((0, "explain_exact"), (1, "eq_parity"),
+                      (2, "ledger_equal")):
+        doc = _pattern_doc()
+        doc["pattern"][idx][flag] = False
+        old_doc = _pattern_doc()
+        old_doc["pattern"][idx][flag] = False
+        assert cb.main([_write(tmp_path, f"pt_{flag}.json", doc),
+                        _write(tmp_path, f"pt_{flag}_old.json",
+                               old_doc)]) == 1
+    # an OLD baseline without the section is not a "vanished config"
+    assert cb.main([new, _write(tmp_path, "pt_v1.json",
+                                _aggregation_doc())]) == 0
+    # the history entry carries the pattern costs too
+    hist = tmp_path / "pt_history.json"
+    assert cb.main([new, "--append-history", str(hist)]) == 0
+    h = json.loads(hist.read_text())
+    assert h["runs"][0]["pattern"]["pattern_count_contains/16"] == {
+        "rounds": 2, "comm_bits": 12000}
+    cb.validate_history(h)
+
+
+# ---------------------------------------------------------------------------
 # embedding (oblivious lookup fast path) section gating
 # ---------------------------------------------------------------------------
 
@@ -522,6 +584,15 @@ def test_plot_history_renders_embedding_section(ph, cb, tmp_path, capsys):
     assert ph.main([hist, "--section", "embedding"]) == 0
     out = capsys.readouterr().out
     assert "embed_s2/2/256" in out
+    assert "REGRESSED" not in out
+
+
+def test_plot_history_renders_pattern_section(ph, cb, tmp_path, capsys):
+    hist = _history(tmp_path, cb, [(_pattern_doc(), "pr-10"),
+                                   (_pattern_doc(), "pr-11")])
+    assert ph.main([hist, "--section", "pattern"]) == 0
+    out = capsys.readouterr().out
+    assert "pattern_count_contains/16" in out
     assert "REGRESSED" not in out
 
 
